@@ -1,0 +1,40 @@
+"""Paper Table 1: retrieval time of each algorithm vs number of trees
+(50 / 300 / 600), 5 entities per query."""
+from __future__ import annotations
+
+from .common import ALGOS, accuracy_proxy, build_retrievers, time_retrieval
+
+
+def run(tree_counts=(50, 300, 600), entities_per_query: int = 5,
+        num_queries: int = 20):
+    rows = []
+    for n in tree_counts:
+        corpus, forest, rets = build_retrievers(num_trees=n)
+        queries = [q[:entities_per_query] for q in
+                   corpus.query_entities[:num_queries]]
+        naive = rets["naive"]
+        for algo in ALGOS:
+            t = time_retrieval(rets[algo], queries)
+            acc = accuracy_proxy(forest, rets[algo], queries, naive)
+            rows.append({"trees": n, "algo": algo, "time_s": t,
+                         "acc": acc,
+                         "speedup_vs_naive": None})
+        base = next(r["time_s"] for r in rows
+                    if r["trees"] == n and r["algo"] == "naive")
+        for r in rows:
+            if r["trees"] == n:
+                r["speedup_vs_naive"] = base / r["time_s"]
+    return rows
+
+
+def main():
+    print("table1: retrieval time vs #trees (paper Table 1)")
+    print(f"{'trees':>6s} {'algo':>6s} {'time_s':>12s} {'speedup':>9s} "
+          f"{'acc':>6s}")
+    for r in run():
+        print(f"{r['trees']:6d} {r['algo']:>6s} {r['time_s']:12.6f} "
+              f"{r['speedup_vs_naive']:9.1f} {r['acc']:6.3f}")
+
+
+if __name__ == "__main__":
+    main()

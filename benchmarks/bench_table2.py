@@ -1,0 +1,43 @@
+"""Paper Table 2: retrieval time vs number of entities per query
+(5 / 10 / 20) at 600 trees."""
+from __future__ import annotations
+
+from .common import ALGOS, accuracy_proxy, build_retrievers, time_retrieval
+
+
+def run(entity_counts=(5, 10, 20), num_trees: int = 600,
+        num_queries: int = 12):
+    corpus, forest, rets = build_retrievers(num_trees=num_trees)
+    naive = rets["naive"]
+    rows = []
+    for k in entity_counts:
+        # queries with k entities each (resampled from the corpus vocab)
+        import random
+        rng = random.Random(k)
+        queries = [rng.sample(forest.entity_names, k)
+                   for _ in range(num_queries)]
+        for algo in ALGOS:
+            t = time_retrieval(rets[algo], queries)
+            acc = accuracy_proxy(forest, rets[algo], queries, naive)
+            rows.append({"entities": k, "algo": algo, "time_s": t,
+                         "acc": acc})
+        base = next(r["time_s"] for r in rows
+                    if r["entities"] == k and r["algo"] == "naive")
+        for r in rows:
+            if r["entities"] == k:
+                r["speedup_vs_naive"] = base / r["time_s"]
+    return rows
+
+
+def main():
+    print("table2: retrieval time vs #entities per query, 600 trees "
+          "(paper Table 2)")
+    print(f"{'ents':>5s} {'algo':>6s} {'time_s':>12s} {'speedup':>9s} "
+          f"{'acc':>6s}")
+    for r in run():
+        print(f"{r['entities']:5d} {r['algo']:>6s} {r['time_s']:12.6f} "
+              f"{r['speedup_vs_naive']:9.1f} {r['acc']:6.3f}")
+
+
+if __name__ == "__main__":
+    main()

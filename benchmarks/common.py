@@ -1,0 +1,50 @@
+"""Shared benchmark machinery: corpus builders, timed retrieval rounds."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Sequence
+
+from repro.core import (BloomTRAG, BloomTRAG2, CFTRAG, NaiveTRAG,
+                        build_forest, build_index)
+from repro.data import hospital_corpus
+
+ALGOS = ("naive", "bf", "bf2", "cf")
+
+
+def build_retrievers(num_trees: int, seed: int = 7, depth: int = 3,
+                     branching: int = 3):
+    corpus = hospital_corpus(num_trees=num_trees, depth=depth,
+                             branching=branching, num_queries=32, seed=seed)
+    forest = build_forest(corpus.trees)
+    index = build_index(forest, num_buckets=1024)
+    return corpus, forest, {
+        "naive": NaiveTRAG(forest),
+        "bf": BloomTRAG(forest),
+        "bf2": BloomTRAG2(forest),
+        "cf": CFTRAG(index, sort_every=1),
+    }
+
+
+def time_retrieval(retriever, queries: Sequence[Sequence[str]],
+                   repeats: int = 3) -> float:
+    """Mean seconds per full query set (paper times the retrieval phase)."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for ents in queries:
+            for e in ents:
+                retriever.locate(e)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def accuracy_proxy(forest, retriever, queries: Sequence[Sequence[str]],
+                   naive: NaiveTRAG) -> float:
+    """Retrieval-context exactness vs naive BFS (DESIGN.md §7)."""
+    total = correct = 0
+    for ents in queries:
+        for e in ents:
+            total += 1
+            if sorted(retriever.locate(e)) == sorted(naive.locate(e)):
+                correct += 1
+    return correct / max(total, 1)

@@ -1,0 +1,90 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus the human tables from
+each module's main()).  ``python -m benchmarks.run [--fast]``.
+"""
+from __future__ import annotations
+
+import sys
+
+from . import (bench_fig5, bench_filter, bench_kernels, bench_serving,
+               bench_table1, bench_table2)
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    csv = []
+
+    tree_counts = (50, 120) if fast else (50, 300, 600)
+    rows = bench_table1.run(tree_counts=tree_counts)
+    print("\n== Table 1: retrieval time vs #trees ==")
+    print(f"{'trees':>6s} {'algo':>6s} {'time_s':>12s} {'speedup':>9s} "
+          f"{'acc':>6s}")
+    for r in rows:
+        print(f"{r['trees']:6d} {r['algo']:>6s} {r['time_s']:12.6f} "
+              f"{r['speedup_vs_naive']:9.1f} {r['acc']:6.3f}")
+        csv.append((f"table1/trees{r['trees']}/{r['algo']}",
+                    r["time_s"] * 1e6, r["speedup_vs_naive"]))
+
+    ent_counts = (5, 10) if fast else (5, 10, 20)
+    rows = bench_table2.run(entity_counts=ent_counts,
+                            num_trees=120 if fast else 600)
+    print("\n== Table 2: retrieval time vs #entities per query ==")
+    print(f"{'ents':>5s} {'algo':>6s} {'time_s':>12s} {'speedup':>9s} "
+          f"{'acc':>6s}")
+    for r in rows:
+        print(f"{r['entities']:5d} {r['algo']:>6s} {r['time_s']:12.6f} "
+              f"{r['speedup_vs_naive']:9.1f} {r['acc']:6.3f}")
+        csv.append((f"table2/ents{r['entities']}/{r['algo']}",
+                    r["time_s"] * 1e6, r["speedup_vs_naive"]))
+
+    rows = bench_fig5.run(num_trees=60 if fast else 300,
+                          rounds=4 if fast else 8)
+    print("\n== Figure 5: temperature-sort ablation (per round) ==")
+    print(f"{'round':>6s} {'unsorted_probes':>16s} {'sorted_probes':>14s} "
+          f"{'gain':>6s}")
+    nr = 4 if fast else 8
+    for rnd in range(1, nr + 1):
+        u = next(r for r in rows if not r["sorted"] and r["round"] == rnd)
+        s = next(r for r in rows if r["sorted"] and r["round"] == rnd)
+        gain = u["probes"] / s["probes"]
+        print(f"{rnd:6d} {u['probes']:16d} {s['probes']:14d} {gain:6.2f}")
+        csv.append((f"fig5/round{rnd}/sorted", s["time_s"] * 1e6, gain))
+
+    er = bench_filter.error_rate(probes=20_000 if fast else 100_000)
+    print("\n== Filter: load factor / error rate ==")
+    for k, v in er.items():
+        print(f"  {k}: {v}")
+    csv.append(("filter/error_rate", 0.0, er["false_positive_rate"]))
+    csv.append(("filter/load_factor", 0.0, er["load_factor"]))
+
+    bv = bench_filter.batched_vs_sequential(num_trees=60 if fast else 300,
+                                            batch=256 if fast else 512)
+    print("\n== Batched device lookup vs sequential host loop ==")
+    for k, v in bv.items():
+        print(f"  {k}: {v}")
+    csv.append(("filter/batched_speedup", bv["vectorized_s"] * 1e6,
+                bv["speedup"]))
+
+    print("\n== Kernel microbenchmarks (vs jnp oracle) ==")
+    for name, work, derived in bench_kernels.run():
+        print(f"  {name:34s} work~{work:10.1f}  derived {derived:.3e}")
+        csv.append((f"kernels/{name}", work, derived))
+
+    if not fast:
+        rows = bench_serving.run()
+        ret = sum(r["retrieval_ms"] for r in rows) / len(rows)
+        gen = sum(r["generation_ms"] for r in rows) / len(rows)
+        print("\n== Serving: retrieval vs generation latency ==")
+        print(f"  mean retrieval {ret:.2f} ms, generation {gen:.1f} ms "
+              f"({100 * ret / (ret + gen):.2f}% of latency)")
+        csv.append(("serving/retrieval_fraction", ret * 1e3,
+                    ret / (ret + gen)))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.2f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end driver (the paper's kind: serving): CFT-RAG answering batched
+requests with a small LM generator — query -> NER -> cuckoo-filter retrieval
+-> context -> prompt -> prefill+decode.
+
+    PYTHONPATH=src python examples/rag_serving.py [--device-lookup]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.data import HashTokenizer, hospital_corpus
+from repro.models import init_params
+from repro.serving import RAGPipeline, Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--device-lookup", action="store_true",
+                    help="route retrieval through the Pallas cuckoo kernel")
+    ap.add_argument("--trees", type=int, default=150)
+    ap.add_argument("--queries", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = get_arch("paper-cftrag").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    corpus = hospital_corpus(num_trees=args.trees, num_queries=args.queries)
+    engine = ServeEngine(cfg, params, cache_size=256, batch_size=2)
+    rag = RAGPipeline(corpus, engine, tokenizer=HashTokenizer(cfg.vocab),
+                      use_device_lookup=args.device_lookup)
+
+    print(f"index: {rag.forest.num_entities} entities, filter load "
+          f"{rag.index.filter.load_factor:.4f}, "
+          f"device_lookup={args.device_lookup}\n")
+    for q in corpus.queries[: args.queries]:
+        t0 = time.perf_counter()
+        ans = rag.answer(q, max_new_tokens=8)
+        dt = time.perf_counter() - t0
+        print(f"Q: {q[:84]}...")
+        print(f"   entities: {ans.entities[:3]}{'...' if len(ans.entities) > 3 else ''}")
+        print(f"   context:  {ans.context.splitlines()[0][:84]}...")
+        print(f"   answer tokens: {ans.output_ids}  ({dt*1e3:.0f} ms)\n")
+
+    acc = rag.retrieval_accuracy(corpus.queries[: args.queries],
+                                 corpus.query_entities[: args.queries])
+    print(f"retrieval accuracy proxy vs naive BFS: {acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

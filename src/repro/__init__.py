@@ -1,0 +1,3 @@
+"""repro — CFT-RAG (cuckoo-filter Tree-RAG) as a multi-pod JAX framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,19 @@
+"""Architecture + shape registries (one module per assigned arch)."""
+from .base import (ARCH_REGISTRY, SHAPES, ModelConfig, ShapeConfig, all_archs,
+                   cells, get_arch, register)
+
+_LOADED = False
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (granite_moe_1b_a400m, llama4_maverick_400b_a17b,  # noqa: F401
+                   mistral_large_123b, paper, pixtral_12b, qwen2_0_5b,
+                   qwen2_5_14b, rwkv6_1_6b, whisper_base, yi_34b, zamba2_7b)
+
+
+__all__ = ["ARCH_REGISTRY", "SHAPES", "ModelConfig", "ShapeConfig",
+           "all_archs", "cells", "get_arch", "register"]

@@ -1,0 +1,20 @@
+"""granite-moe-1b-a400m — MoE 32 experts top-8, every layer
+[hf:ibm-granite/granite-3.0-1b-a400m-base]."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab=49155,
+    num_experts=32,
+    top_k=8,
+    moe_every=1,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+))

@@ -1,0 +1,28 @@
+"""llama4-maverick-400b-a17b — MoE 128 experts top-1 + shared expert,
+interleaved every 2nd layer (HF Llama-4 interleave_moe_layer_step=2), early
+fusion (vision patches prepended as tokens; frontend STUB)
+[hf:meta-llama/Llama-4-Maverick-17B-128E].
+
+Totals with the assigned dims: 24 MoE layers x 128 experts x 3 x 5120 x 8192
+= 386B routed + dense/attn/shared ~= 400B total, ~17B active (top-1)."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=202048,
+    num_experts=128,
+    top_k=1,
+    moe_every=2,
+    shared_expert=True,
+    rope_theta=500_000.0,
+    frontend="vit",
+    num_patches=0,              # early fusion supported; LM shapes text-only
+    frontend_dim=1408,
+))

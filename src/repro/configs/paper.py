@@ -1,0 +1,18 @@
+"""The paper's own generator setting: CFT-RAG serves a small dense LM
+(the paper is retrieval-side; any backbone works — see DESIGN.md §4).
+We pair it with the qwen2-0.5b-class dense config at RAG-serving shapes."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="paper-cftrag",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab=64000,
+    qkv_bias=True,
+    tie_embeddings=True,
+))

@@ -1,0 +1,20 @@
+"""pixtral-12b — VLM: pixtral-ViT frontend (STUB: precomputed patch
+embeddings via input_specs) + mistral-nemo text backbone
+[hf:mistralai/Pixtral-12B-2409]."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=131072,
+    rope_theta=1_000_000_000.0,
+    frontend="vit",
+    num_patches=256,            # one 1024px image @ 16px patches, pooled 4x
+    frontend_dim=1024,          # pixtral ViT width before projection
+))

@@ -1,0 +1,16 @@
+"""rwkv6-1.6b (Finch) — attention-free, data-dependent decay
+[arXiv:2404.05892].  Sub-quadratic -> runs long_500k."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="rwkv6-1.6b",
+    family="rwkv",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,                 # head size 64 (rwkv6 convention)
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab=65536,
+    sub_quadratic=True,
+))

@@ -1,0 +1,23 @@
+"""whisper-base — encoder-decoder, audio conv frontend STUB (input_specs
+provides precomputed frame embeddings) [arXiv:2212.04356].
+
+Decode shapes exercise the *decoder* with a 32k-token causal cache; the
+encoder consumes the stubbed 1500-frame audio embedding."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="whisper-base",
+    family="encdec",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,
+    enc_layers=6,
+    dec_layers=6,
+    frontend="audio",
+    num_patches=1500,           # 30 s of audio at 50 frames/s (stub frames)
+    frontend_dim=512,
+    rope_theta=10_000.0,        # (whisper uses learned pos; we use sinusoidal)
+))

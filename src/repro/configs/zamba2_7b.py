@@ -1,0 +1,24 @@
+"""zamba2-7b — hybrid: Mamba2 backbone + shared attention block
+[arXiv:2411.15242].  81 mamba2 blocks; one weight-shared GQA attention +
+MLP block applied every ``attn_every`` mamba blocks (Zamba2's shared-block
+design).  Sub-quadratic -> runs long_500k."""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="zamba2-7b",
+    family="mamba_hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab=32000,
+    rope_theta=10_000.0,
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    attn_every=6,
+    sub_quadratic=True,
+))

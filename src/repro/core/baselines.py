@@ -1,0 +1,164 @@
+"""Baseline retrievers from the paper's §4.1.
+
+* ``NaiveTRAG``     — BFS over every tree per query entity (no filtering).
+* ``BloomTRAG``     — a Bloom filter at every node summarizing its subtree's
+                      entity set; BFS prunes children whose filter says absent.
+* ``BloomTRAG2``    — improved: skip Bloom checks at nodes just above the
+                      leaf level (direct compare on leaf children instead).
+
+All three are host-side reference algorithms (the paper benchmarks them as
+CPU data structures); they share the EntityForest arrays with CFT-RAG so the
+comparison experiment (benchmarks/bench_table1.py) is apples-to-apples.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from . import hashing
+from .context import EntityContext, generate_context
+from .tree import EntityForest
+
+Location = Tuple[int, int]
+
+
+class NaiveTRAG:
+    """Paper baseline 1: full BFS from every root for each query entity."""
+
+    def __init__(self, forest: EntityForest):
+        self.forest = forest
+
+    def locate(self, name: str) -> List[Location]:
+        f = self.forest
+        target = f.name_to_id.get(name, -1)
+        out: List[Location] = []
+        for root in f.roots:
+            q = deque([int(root)])
+            while q:
+                g = q.popleft()
+                if int(f.entity_id[g]) == target:
+                    out.append((int(f.tree_id[g]), g))
+                lo, hi = f.child_offsets[g], f.child_offsets[g + 1]
+                q.extend(int(c) for c in f.child_index[lo:hi])
+        return out
+
+    def retrieve(self, names: Sequence[str], n: int = 3) -> List[EntityContext]:
+        return [generate_context(self.forest, self.forest.name_to_id.get(nm, -1),
+                                 self.locate(nm), n=n) for nm in names]
+
+
+class BloomTRAG:
+    """Paper baseline 2: per-node subtree Bloom filters prune the BFS."""
+
+    #: bits per node filter and number of hash probes
+    M_BITS = 256
+    K = 4
+
+    def __init__(self, forest: EntityForest, m_bits: int = M_BITS, k: int = K):
+        self.forest = forest
+        self.m_bits = m_bits
+        self.k = k
+        self._words = m_bits // 64
+        self._entity_hash = hashing.hash_entities(forest.entity_names)
+        self.bits = self._build()
+
+    # --------------------------------------------------------------- build
+    def _entity_mask(self, eid: int) -> np.ndarray:
+        """64-bit-word bitmask for one entity's k bloom positions."""
+        pos = hashing.bloom_bit_positions(self._entity_hash[eid],
+                                          self.m_bits, self.k)
+        mask = np.zeros(self._words, dtype=np.uint64)
+        for p in np.atleast_1d(pos):
+            mask[int(p) // 64] |= np.uint64(1) << np.uint64(int(p) % 64)
+        return mask
+
+    def _build(self) -> np.ndarray:
+        f = self.forest
+        n = f.num_nodes
+        bits = np.zeros((n, self._words), dtype=np.uint64)
+        # bottom-up: process nodes in reverse BFS order (children first)
+        order: List[int] = []
+        q = deque(int(r) for r in f.roots)
+        while q:
+            g = q.popleft()
+            order.append(g)
+            lo, hi = f.child_offsets[g], f.child_offsets[g + 1]
+            q.extend(int(c) for c in f.child_index[lo:hi])
+        for g in reversed(order):
+            bits[g] |= self._entity_mask(int(f.entity_id[g]))
+            lo, hi = f.child_offsets[g], f.child_offsets[g + 1]
+            for c in f.child_index[lo:hi]:
+                bits[g] |= bits[c]
+        return bits
+
+    # --------------------------------------------------------------- query
+    def _may_contain(self, node: int, mask: np.ndarray) -> bool:
+        return bool(np.all((self.bits[node] & mask) == mask))
+
+    def locate(self, name: str) -> List[Location]:
+        f = self.forest
+        target = f.name_to_id.get(name, -1)
+        if target < 0:
+            return []
+        mask = self._entity_mask(target)
+        out: List[Location] = []
+        for root in f.roots:
+            root = int(root)
+            if not self._may_contain(root, mask):
+                continue
+            q = deque([root])
+            while q:
+                g = q.popleft()
+                if int(f.entity_id[g]) == target:
+                    out.append((int(f.tree_id[g]), g))
+                lo, hi = f.child_offsets[g], f.child_offsets[g + 1]
+                for c in f.child_index[lo:hi]:
+                    if self._may_contain(int(c), mask):
+                        q.append(int(c))
+        return out
+
+    def retrieve(self, names: Sequence[str], n: int = 3) -> List[EntityContext]:
+        return [generate_context(self.forest, self.forest.name_to_id.get(nm, -1),
+                                 self.locate(nm), n=n) for nm in names]
+
+
+class BloomTRAG2(BloomTRAG):
+    """Paper baseline 3: as BloomTRAG, but nodes whose children are leaves
+    skip the children's Bloom checks — a direct entity compare on a leaf is
+    cheaper than a filter probe."""
+
+    def __init__(self, forest: EntityForest, m_bits: int = BloomTRAG.M_BITS,
+                 k: int = BloomTRAG.K):
+        super().__init__(forest, m_bits, k)
+        counts = np.diff(forest.child_offsets)
+        self._is_leaf = counts == 0
+
+    def locate(self, name: str) -> List[Location]:
+        f = self.forest
+        target = f.name_to_id.get(name, -1)
+        if target < 0:
+            return []
+        mask = self._entity_mask(target)
+        out: List[Location] = []
+        for root in f.roots:
+            root = int(root)
+            if not self._may_contain(root, mask):
+                continue
+            q = deque([root])
+            while q:
+                g = q.popleft()
+                if int(f.entity_id[g]) == target:
+                    out.append((int(f.tree_id[g]), g))
+                lo, hi = f.child_offsets[g], f.child_offsets[g + 1]
+                for c in f.child_index[lo:hi]:
+                    c = int(c)
+                    if self._is_leaf[c]:
+                        # skip the Bloom probe just above the leaf level:
+                        # compare directly, never enqueue (leaves end paths)
+                        if int(f.entity_id[c]) == target:
+                            out.append((int(f.tree_id[c]), c))
+                    elif self._may_contain(c, mask):
+                        q.append(c)
+        return out

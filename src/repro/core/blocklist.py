@@ -1,0 +1,109 @@
+"""Block linked list arena — the paper's per-entity address store.
+
+Every entity occurs at several (tree_id, node_id) locations in the forest.
+CFT-RAG stores these addresses in a *block linked list*: fixed-capacity blocks
+chained by `next` pointers, head pointer kept in the cuckoo bucket slot.
+
+TPU adaptation (see DESIGN.md §3): pointers become indices into flat arrays so
+the whole arena is a set of dense device tensors. Two layouts are provided:
+
+* ``BlockListArena`` — faithful: blocks of ``block_cap`` addresses + next
+  index, traversed with ``jax.lax.while_loop`` (or host-side generator).
+* ``CSRArena`` — beyond-paper optimized: per-entity contiguous spans
+  (offsets + counts), one dynamic slice per entity, no chain walk.
+
+Both store identical information; tests assert they enumerate the same
+address sets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+Address = Tuple[int, int]          # (tree_id, node_id)
+NULL = -1
+
+
+@dataclasses.dataclass
+class BlockListArena:
+    """Flat arena of fixed-size blocks. Host-built, device-ready arrays."""
+    block_cap: int
+    addrs: np.ndarray      # (num_blocks, block_cap, 2) int32, padded with NULL
+    counts: np.ndarray     # (num_blocks,) int32 — valid addrs in each block
+    next: np.ndarray       # (num_blocks,) int32 — next block or NULL
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.addrs.shape[0])
+
+    def walk(self, head: int) -> List[Address]:
+        """Host-side traversal (reference semantics for tests)."""
+        out: List[Address] = []
+        b = head
+        while b != NULL:
+            n = int(self.counts[b])
+            out.extend((int(t), int(nd)) for t, nd in self.addrs[b, :n])
+            b = int(self.next[b])
+        return out
+
+
+class BlockListBuilder:
+    def __init__(self, block_cap: int = 4):
+        self.block_cap = block_cap
+        self._addrs: List[np.ndarray] = []
+        self._counts: List[int] = []
+        self._next: List[int] = []
+
+    def add_entity(self, addresses: Sequence[Address]) -> int:
+        """Append one entity's address list; returns its head block index."""
+        if not addresses:
+            return NULL
+        cap = self.block_cap
+        head = len(self._counts)
+        chunks = [addresses[i:i + cap] for i in range(0, len(addresses), cap)]
+        for ci, chunk in enumerate(chunks):
+            block = np.full((cap, 2), NULL, dtype=np.int32)
+            block[: len(chunk)] = np.asarray(chunk, dtype=np.int32)
+            self._addrs.append(block)
+            self._counts.append(len(chunk))
+            nxt = head + ci + 1 if ci + 1 < len(chunks) else NULL
+            self._next.append(nxt)
+        return head
+
+    def build(self) -> BlockListArena:
+        if self._counts:
+            addrs = np.stack(self._addrs).astype(np.int32)
+        else:
+            addrs = np.zeros((0, self.block_cap, 2), dtype=np.int32)
+        return BlockListArena(
+            block_cap=self.block_cap,
+            addrs=addrs,
+            counts=np.asarray(self._counts, dtype=np.int32),
+            next=np.asarray(self._next, dtype=np.int32),
+        )
+
+
+@dataclasses.dataclass
+class CSRArena:
+    """Contiguous per-entity address spans (optimized layout)."""
+    offsets: np.ndarray    # (num_entities + 1,) int32
+    addrs: np.ndarray      # (total_locations, 2) int32
+
+    def span(self, entity_id: int) -> Tuple[int, int]:
+        return int(self.offsets[entity_id]), int(self.offsets[entity_id + 1])
+
+    def walk(self, entity_id: int) -> List[Address]:
+        lo, hi = self.span(entity_id)
+        return [(int(t), int(n)) for t, n in self.addrs[lo:hi]]
+
+
+def build_csr(address_lists: Iterable[Sequence[Address]]) -> CSRArena:
+    lists = [np.asarray(a, dtype=np.int32).reshape(-1, 2) for a in address_lists]
+    counts = np.asarray([len(a) for a in lists], dtype=np.int32)
+    offsets = np.zeros(len(lists) + 1, dtype=np.int32)
+    np.cumsum(counts, out=offsets[1:])
+    addrs = (np.concatenate(lists, axis=0) if lists
+             else np.zeros((0, 2), dtype=np.int32))
+    return CSRArena(offsets=offsets, addrs=addrs.astype(np.int32))

@@ -1,0 +1,136 @@
+"""Context Generation (paper Algorithm 3).
+
+Given a query entity's address list (from its block linked list), walk every
+(tree, node) location, collect the first ``n`` upward (ancestors, nearest
+first) and downward (BFS level order) hierarchical-relationship nodes, and
+render them through the prompt template the paper describes ("the upward
+hierarchical relationship of entity A are: B, C and D").
+
+Host path (strings, feeds the serving prompt) and a vectorized device path
+(entity-id tensors, feeds tokenized prompts inside a jitted serving step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocklist import BlockListArena, CSRArena, NULL
+from .tree import EntityForest
+
+
+@dataclasses.dataclass
+class EntityContext:
+    entity_id: int
+    locations: List[Tuple[int, int]]           # (tree, node)
+    up: List[List[int]]                        # per location: ancestor eids
+    down: List[List[int]]                      # per location: descendant eids
+
+    def pairs(self) -> List[Tuple[int, int]]:
+        """(h_i, h'_i) pairs per Algorithm 3's context set."""
+        out = []
+        for u, d in zip(self.up, self.down):
+            for i in range(max(len(u), len(d))):
+                out.append((u[i] if i < len(u) else NULL,
+                            d[i] if i < len(d) else NULL))
+        return out
+
+
+def generate_context(forest: EntityForest, entity_id: int,
+                     locations: Iterable[Tuple[int, int]],
+                     n: int = 3) -> EntityContext:
+    locs = list(locations)
+    up = [forest.ancestors(node, n) for _, node in locs]
+    down = [forest.descendants(node, n) for _, node in locs]
+    return EntityContext(entity_id=entity_id, locations=locs, up=up, down=down)
+
+
+def context_from_arena(forest: EntityForest, arena: BlockListArena,
+                       entity_id: int, head: int, n: int = 3) -> EntityContext:
+    """Faithful path: walk the block linked list from its head pointer."""
+    return generate_context(forest, entity_id, arena.walk(head), n=n)
+
+
+def context_from_csr(forest: EntityForest, csr: CSRArena,
+                     entity_id: int, n: int = 3) -> EntityContext:
+    """Optimized path: one contiguous span per entity."""
+    return generate_context(forest, entity_id, csr.walk(entity_id), n=n)
+
+
+def render_context(forest: EntityForest, ctxs: Sequence[EntityContext]) -> str:
+    """Paper §3.4 prompt template."""
+    lines: List[str] = []
+    for c in ctxs:
+        name = forest.entity_names[c.entity_id]
+        for (tree, _node), u, d in zip(c.locations, c.up, c.down):
+            if u:
+                ups = ", ".join(forest.entity_names[e] for e in u)
+                lines.append(
+                    f"In tree {tree}, the upward hierarchical relationship "
+                    f"of {name} are: {ups}.")
+            if d:
+                downs = ", ".join(forest.entity_names[e] for e in d)
+                lines.append(
+                    f"In tree {tree}, the downward hierarchical relationship "
+                    f"of {name} are: {downs}.")
+    return "\n".join(lines)
+
+
+# ------------------------------------------------------------------ device
+
+def gather_hierarchy(parent: jax.Array, entity_id: jax.Array,
+                     nodes: jax.Array, n: int) -> jax.Array:
+    """Vectorized n-level ancestor gather: for each node index in ``nodes``
+    return (len(nodes), n) ancestor entity ids (NULL-padded).  Runs inside the
+    jitted serving step — parent-pointer chase becomes n dependent gathers."""
+    def step(cur, _):
+        p = jnp.where(cur == NULL, NULL, parent[jnp.maximum(cur, 0)])
+        eid = jnp.where(p == NULL, NULL, entity_id[jnp.maximum(p, 0)])
+        return p, eid
+    _, eids = jax.lax.scan(step, nodes.astype(jnp.int32), None, length=n)
+    return jnp.swapaxes(eids, 0, 1)            # (B, n)
+
+
+def gather_descendants(child_offsets: jax.Array, child_index: jax.Array,
+                       entity_id: jax.Array, nodes: jax.Array,
+                       n: int) -> jax.Array:
+    """First-n BFS-down entity ids per node, fully vectorized with a bounded
+    frontier ring buffer of size n (level order, NULL-padded)."""
+    B = nodes.shape[0]
+
+    def per_node(node):
+        buf = jnp.full((n,), NULL, dtype=jnp.int32)   # pending frontier
+        out = jnp.full((n,), NULL, dtype=jnp.int32)
+
+        def push_children(state, src):
+            buf, w = state
+            lo = child_offsets[jnp.maximum(src, 0)]
+            hi = child_offsets[jnp.maximum(src, 0) + 1]
+            def body(k, st):
+                buf, w = st
+                idx = lo + k
+                valid = (src != NULL) & (idx < hi) & (w < n)
+                c = jnp.where(valid, child_index[jnp.minimum(idx, child_index.shape[0] - 1)], NULL)
+                buf = jnp.where(valid, buf.at[jnp.minimum(w, n - 1)].set(c), buf)
+                return buf, jnp.where(valid, w + 1, w)
+            return jax.lax.fori_loop(0, n, body, (buf, w))
+
+        buf, w = push_children((buf, jnp.int32(0)), node)
+
+        def step(i, st):
+            buf, w, out = st
+            cur = buf[jnp.minimum(i, n - 1)]
+            valid = (i < w) & (cur != NULL)
+            out = jnp.where(valid, out.at[i].set(entity_id[jnp.maximum(cur, 0)]), out)
+            buf, w = jax.lax.cond(
+                valid, lambda: push_children((buf, w), cur), lambda: (buf, w))
+            return buf, w, out
+
+        _, _, out = jax.lax.fori_loop(0, n, step, (buf, w, out))
+        return out
+
+    return jax.vmap(per_node)(nodes.astype(jnp.int32)) if B else \
+        jnp.zeros((0, n), dtype=jnp.int32)

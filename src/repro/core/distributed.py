@@ -1,0 +1,79 @@
+"""Distributed cuckoo-filter lookup — buckets sharded across the mesh.
+
+At pod scale the entity forest can exceed a single host's memory; the filter
+(and the CSR location arena) shard over the ``model`` mesh axis.  Queries are
+replicated (they are tiny — B hashes), every shard probes only the buckets it
+owns, and partial results combine with a max-reduce (misses are -1, hits are
+unique because an entity lives in exactly one or two buckets, both possibly
+on different shards — each shard reports only local hits).
+
+This is shard_map-native: no pointer chasing crosses devices, one psum-style
+combine per lookup round.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import hashing
+from .lookup import LookupResult
+
+
+def _local_probe(fps_shard: jax.Array, heads_shard: jax.Array,
+                 h: jax.Array, axis_name: str) -> LookupResult:
+    """Probe only the locally-owned bucket range; miss -> -1 everywhere."""
+    nb_local, s = fps_shard.shape
+    shard = jax.lax.axis_index(axis_name)
+    nb_global = nb_local * jax.lax.axis_size(axis_name)
+    lo = shard * nb_local
+
+    fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb_global, jnp)
+    out_hit = jnp.zeros(h.shape, dtype=jnp.bool_)
+    out_head = jnp.full(h.shape, -1, dtype=jnp.int32)
+    out_bucket = jnp.full(h.shape, -1, dtype=jnp.int32)
+    out_slot = jnp.full(h.shape, -1, dtype=jnp.int32)
+
+    for cand in (i1, i2):
+        local = cand.astype(jnp.int32) - lo
+        owned = (local >= 0) & (local < nb_local)
+        safe = jnp.clip(local, 0, nb_local - 1)
+        rows = fps_shard[safe]                       # (B, S)
+        match = (rows == fp[:, None]) & owned[:, None]
+        hit = jnp.any(match, axis=1)
+        slot = jnp.argmax(match, axis=1).astype(jnp.int32)
+        head = jnp.take_along_axis(heads_shard[safe], slot[:, None], axis=1)[:, 0]
+        take = hit & ~out_hit                        # i1 priority over i2
+        out_hit = out_hit | hit
+        out_head = jnp.where(take, head, out_head)
+        out_bucket = jnp.where(take, cand.astype(jnp.int32), out_bucket)
+        out_slot = jnp.where(take, slot, out_slot)
+
+    # combine across shards: hits are disjoint per bucket ownership
+    combine = functools.partial(jax.lax.pmax, axis_name=axis_name)
+    return LookupResult(
+        hit=combine(out_hit.astype(jnp.int32)).astype(jnp.bool_),
+        head=combine(out_head), bucket=combine(out_bucket),
+        slot=combine(out_slot))
+
+
+def sharded_lookup(mesh: Mesh, axis: str, fingerprints: jax.Array,
+                   heads: jax.Array, h: jax.Array) -> LookupResult:
+    """Top-level: tables sharded on bucket dim over ``axis``; h replicated."""
+    fn = jax.shard_map(
+        functools.partial(_local_probe, axis_name=axis),
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P()),
+        out_specs=LookupResult(hit=P(), head=P(), bucket=P(), slot=P()),
+    )
+    return fn(fingerprints, heads, h)
+
+
+def shard_filter_tables(mesh: Mesh, axis: str, *tables: jax.Array
+                        ) -> Tuple[jax.Array, ...]:
+    """Place filter tables bucket-sharded on the mesh."""
+    sharding = NamedSharding(mesh, P(axis, None))
+    return tuple(jax.device_put(t, sharding) for t in tables)

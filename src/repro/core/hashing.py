@@ -1,0 +1,89 @@
+"""Hash pipeline shared by host (numpy) build and device (jnp) lookup.
+
+Everything on-device is 32-bit (TPUs have no native int64 vector lanes).
+Entity strings are hashed on host (FNV-1a 64 folded to 32); from that single
+uint32 the device derives fingerprint and both candidate buckets, exactly as
+the paper's Eq. (1):   i1 = h(x),  i2 = i1 XOR h(f(x)).
+
+The same bit-level functions run under numpy and jax.numpy so the host-built
+tables and the device lookup can never disagree.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+FP_BITS = 12                       # paper: 12-bit fingerprints
+FP_MASK = (1 << FP_BITS) - 1
+EMPTY_FP = 0                       # slot sentinel; real fps are remapped off 0
+
+_GOLDEN = 0x9E3779B9               # 32-bit golden-ratio constant
+
+
+def fnv1a_64(s: str) -> int:
+    """Host-side 64-bit FNV-1a over UTF-8 bytes, folded to 32 bits."""
+    h = 0xCBF29CE484222325
+    for b in s.encode("utf-8"):
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return (h ^ (h >> 32)) & 0xFFFFFFFF
+
+
+def entity_hash(s: str) -> np.uint32:
+    return np.uint32(fnv1a_64(s))
+
+
+def hash_entities(names) -> np.ndarray:
+    return np.array([fnv1a_64(n) for n in names], dtype=np.uint32)
+
+
+def _mix(h, xp):
+    """splitmix32 finalizer — works for numpy and jnp uint32 arrays."""
+    if xp is np:   # numpy warns on (intentional) wrapping scalar multiplies
+        h = np.asarray(h, dtype=np.uint32)
+        with np.errstate(over="ignore"):
+            h = (h ^ (h >> np.uint32(16))) * np.uint32(0x7FEB352D)
+            h = (h ^ (h >> np.uint32(15))) * np.uint32(0x846CA68B)
+            return h ^ (h >> np.uint32(16))
+    h = h.astype(xp.uint32)
+    h = (h ^ (h >> xp.uint32(16))) * xp.uint32(0x7FEB352D)
+    h = (h ^ (h >> xp.uint32(15))) * xp.uint32(0x846CA68B)
+    return h ^ (h >> xp.uint32(16))
+
+
+def fingerprint(h, xp=np):
+    """12-bit fingerprint from the entity hash; 0 is reserved for 'empty'."""
+    fp = _mix(h ^ xp.uint32(_GOLDEN), xp) & xp.uint32(FP_MASK)
+    return xp.where(fp == xp.uint32(EMPTY_FP), xp.uint32(1), fp).astype(xp.uint32)
+
+
+def bucket_i1(h, num_buckets: int, xp=np):
+    """Primary bucket index. num_buckets must be a power of two."""
+    return (_mix(h, xp) & xp.uint32(num_buckets - 1)).astype(xp.uint32)
+
+
+def alt_bucket(i, fp, num_buckets: int, xp=np):
+    """i2 = i XOR h(fp)  (also maps i2 -> i1: involution, as in Fan et al.)."""
+    return ((i.astype(xp.uint32) ^ _mix(fp.astype(xp.uint32), xp))
+            & xp.uint32(num_buckets - 1)).astype(xp.uint32)
+
+
+def candidate_buckets(h, num_buckets: int, xp=np):
+    """(fp, i1, i2) for a batch of entity hashes."""
+    fp = fingerprint(h, xp)
+    i1 = bucket_i1(h, num_buckets, xp)
+    i2 = alt_bucket(i1, fp, num_buckets, xp)
+    return fp, i1, i2
+
+
+# --- Bloom-filter hashing (baselines) ---------------------------------------
+
+def bloom_bit_positions(h, m_bits: int, k: int, xp=np):
+    """k bit positions via double hashing h1 + j*h2 (Kirsch-Mitzenmacher)."""
+    h1 = _mix(h, xp)
+    h2 = _mix(h ^ xp.uint32(0xDEADBEEF), xp) | xp.uint32(1)
+    js = xp.arange(k, dtype=xp.uint32)
+    if hasattr(h1, "ndim") and getattr(h1, "ndim", 0) > 0:
+        pos = h1[..., None] + js * h2[..., None]
+    else:
+        pos = h1 + js * h2
+    return (pos % xp.uint32(m_bits)).astype(xp.uint32)

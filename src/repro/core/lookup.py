@@ -1,0 +1,66 @@
+"""Batched cuckoo-filter lookup — pure-jnp reference semantics.
+
+This is the vectorized (TPU-adapted) form of the paper's lookup (§3.4): all
+query-entity hashes are probed at once.  The Pallas kernel in
+``repro.kernels.cuckoo_lookup`` implements exactly these semantics and is
+validated against this function.
+
+Slot priority matches the paper's linear bucket scan: bucket i1 slots 0..S-1,
+then bucket i2 slots 0..S-1 — so after a temperature sort, hot entities
+resolve at slot 0.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hashing
+
+
+class LookupResult(NamedTuple):
+    hit: jax.Array        # (B,) bool
+    head: jax.Array       # (B,) int32 — blocklist head / entity id (NULL=-1)
+    bucket: jax.Array     # (B,) int32 — bucket of the matching slot
+    slot: jax.Array       # (B,) int32 — slot within that bucket
+
+
+def lookup_batch(fingerprints: jax.Array, heads: jax.Array,
+                 h: jax.Array) -> LookupResult:
+    """fingerprints/heads: (NB, S); h: (B,) uint32 entity hashes."""
+    nb, s = fingerprints.shape
+    fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb, jnp)
+    rows1 = fingerprints[i1]                         # (B, S)
+    rows2 = fingerprints[i2]
+    match = jnp.concatenate([rows1 == fp[:, None],
+                             rows2 == fp[:, None]], axis=1)   # (B, 2S)
+    hit = jnp.any(match, axis=1)
+    first = jnp.argmax(match, axis=1)                # first matching position
+    bucket = jnp.where(first < s, i1, i2).astype(jnp.int32)
+    slot = jnp.where(first < s, first, first - s).astype(jnp.int32)
+    heads_cat = jnp.concatenate([heads[i1], heads[i2]], axis=1)
+    head = jnp.where(hit,
+                     jnp.take_along_axis(heads_cat, first[:, None], axis=1)[:, 0],
+                     jnp.int32(-1))
+    return LookupResult(hit=hit, head=head.astype(jnp.int32),
+                        bucket=bucket, slot=slot)
+
+
+def bump_temperature(temperature: jax.Array, res: LookupResult) -> jax.Array:
+    """Algorithm 3: temperature += 1 for every hit slot (scatter-add)."""
+    return temperature.at[res.bucket, res.slot].add(
+        res.hit.astype(temperature.dtype))
+
+
+def sort_buckets(fingerprints: jax.Array, temperature: jax.Array,
+                 heads: jax.Array, entity_ids: jax.Array):
+    """Reorder slots of every bucket by descending temperature (device-side
+    analogue of the paper's idle-time adaptive sort); empties sink last."""
+    key = jnp.where(fingerprints == jnp.uint32(hashing.EMPTY_FP),
+                    jnp.int64(-(2 ** 62)) if temperature.dtype == jnp.int64
+                    else jnp.int32(-(2 ** 30)),
+                    temperature.astype(jnp.int32))
+    order = jnp.argsort(-key, axis=1, stable=True)
+    take = lambda a: jnp.take_along_axis(a, order, axis=1)
+    return take(fingerprints), take(temperature), take(heads), take(entity_ids)

@@ -1,0 +1,168 @@
+"""CFT-RAG retriever — the paper's method, host and device paths.
+
+Host path (benchmark-comparable with baselines.py): sequential filter lookup
+per entity, block-linked-list walk, Algorithm-3 context generation, with
+temperature bump + idle-time bucket sort between query rounds.
+
+Device path: batched lookup over all query entities at once (jnp /
+Pallas-kernel semantics) + vectorized hierarchy gather — this is what runs
+inside the jitted serving step (see repro/serving/rag.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+from .context import (EntityContext, context_from_arena, context_from_csr,
+                      gather_descendants, gather_hierarchy, render_context)
+from .cuckoo import CFTIndex, build_index
+from .lookup import LookupResult, bump_temperature, lookup_batch, sort_buckets
+from .tree import EntityForest
+
+NULL = -1
+
+
+class CFTRAG:
+    """Cuckoo-Filter Tree-RAG retriever (paper §3 / §4.2)."""
+
+    def __init__(self, index: CFTIndex, use_csr: bool = False,
+                 sort_every: int = 1, n_hierarchy: int = 3):
+        self.index = index
+        self.use_csr = use_csr          # False = faithful block linked list
+        self.sort_every = sort_every    # re-sort buckets every k rounds (0=off)
+        self.n = n_hierarchy
+        self._round = 0
+
+    # ----------------------------------------------------------- host path
+    def locate(self, name: str):
+        """Filter lookup -> address list (the paper's accelerated locate)."""
+        h = hashing.entity_hash(name)
+        hit, head = self.index.filter.lookup(int(h))
+        if not hit:
+            return []
+        if self.use_csr:
+            # CSR heads store the entity id directly
+            eid = self.index.forest.name_to_id.get(name, -1)
+            return self.index.csr.walk(eid) if eid >= 0 else []
+        return self.index.arena.walk(head)
+
+    def retrieve(self, names: Sequence[str], n: Optional[int] = None
+                 ) -> List[EntityContext]:
+        n = n or self.n
+        f = self.index.forest
+        out = []
+        for nm in names:
+            eid = f.name_to_id.get(nm, -1)
+            locs = self.locate(nm)
+            out.append(EntityContext(entity_id=eid, locations=list(locs),
+                                     up=[f.ancestors(node, n) for _, node in locs],
+                                     down=[f.descendants(node, n) for _, node in locs]))
+        self._round += 1
+        if self.sort_every and self._round % self.sort_every == 0:
+            self.index.filter.sort_buckets()   # idle-time adaptive sort
+        return out
+
+    def render(self, contexts: Sequence[EntityContext]) -> str:
+        return render_context(self.index.forest, contexts)
+
+    # --------------------------------------------------------- device path
+    def device_state(self) -> "CFTDeviceState":
+        return CFTDeviceState.from_index(self.index)
+
+
+class DeviceRetrieval(NamedTuple):
+    hit: jax.Array          # (B,) bool
+    locations: jax.Array    # (B, max_locs) int32 node ids (NULL-padded)
+    up: jax.Array           # (B, max_locs, n) ancestor entity ids
+    down: jax.Array         # (B, max_locs, n) descendant entity ids
+    temperature: jax.Array  # updated (NB, S) table — thread back into state
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CFTDeviceState:
+    """All retrieval tensors living on device, usable inside jit."""
+    fingerprints: jax.Array   # (NB, S) uint32
+    temperature: jax.Array    # (NB, S) int32
+    heads: jax.Array          # (NB, S) int32  — CSR entity ids (device path)
+    csr_offsets: jax.Array    # (E + 1,) int32
+    csr_nodes: jax.Array      # (L,) int32 — node id per location
+    parent: jax.Array         # (N,) int32
+    entity_id: jax.Array      # (N,) int32
+    child_offsets: jax.Array  # (N + 1,) int32
+    child_index: jax.Array    # (C,) int32
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        return tuple(getattr(self, f.name) for f in fields), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+    @classmethod
+    def from_index(cls, index: CFTIndex) -> "CFTDeviceState":
+        f = index.forest
+        t = index.filter.tables()
+        return cls(
+            fingerprints=jnp.asarray(t.fingerprints),
+            temperature=jnp.asarray(t.temperature),
+            # the device path uses CSR: slot payload = entity id
+            heads=jnp.asarray(t.entity_ids),
+            csr_offsets=jnp.asarray(index.csr.offsets),
+            csr_nodes=jnp.asarray(index.csr.addrs[:, 1]
+                                  if index.csr.addrs.size else
+                                  np.zeros((1,), np.int32)),
+            parent=jnp.asarray(f.parent if f.num_nodes else np.zeros(1, np.int32)),
+            entity_id=jnp.asarray(f.entity_id if f.num_nodes else np.zeros(1, np.int32)),
+            child_offsets=jnp.asarray(f.child_offsets),
+            child_index=jnp.asarray(f.child_index if f.child_index.size
+                                    else np.zeros(1, np.int32)),
+        )
+
+
+def retrieve_device(state: CFTDeviceState, query_hashes: jax.Array,
+                    max_locs: int = 4, n: int = 3,
+                    lookup_fn=lookup_batch) -> DeviceRetrieval:
+    """Batched CFT-RAG retrieval, jit-compatible end to end.
+
+    ``lookup_fn`` defaults to the pure-jnp reference; the serving engine
+    passes the Pallas kernel wrapper (identical signature/semantics).
+    """
+    res: LookupResult = lookup_fn(state.fingerprints, state.heads,
+                                  query_hashes)
+    temp = bump_temperature(state.temperature, res)
+    eid = jnp.where(res.hit, res.head, 0)                    # (B,)
+    lo = state.csr_offsets[eid]                              # (B,)
+    count = state.csr_offsets[eid + 1] - lo
+    k = jnp.arange(max_locs, dtype=jnp.int32)                # (max_locs,)
+    idx = lo[:, None] + k[None, :]
+    valid = (k[None, :] < count[:, None]) & res.hit[:, None]
+    safe = jnp.clip(idx, 0, state.csr_nodes.shape[0] - 1)
+    nodes = jnp.where(valid, state.csr_nodes[safe], NULL)    # (B, max_locs)
+
+    flat = nodes.reshape(-1)
+    up = gather_hierarchy(state.parent, state.entity_id,
+                          jnp.maximum(flat, 0), n)
+    up = jnp.where(flat[:, None] == NULL, NULL, up)
+    down = gather_descendants(state.child_offsets, state.child_index,
+                              state.entity_id, jnp.maximum(flat, 0), n)
+    down = jnp.where(flat[:, None] == NULL, NULL, down)
+    B = query_hashes.shape[0]
+    return DeviceRetrieval(
+        hit=res.hit, locations=nodes,
+        up=up.reshape(B, max_locs, n), down=down.reshape(B, max_locs, n),
+        temperature=temp)
+
+
+def build_retriever(trees, num_buckets: int = 1024, **kw) -> CFTRAG:
+    """Convenience: edge lists -> forest -> index -> retriever."""
+    from .tree import build_forest
+    forest = build_forest(trees)
+    index = build_index(forest, num_buckets=num_buckets)
+    return CFTRAG(index, **kw)

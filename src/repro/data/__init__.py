@@ -1,0 +1,13 @@
+"""Data substrate: corpora -> entities -> relations -> entity forest."""
+from .datasets import SyntheticCorpus, hospital_corpus, unhcr_corpus
+from .filtering import filter_relations
+from .ner import recognize_entities
+from .relations import extract_relations
+from .tokenizer import HashTokenizer
+from .pipeline import PackedBatches, TextDataset
+
+__all__ = [
+    "SyntheticCorpus", "hospital_corpus", "unhcr_corpus",
+    "filter_relations", "recognize_entities", "extract_relations",
+    "HashTokenizer", "PackedBatches", "TextDataset",
+]

@@ -1,0 +1,114 @@
+"""Relationship filtering (paper §2.3) — keep the edge set a forest.
+
+Order of operations (each rule from the paper, Figure 3):
+  1. self-pointing edges removed;
+  2. duplicate edges pruned to one;
+  3. cycles cut — "only the closest relationship is retained": the edge that
+     appeared *first* in extraction order wins, the back-edge that would close
+     a cycle is dropped;
+  4. transitive relations reduced — (A,C) is dropped when a longer path
+     A ->* C exists through retained edges;
+  5. single-parent enforcement — a tree node has one parent; the earliest
+     extracted parent is kept (extraction order is the paper's proxy for
+     relation confidence).
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Dict, List, Sequence, Set, Tuple
+
+Edge = Tuple[str, str]
+
+
+def _reachable(adj: Dict[str, List[str]], src: str, dst: str,
+               skip_direct: bool = False) -> bool:
+    """Is dst reachable from src? skip_direct ignores the direct edge."""
+    q = deque([src])
+    seen = {src}
+    first = True
+    while q:
+        u = q.popleft()
+        for v in adj.get(u, ()):
+            if first and skip_direct and u == src and v == dst:
+                continue
+            if v == dst:
+                return True
+            if v not in seen:
+                seen.add(v)
+                q.append(v)
+        first = False
+    return False
+
+
+def filter_relations(edges: Sequence[Edge]) -> List[Edge]:
+    # 1 + 2: self loops and duplicates (order-preserving)
+    seen: Set[Edge] = set()
+    stage: List[Edge] = []
+    for p, c in edges:
+        if p == c or (p, c) in seen:
+            continue
+        seen.add((p, c))
+        stage.append((p, c))
+
+    # 3: cycle cutting — accept edges in order, reject any that closes a cycle
+    adj: Dict[str, List[str]] = defaultdict(list)
+    acyclic: List[Edge] = []
+    for p, c in stage:
+        if _reachable(adj, c, p):       # adding p->c would close a cycle
+            continue
+        adj[p].append(c)
+        acyclic.append((p, c))
+
+    # 4: transitive reduction — drop (p, c) if another path p ->* c exists
+    adj = defaultdict(list)
+    for p, c in acyclic:
+        adj[p].append(c)
+    reduced: List[Edge] = []
+    for p, c in acyclic:
+        if _reachable(adj, p, c, skip_direct=True):
+            adj[p].remove(c)            # distant relation removed
+        else:
+            reduced.append((p, c))
+
+    # 5: single parent per child (earliest wins)
+    parent_of: Dict[str, str] = {}
+    out: List[Edge] = []
+    for p, c in reduced:
+        if c in parent_of:
+            continue
+        parent_of[c] = p
+        out.append((p, c))
+    return out
+
+
+def is_forest(edges: Sequence[Edge]) -> bool:
+    """Validation predicate used by tests: acyclic + single parent."""
+    parents: Dict[str, str] = {}
+    adj: Dict[str, List[str]] = defaultdict(list)
+    for p, c in edges:
+        if p == c or c in parents:
+            return False
+        parents[c] = p
+        adj[p].append(c)
+    # acyclicity via iterative DFS coloring
+    color: Dict[str, int] = {}
+    for start in list(adj):
+        if color.get(start):
+            continue
+        stack = [(start, iter(adj.get(start, ())))]
+        color[start] = 1
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for v in it:
+                if color.get(v) == 1:
+                    return False
+                if color.get(v, 0) == 0:
+                    color[v] = 1
+                    stack.append((v, iter(adj.get(v, ()))))
+                    advanced = True
+                    break
+            if not advanced:
+                color[node] = 2
+                stack.pop()
+    return True

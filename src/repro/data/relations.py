@@ -1,0 +1,73 @@
+"""Relationship extraction (paper §2.2) — dependency-pattern stand-in.
+
+The paper runs dependency parsers (gpt-4 / open-source NLP) and keeps the
+dependency-expressing relations: "belongs to", "contains", "is part of",
+"is dependent on", plus conjunction handling ("A and B belong to C" groups
+both children under C).  We implement those surface patterns directly over
+the recognizer's entity spans — deterministic and offline.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Sequence, Tuple
+
+from .ner import recognize_entities, build_gazetteer
+
+Edge = Tuple[str, str]      # (parent, child)
+
+#: pattern -> which side is the parent. {a}/{b} are entity placeholders.
+_PATTERNS = [
+    (re.compile(r"\bbelongs? to\b", re.I), "right"),    # A belongs to B
+    (re.compile(r"\bis part of\b", re.I), "right"),
+    (re.compile(r"\bis dependent on\b", re.I), "right"),
+    (re.compile(r"\breports? to\b", re.I), "right"),
+    (re.compile(r"\bunder the guidance of\b", re.I), "right"),
+    (re.compile(r"\bcontains?\b", re.I), "left"),       # B contains A
+    (re.compile(r"\bconsists? of\b", re.I), "left"),
+    (re.compile(r"\bincludes?\b", re.I), "left"),
+    (re.compile(r"\boversees?\b", re.I), "left"),
+]
+
+_SENT_SPLIT = re.compile(r"[.!?]\s+|[.!?]$")
+_CONJ = re.compile(r"\b(?:and|or)\b", re.I)
+
+
+def _split_conjuncts(segment: str, gazetteer) -> List[str]:
+    """Entities in a segment, honouring conjunctions (grouping siblings)."""
+    ents: List[str] = []
+    for part in _CONJ.split(segment):
+        ents.extend(recognize_entities(part, gazetteer))
+    return ents
+
+
+def extract_relations(text: str, entities: Optional[Sequence[str]] = None
+                      ) -> List[Edge]:
+    """Parent->child edges found in ``text``.
+
+    ``entities``: optional gazetteer vocabulary; when omitted, capitalization
+    heuristics alone drive recognition (as on raw unseen text).
+    """
+    gaz = build_gazetteer(entities) if entities is not None else None
+    edges: List[Edge] = []
+    for sentence in _SENT_SPLIT.split(text):
+        if not sentence.strip():
+            continue
+        for pat, parent_side in _PATTERNS:
+            m = pat.search(sentence)
+            if not m:
+                continue
+            left_ents = _split_conjuncts(sentence[:m.start()], gaz)
+            right_ents = _split_conjuncts(sentence[m.end():], gaz)
+            if not left_ents or not right_ents:
+                continue
+            if parent_side == "right":
+                parent = right_ents[0]
+                children = left_ents          # all conjuncts share the parent
+            else:
+                parent = left_ents[-1]
+                children = right_ents
+            for child in children:
+                if child != parent:
+                    edges.append((parent, child))
+            break    # one relation pattern per sentence (first match wins)
+    return edges

@@ -1,0 +1,6 @@
+from .kernel import TILE, cuckoo_lookup_pallas
+from .ops import cuckoo_lookup, cuckoo_lookup_auto, stage_tables
+from .ref import cuckoo_lookup_ref
+
+__all__ = ["TILE", "cuckoo_lookup_pallas", "cuckoo_lookup",
+           "cuckoo_lookup_auto", "stage_tables", "cuckoo_lookup_ref"]

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: batched cuckoo-filter lookup (the paper's hot loop).
+
+TPU-native design (DESIGN.md §3): the filter tables are small (NB x S x 4B —
+a few hundred KiB at most) and live as *whole VMEM blocks*; the query batch
+is tiled over the grid.  Bucket rows are gathered with one-hot matmuls on the
+MXU (exact in f32 for 12-bit fingerprints and <2^24 head pointers), replacing
+the CPU implementation's pointer dereference per probe.
+
+Per query tile (TILE=128 lanes):
+  1. integer hash pipeline (VPU):  fp, i1, i2 = candidates(h)
+  2. rows1 = one_hot(i1) @ [fp_table | head_table]   (MXU)
+     rows2 = one_hot(i2) @ [fp_table | head_table]
+  3. match = rows == fp; first-match slot via iota-min; outputs hit/head/
+     bucket/slot — identical semantics to repro.core.lookup.lookup_batch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core import hashing
+
+TILE = 128          # queries per grid step (one vector lane row)
+
+
+def _kernel(h_ref, fp_tab_ref, head_tab_ref, hit_ref, head_ref,
+            bucket_ref, slot_ref, *, num_buckets: int, slots: int):
+    h = h_ref[...].astype(jnp.uint32)                       # (TILE,)
+    fp, i1, i2 = hashing.candidate_buckets(h, num_buckets, jnp)
+
+    fp_tab = fp_tab_ref[...]                                # (NB, S) f32
+    head_tab = head_tab_ref[...]                            # (NB, S) f32
+    tab = jnp.concatenate([fp_tab, head_tab], axis=1)       # (NB, 2S)
+
+    nb_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, num_buckets), 1)
+    oh1 = (nb_iota == i1.astype(jnp.int32)[:, None]).astype(jnp.float32)
+    oh2 = (nb_iota == i2.astype(jnp.int32)[:, None]).astype(jnp.float32)
+    rows1 = jax.lax.dot(oh1, tab, precision=jax.lax.Precision.HIGHEST)
+    rows2 = jax.lax.dot(oh2, tab, precision=jax.lax.Precision.HIGHEST)
+
+    fps = jnp.concatenate([rows1[:, :slots], rows2[:, :slots]], axis=1)
+    heads = jnp.concatenate([rows1[:, slots:], rows2[:, slots:]], axis=1)
+
+    match = fps == fp.astype(jnp.float32)[:, None]          # (TILE, 2S)
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, 2 * slots), 1)
+    first = jnp.min(jnp.where(match, pos_iota, 2 * slots), axis=1)
+    hit = first < 2 * slots
+    firstc = jnp.minimum(first, 2 * slots - 1)
+
+    sel = (pos_iota == firstc[:, None]).astype(jnp.float32)
+    head = jnp.sum(heads * sel, axis=1)                     # exact gather
+
+    hit_ref[...] = hit.astype(jnp.int32)
+    head_ref[...] = jnp.where(hit, head.astype(jnp.int32), -1)
+    bucket_ref[...] = jnp.where(first < slots, i1, i2).astype(jnp.int32)
+    slot_ref[...] = jnp.where(first < slots, firstc,
+                              firstc - slots).astype(jnp.int32)
+
+
+def cuckoo_lookup_pallas(h: jax.Array, fp_table_f32: jax.Array,
+                         head_table_f32: jax.Array,
+                         interpret: bool = True):
+    """h: (B,) uint32 (B % TILE == 0); tables: (NB, S) float32."""
+    num_buckets, slots = fp_table_f32.shape
+    b = h.shape[0]
+    grid = (b // TILE,)
+    out_shapes = [jax.ShapeDtypeStruct((b,), jnp.int32) for _ in range(4)]
+    qspec = pl.BlockSpec((TILE,), lambda i: (i,))
+    tabspec = pl.BlockSpec((num_buckets, slots), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, num_buckets=num_buckets, slots=slots),
+        grid=grid,
+        in_specs=[qspec, tabspec, tabspec],
+        out_specs=[qspec] * 4,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(h, fp_table_f32, head_table_f32)

@@ -1,0 +1,45 @@
+"""Public jit'd wrapper for the cuckoo-lookup Pallas kernel.
+
+Handles: query padding to the TILE multiple, int->f32 table staging (done
+once per table version, not per query), interpret-mode selection off the
+backend, and repackaging into core.lookup.LookupResult.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.lookup import LookupResult
+from .kernel import TILE, cuckoo_lookup_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def stage_tables(fingerprints: jax.Array, heads: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """One-time conversion of int tables to the kernel's f32 layout."""
+    return (fingerprints.astype(jnp.float32), heads.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cuckoo_lookup(fingerprints: jax.Array, heads: jax.Array, h: jax.Array,
+                  interpret: bool = True) -> LookupResult:
+    """Same signature/semantics as core.lookup.lookup_batch."""
+    b = h.shape[0]
+    pad = (-b) % TILE
+    hp = jnp.pad(h, (0, pad))
+    fp32, hd32 = stage_tables(fingerprints, heads)
+    hit, head, bucket, slot = cuckoo_lookup_pallas(
+        hp.astype(jnp.uint32), fp32, hd32, interpret=interpret)
+    return LookupResult(hit=hit[:b].astype(jnp.bool_), head=head[:b],
+                        bucket=bucket[:b], slot=slot[:b])
+
+
+def cuckoo_lookup_auto(fingerprints, heads, h) -> LookupResult:
+    """Kernel on TPU, interpret elsewhere — the serving engine's entry."""
+    return cuckoo_lookup(fingerprints, heads, h, interpret=not on_tpu())

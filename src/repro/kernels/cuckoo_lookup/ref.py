@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the cuckoo lookup kernel — delegates to the core
+reference semantics (one definition of truth)."""
+from __future__ import annotations
+
+import jax
+
+from ...core.lookup import LookupResult, lookup_batch
+
+
+def cuckoo_lookup_ref(fingerprints: jax.Array, heads: jax.Array,
+                      h: jax.Array) -> LookupResult:
+    return lookup_batch(fingerprints, heads, h)

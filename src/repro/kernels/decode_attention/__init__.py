@@ -1,0 +1,6 @@
+from .kernel import BK, decode_attention_pallas
+from .ops import decode_attention
+from .ref import combine_partial_attention, decode_attention_ref
+
+__all__ = ["BK", "decode_attention", "decode_attention_pallas",
+           "decode_attention_ref", "combine_partial_attention"]

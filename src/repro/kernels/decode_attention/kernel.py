@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: flash-decoding (one query token vs. long KV cache).
+
+GQA grouping turns the degenerate (1 x D) @ (D x BK) matmul into
+(G x D) @ (D x BK): the G query heads sharing one kv head are processed
+together as the matmul's row dim — the standard TPU decode trick.
+
+Grid: (B, Hkv, kv_tiles) with kv tiles innermost; running max/sum/acc in
+VMEM scratch (online softmax).  Emits normalized output AND the logsumexp so
+sequence-sharded caches can combine partial results across devices
+(flash-decoding; see ref.combine_partial_attention).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BK = 256          # kv rows per tile (memory-bound op: bigger tiles amortize)
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+            m_scr, l_scr, acc_scr, *, scale, kv_steps):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[0, 0]
+    # skip tiles entirely beyond the valid prefix
+    @pl.when(ik * BK < cache_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = ik * BK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < cache_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == kv_steps - 1)
+    def _emit():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_scr[...] + jnp.log(l)
+
+
+def decode_attention_pallas(q, k, v, cache_len, *,
+                            scale: Optional[float] = None,
+                            interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """q: (B, Hq, D); k, v: (B, Hkv, S, D) with S % BK == 0; cache_len: (B,).
+    Returns out (B, Hq, D) and lse (B, Hq)."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kv_steps = s // BK
+
+    qg = q.reshape(b, hkv, g, d)
+    lens = cache_len.reshape(b, 1).astype(jnp.int32)
+
+    lenspec = pl.BlockSpec((1, 1), lambda b_, h, ik: (b_, 0))
+    qspec = pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0))
+    kvspec = pl.BlockSpec((1, 1, BK, d), lambda b_, h, ik: (b_, h, ik, 0))
+    ospec = qspec
+    lsespec = pl.BlockSpec((1, 1, g), lambda b_, h, ik: (b_, h, 0))
+
+    out, lse = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, kv_steps=kv_steps),
+        grid=(b, hkv, kv_steps),
+        in_specs=[lenspec, qspec, kvspec, kvspec],
+        out_specs=[ospec, lsespec],
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+                   jax.ShapeDtypeStruct((b, hkv, g), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+        interpret=interpret,
+    )(lens, qg, k, v)
+    return out.reshape(b, hq, d), lse.reshape(b, hq)

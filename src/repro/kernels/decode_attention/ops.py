@@ -1,0 +1,26 @@
+"""Jit'd wrapper for flash-decoding: cache padding + interpret selection."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BK, decode_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret",
+                                             "return_lse"))
+def decode_attention(q, k, v, cache_len, scale: Optional[float] = None,
+                     interpret: bool = True, return_lse: bool = False):
+    """Same semantics as ref.decode_attention_ref (cache rows >= cache_len
+    are ignored). Pads the cache to a BK multiple (padding is masked)."""
+    s = k.shape[2]
+    pad = (-s) % BK
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out, lse = decode_attention_pallas(q, k, v, cache_len.astype(jnp.int32),
+                                       scale=scale, interpret=interpret)
+    return (out, lse) if return_lse else out

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle: single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cache_len: jax.Array,
+                         scale: Optional[float] = None,
+                         return_lse: bool = False):
+    """q: (B, Hq, D); k, v: (B, Hkv, S, D); cache_len: (B,) valid prefix.
+
+    GQA is computed GROUPED (q reshaped to (B, Hkv, G, D)) — materializing
+    repeat(k, G) is G x the cache bytes and forces a full-cache reshard
+    under GSPMD when the cache is sequence-sharded."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg,
+                        k.astype(jnp.float32)) * scale     # (B, Hkv, G, S)
+    mask = jnp.arange(s)[None, None, None, :] < cache_len[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p / l, v.astype(jnp.float32))
+    out = out.reshape(b, hq, d).astype(q.dtype)
+    if return_lse:
+        return out, (m + jnp.log(l)).reshape(b, hq)
+    return out
+
+
+def combine_partial_attention(outs: jax.Array, lses: jax.Array) -> jax.Array:
+    """Merge per-shard partial decode attention (flash-decoding combine).
+
+    outs: (P, B, H, D) normalized partial outputs; lses: (P, B, H).
+    Used when the KV cache is sequence-sharded (long_500k, batch=1)."""
+    m = jnp.max(lses, axis=0, keepdims=True)
+    w = jnp.exp(lses - m)                                   # (P, B, H)
+    num = jnp.sum(outs * w[..., None], axis=0)
+    den = jnp.sum(w, axis=0)[..., None]
+    return (num / den).astype(outs.dtype)

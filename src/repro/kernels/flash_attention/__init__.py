@@ -1,0 +1,7 @@
+from .kernel import (BK, BQ, flash_attention_bwd_pallas,
+                     flash_attention_fwd_pallas)
+from .ops import flash_attention
+from .ref import attention_ref
+
+__all__ = ["BK", "BQ", "flash_attention", "attention_ref",
+           "flash_attention_fwd_pallas", "flash_attention_bwd_pallas"]

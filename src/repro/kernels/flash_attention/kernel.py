@@ -1,0 +1,236 @@
+"""Pallas TPU flash attention (fwd + bwd), GQA-aware, causal.
+
+Tiling: queries in (BQ=128)-row tiles, keys/values in (BK=128)-row tiles —
+MXU-aligned (128x128 systolic array).  Grid iterates kv tiles innermost;
+running max / sum / accumulator live in VMEM scratch across kv steps
+(online softmax, Flash-2 style).  Fully-masked causal tiles are skipped
+with pl.when so the causal prefill does ~half the work.
+
+Backward follows the FA2 recipe with saved (out, lse): delta = rowsum(do*o)
+precomputed outside; dq accumulated over kv tiles; dk/dv accumulated over q
+tiles per q-head and group-reduced to kv heads in the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ forward
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *, scale, causal, kv_steps, q_offset):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0) + q_offset
+    k_pos = ik * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+    needed = (not causal) or (ik * BK <= iq * BQ + q_offset + BQ - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == kv_steps - 1)
+    def _emit():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_scr[...] + jnp.log(l)
+
+
+def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
+                               scale: Optional[float] = None,
+                               interpret: bool = True):
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lkv, D). Lq%BQ == Lkv%BK == 0."""
+    b, hq, lq, d = q.shape
+    _, hkv, lkv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    q_steps, kv_steps = lq // BQ, lkv // BK
+    q_offset = lkv - lq                  # right-aligned causal positions
+
+    grid = (b, hq, q_steps, kv_steps)
+    qspec = pl.BlockSpec((1, 1, BQ, d), lambda b_, h, iq, ik: (b_, h, iq, 0))
+    kvspec = pl.BlockSpec((1, 1, BK, d),
+                          lambda b_, h, iq, ik: (b_, h // group, ik, 0))
+    ospec = qspec
+    lsespec = pl.BlockSpec((1, 1, BQ), lambda b_, h, iq, ik: (b_, h, iq))
+
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, causal=causal,
+                          kv_steps=kv_steps, q_offset=q_offset),
+        grid=grid,
+        in_specs=[qspec, kvspec, kvspec],
+        out_specs=[ospec, lsespec],
+        out_shape=[jax.ShapeDtypeStruct(q.shape, q.dtype),
+                   jax.ShapeDtypeStruct((b, hq, lq), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((BQ,), jnp.float32),
+                        pltpu.VMEM((BQ,), jnp.float32),
+                        pltpu.VMEM((BQ, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+# ----------------------------------------------------------------- backward
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_scr, *, scale, causal, kv_steps, q_offset):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    needed = (not causal) or (ik * BK <= iq * BQ + q_offset + BQ - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = iq * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0) + q_offset
+            k_pos = ik * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        acc_scr[...] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == kv_steps - 1)
+    def _emit():
+        dq_ref[0, 0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr,
+                *, scale, causal, q_steps, q_offset):
+    ik = pl.program_id(2)
+    iq = pl.program_id(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    needed = (not causal) or (ik * BK <= iq * BQ + q_offset + BQ - 1)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = iq * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0) + q_offset
+            k_pos = ik * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])                     # (BQ, BK)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # p^T @ do
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # ds^T @ q
+
+    @pl.when(iq == q_steps - 1)
+    def _emit():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_pallas(q, k, v, out, lse, do, *, causal: bool,
+                               scale: Optional[float], interpret: bool = True):
+    b, hq, lq, d = q.shape
+    _, hkv, lkv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    q_steps, kv_steps = lq // BQ, lkv // BK
+    q_offset = lkv - lq
+
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    qspec4 = lambda: pl.BlockSpec((1, 1, BQ, d),
+                                  lambda b_, h, iq, ik: (b_, h, iq, 0))
+    kvspec4 = lambda: pl.BlockSpec((1, 1, BK, d),
+                                   lambda b_, h, iq, ik: (b_, h // group, ik, 0))
+    vec4 = lambda: pl.BlockSpec((1, 1, BQ), lambda b_, h, iq, ik: (b_, h, iq))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          kv_steps=kv_steps, q_offset=q_offset),
+        grid=(b, hq, q_steps, kv_steps),
+        in_specs=[qspec4(), kvspec4(), kvspec4(), qspec4(), vec4(), vec4()],
+        out_specs=qspec4(),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((BQ, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dk/dv per *q* head (grid swaps: kv tiles outer, q tiles inner/summed)
+    qspec_s = pl.BlockSpec((1, 1, BQ, d), lambda b_, h, ik, iq: (b_, h, iq, 0))
+    kvspec_s = pl.BlockSpec((1, 1, BK, d),
+                            lambda b_, h, ik, iq: (b_, h // group, ik, 0))
+    vec_s = pl.BlockSpec((1, 1, BQ), lambda b_, h, ik, iq: (b_, h, iq))
+    dkv_out = pl.BlockSpec((1, 1, BK, d), lambda b_, h, ik, iq: (b_, h, ik, 0))
+
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          q_steps=q_steps, q_offset=q_offset),
+        grid=(b, hq, kv_steps, q_steps),
+        in_specs=[qspec_s, kvspec_s, kvspec_s, qspec_s, vec_s, vec_s],
+        out_specs=[dkv_out, dkv_out],
+        out_shape=[jax.ShapeDtypeStruct((b, hq, lkv, d), q.dtype)] * 2,
+        scratch_shapes=[pltpu.VMEM((BK, d), jnp.float32),
+                        pltpu.VMEM((BK, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # group-reduce q-head gradients onto kv heads
+    dk = dk_h.reshape(b, hkv, group, lkv, d).sum(axis=2).astype(k.dtype)
+    dv = dv_h.reshape(b, hkv, group, lkv, d).sum(axis=2).astype(v.dtype)
+    return dq, dk, dv

@@ -1,0 +1,63 @@
+"""Differentiable flash-attention wrapper (custom_vjp over the Pallas
+kernels), with padding to tile multiples and interpret-mode selection."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import (BK, BQ, flash_attention_bwd_pallas,
+                     flash_attention_fwd_pallas)
+
+
+def _pad_len(l: int, t: int) -> int:
+    return (-l) % t
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True,
+                    scale: Optional[float] = None, interpret: bool = True):
+    out, _ = _fwd(q, k, v, causal, scale, interpret)
+    return out
+
+
+def _fwd(q, k, v, causal, scale, interpret):
+    b, hq, lq, d = q.shape
+    lkv = k.shape[2]
+    pq, pk = _pad_len(lq, BQ), _pad_len(lkv, BK)
+    if causal and pq != pk:
+        # zero-padded q/do rows are provably inert only when the causal
+        # right-alignment is preserved, i.e. lq == lkv (mod tile) — true for
+        # self-attention (train/prefill). Decode uses decode_attention.
+        raise ValueError("causal flash requires lq % BQ == lkv % BK")
+    if pk and not causal:
+        raise ValueError("non-causal flash requires BK-aligned kv length")
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out, lse = flash_attention_fwd_pallas(qp, kp, vp, causal=causal,
+                                          scale=scale, interpret=interpret)
+    return out[:, :, :lq], (q, k, v, out, lse, lq, lkv)
+
+
+def _fwd_rule(q, k, v, causal, scale, interpret):
+    out, res = _fwd(q, k, v, causal, scale, interpret)
+    return out, res
+
+
+def _bwd_rule(causal, scale, interpret, res, do):
+    q, k, v, out_p, lse, lq, lkv = res
+    pq, pk = _pad_len(lq, BQ), _pad_len(lkv, BK)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    dop = jnp.pad(do, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    dq, dk, dv = flash_attention_bwd_pallas(
+        qp, kp, vp, out_p, lse, dop, causal=causal, scale=scale,
+        interpret=interpret)
+    return dq[:, :, :lq], dk[:, :, :lkv], dv[:, :, :lkv]
+
+
+flash_attention.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle: GQA causal attention with logsumexp output."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    """(B, Hkv, L, D) -> (B, Hq, L, D) by group broadcast."""
+    b, hkv, l, d = k.shape
+    g = num_q_heads // hkv
+    return jnp.repeat(k, g, axis=1)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, scale: Optional[float] = None,
+                  return_lse: bool = False):
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lkv, D). f32 math throughout."""
+    b, hq, lq, d = q.shape
+    lkv = k.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    kf = _expand_kv(k, hq).astype(jnp.float32)
+    vf = _expand_kv(v, hq).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * scale
+    if causal:
+        # positions are right-aligned: query i sits at absolute lkv-lq+i
+        qi = jnp.arange(lq)[:, None] + (lkv - lq)
+        ki = jnp.arange(lkv)[None, :]
+        s = jnp.where(ki <= qi, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / l, vf).astype(q.dtype)
+    if return_lse:
+        lse = (m + jnp.log(l))[..., 0]
+        return out, lse
+    return out

@@ -1,0 +1,5 @@
+from .kernel import CHUNK, linear_scan_pallas
+from .ops import linear_scan
+from .ref import linear_scan_ref
+
+__all__ = ["CHUNK", "linear_scan", "linear_scan_pallas", "linear_scan_ref"]

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: chunked gated linear recurrence (RWKV6 / Mamba2 SSD).
+
+The recurrence from ref.py is computed in CHUNK-length blocks so the MXU
+does the work instead of a length-L sequential scan.  Numerical scheme: all
+decay factors are expressed with NON-POSITIVE exponents (decay logs g <= 0),
+so nothing can overflow and underflow flushes to an exact 0:
+
+  * inter-chunk:   out_i += (q_i * exp(cq_i)) @ S_in              cq_i <= 0
+  * state carry:   S_out = diag(exp(c_last)) S_in
+                           + (k_j * exp(c_last - c_j))^T @ v      <= 0
+  * intra-chunk:   sub-blocks of SUB=16.  Off-diagonal sub-block pairs
+    factor through the query sub-block's *start boundary* b:
+        (q_i exp(cq_i - b)) . (k_j exp(b - c_j))                  both <= 0
+    Diagonal sub-blocks use the exact pairwise form
+        sum_d q_id k_jd exp(cq_id - c_jd)                         <= 0
+    via a (SUB, SUB, Dk) broadcast (small: 16*16*Dk).
+
+inclusive=True  -> out_i = q_i . S_i      (Mamba2/SSD)
+inclusive=False -> out_i = q_i . S_{i-1}  (RWKV6; cq_i = c_i - g_i)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+SUB = 16
+NSUB = CHUNK // SUB
+
+
+def _kernel(q_ref, k_ref, v_ref, g_ref, s0_ref, o_ref, sfin_ref, s_scr,
+            *, chunks, inclusive):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    q = q_ref[0].astype(jnp.float32)            # (C, Dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)            # (C, Dv)
+    g = g_ref[0].astype(jnp.float32)            # (C, Dk) log decay (<= 0)
+
+    c = jnp.cumsum(g, axis=0)                   # inclusive cumulative
+    cq = c if inclusive else c - g              # query-side exponent
+    c_last = c[CHUNK - 1]
+
+    # inter-chunk: q_i . diag(exp(cq_i)) S_in          (exponents <= 0)
+    q_in = q * jnp.exp(cq)
+    out = jax.lax.dot(q_in, s_scr[...], preferred_element_type=jnp.float32)
+
+    # intra-chunk: sub-block decomposition (all exponents <= 0)
+    zeros_row = jnp.zeros((1, c.shape[1]), jnp.float32)
+    c_ext = jnp.concatenate([zeros_row, c], axis=0)     # c_ext[i] = c_{i-1}
+    for si in range(NSUB):
+        lo = si * SUB
+        b = c_ext[lo]                                   # boundary c_{lo-1}
+        qi = q[lo:lo + SUB]
+        cqi = cq[lo:lo + SUB]
+        q_fac = qi * jnp.exp(cqi - b[None, :])          # <= 0 exponent
+        acc = jnp.zeros((SUB, v.shape[1]), jnp.float32)
+        for sj in range(si):                            # earlier sub-blocks
+            jlo = sj * SUB
+            kj = k[jlo:jlo + SUB] * jnp.exp(b[None, :] - c[jlo:jlo + SUB])
+            scores = jax.lax.dot_general(
+                q_fac, kj, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc = acc + jax.lax.dot(scores, v[jlo:jlo + SUB],
+                                    preferred_element_type=jnp.float32)
+        # diagonal sub-block: exact pairwise (SUB, SUB, Dk) broadcast
+        cj = c[lo:lo + SUB]
+        kj = k[lo:lo + SUB]
+        pair = jnp.exp(cqi[:, None, :] - cj[None, :, :])     # (S,S,Dk) <= 0
+        scores = jnp.einsum("id,jd,ijd->ij", qi, kj, pair)
+        ii = jax.lax.broadcasted_iota(jnp.int32, (SUB, SUB), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (SUB, SUB), 1)
+        mask = (jj <= ii) if inclusive else (jj < ii)
+        scores = jnp.where(mask, scores, 0.0)
+        acc = acc + jax.lax.dot(scores, v[lo:lo + SUB],
+                                preferred_element_type=jnp.float32)
+        out = out.at[lo:lo + SUB].add(acc)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    # state carry: S_out = diag(exp(c_last)) S_in + (k exp(c_last - c))^T v
+    ke = k * jnp.exp(c_last[None, :] - c)
+    s_scr[...] = s_scr[...] * jnp.exp(c_last)[:, None] + jax.lax.dot_general(
+        ke, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ic == chunks - 1)
+    def _emit():
+        sfin_ref[0] = s_scr[...]
+
+
+def linear_scan_pallas(q, k, v, g, s_init, *, inclusive: bool = True,
+                       interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """q,k,g: (BH, L, Dk); v: (BH, L, Dv); s_init: (BH, Dk, Dv); L%CHUNK==0."""
+    bh, l, dk = q.shape
+    dv = v.shape[-1]
+    chunks = l // CHUNK
+
+    seq = lambda: pl.BlockSpec((1, CHUNK, dk), lambda b, ic: (b, ic, 0))
+    seqv = pl.BlockSpec((1, CHUNK, dv), lambda b, ic: (b, ic, 0))
+    st = pl.BlockSpec((1, dk, dv), lambda b, ic: (b, 0, 0))
+
+    out, s_fin = pl.pallas_call(
+        functools.partial(_kernel, chunks=chunks, inclusive=inclusive),
+        grid=(bh, chunks),
+        in_specs=[seq(), seq(), seqv, seq(), st],
+        out_specs=[seqv, st],
+        out_shape=[jax.ShapeDtypeStruct((bh, l, dv), q.dtype),
+                   jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, g, s_init)
+    return out, s_fin

@@ -1,0 +1,36 @@
+"""Jit'd wrapper: (B,H,...) plumbing, CHUNK padding, interpret switch.
+
+Padding is inert by construction: padded steps carry g=0 (decay 1) and
+k=v=0 (no state update), so S_final is exact and padded outputs are sliced.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import CHUNK, linear_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("inclusive", "interpret"))
+def linear_scan(q, k, v, g, s_init=None, inclusive: bool = True,
+                interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Same shapes/semantics as ref.linear_scan_ref."""
+    b, h, l, dk = q.shape
+    dv = v.shape[-1]
+    pad = (-l) % CHUNK
+    if s_init is None:
+        s_init = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def flat(t, d):
+        t = jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return t.reshape(b * h, l + pad, d)
+
+    out, s_fin = linear_scan_pallas(
+        flat(q, dk), flat(k, dk), flat(v, dv), flat(g, dk),
+        s_init.reshape(b * h, dk, dv),
+        inclusive=inclusive, interpret=interpret)
+    return (out.reshape(b, h, l + pad, dv)[:, :, :l],
+            s_fin.reshape(b, h, dk, dv))

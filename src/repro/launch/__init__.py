@@ -1,0 +1,8 @@
+"""Launch layer: meshes, sharding rules, dry-run, drivers.
+
+NOTE: ``launch.dryrun`` sets XLA_FLAGS at import — import it only in a
+dedicated process (the CLI), never from tests or benchmarks.
+"""
+from .mesh import data_axes, make_production_mesh, make_test_mesh
+
+__all__ = ["data_axes", "make_production_mesh", "make_test_mesh"]

@@ -1,0 +1,177 @@
+"""PartitionSpec rules: TP + FSDP (2D-sharded params), EP for experts,
+batch-DP over (pod, data), sequence-sharded KV caches for decode.
+
+Parameter rule set (path-name keyed; stacked scan dims are leading and left
+unsharded):
+
+  embed (V, D)                      -> ("model", fsdp)   vocab TP + FSDP
+  lm_head w (D, V)                  -> (fsdp, "model")
+  up-projections  w[q|k|v], gate/up,
+  in_proj, w_a, patch_proj (D, F)   -> (fsdp, "model")   megatron column
+  down-projections wo, down,
+  out_proj, w_b (F, D)              -> ("model", fsdp)   megatron row
+  MoE w_gate/w_up (E, D, F)         -> ("model", fsdp, None)  EP + FSDP
+  MoE w_down (E, F, D)              -> ("model", None, fsdp)
+  rank-1 / scalars / small leaves   -> replicated
+
+Every optimizer moment / gradient mirrors its parameter, so the heaviest
+tensors are always 2D-sharded: a 123B AdamW state is ~6.7 GB/chip on one
+pod.  (fsdp = ("data",) single-pod, ("pod","data") when the pod axis
+exists — cross-pod FSDP keeps 400B-class models inside v5e HBM.)
+
+Cache rules (decode): batch over data when batch > 1; cache SEQUENCE over
+"model" (GSPMD then emits the flash-decoding pattern: tiny per-layer
+all-reduces of out/lse instead of huge score reductions).  long_500k
+(batch=1) shards the sequence over BOTH axes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+_UP_PAT = re.compile(
+    r"(wq|wk|wv|wg|wr|gate|up|in_proj|w_a|patch_proj|router)\W*\]?\[?'?w'?\]?$")
+_DOWN_PAT = re.compile(r"(wo|down|out_proj|w_b)\W*\]?\[?'?w'?\]?$")
+
+
+def _fsdp(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return dim % _axis_size(mesh, axis) == 0
+
+
+def param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
+    fsdp = _fsdp(mesh)
+    r = len(shape)
+    lead = (None,) * (r - 2)
+    if r < 2 or min(shape[-2:]) < 64:          # norms, biases, small leaves
+        return P()
+    if "router" in path:                       # replicated: shard_map MoE
+        return P()                             # reads it unsharded
+
+    # MoE experts: (..., E, D, F) / (..., E, F, D)
+    if "w_gate" in path or "w_up" in path:
+        e_lead = (None,) * (r - 3)
+        ep = "model" if _fits(shape[-3], mesh, "model") else None
+        dp = fsdp if _fits(shape[-2], mesh, fsdp) else None
+        return P(*e_lead, ep, dp, None)
+    if "w_down" in path:
+        e_lead = (None,) * (r - 3)
+        ep = "model" if _fits(shape[-3], mesh, "model") else None
+        dp = fsdp if _fits(shape[-1], mesh, fsdp) else None
+        return P(*e_lead, ep, None, dp)
+    if "embed" in path:                        # (V, D)
+        tp = "model" if _fits(shape[-2], mesh, "model") else None
+        dp = fsdp if _fits(shape[-1], mesh, fsdp) else None
+        return P(tp, dp)
+    if "lm_head" in path:                      # (D, V)
+        dp = fsdp if _fits(shape[-2], mesh, fsdp) else None
+        tp = "model" if _fits(shape[-1], mesh, "model") else None
+        return P(*lead, dp, tp)
+    if _DOWN_PAT.search(path):                 # (F, D) row-parallel
+        tp = "model" if _fits(shape[-2], mesh, "model") else None
+        dp = fsdp if _fits(shape[-1], mesh, fsdp) else None
+        return P(*lead, tp, dp)
+    # default / column-parallel: (D, F)
+    dp = fsdp if _fits(shape[-2], mesh, fsdp) else None
+    tp = "model" if _fits(shape[-1], mesh, "model") else None
+    return P(*lead, dp, tp)
+
+
+def params_shardings(mesh: Mesh, params_abs: Any) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_abs)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out.append(NamedSharding(mesh, param_spec(mesh, name, leaf.shape)))
+    return treedef.unflatten(out)
+
+
+def opt_shardings(mesh: Mesh, opt_abs: Any, params_sh: Any) -> Any:
+    """AdamW m/v mirror params; step scalar replicated."""
+    rep = NamedSharding(mesh, P())
+    return type(opt_abs)(step=rep, m=params_sh,
+                         v=jax.tree.map(lambda s: s, params_sh))
+
+
+# ------------------------------------------------------------------- batch
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig,
+                    batch_abs: Any) -> Any:
+    dp = _fsdp(mesh)
+    bsz = shape.global_batch
+
+    def spec(leaf):
+        b_axis = dp if bsz % _axis_size(mesh, dp) == 0 else (
+            "data" if bsz % _axis_size(mesh, "data") == 0 else None)
+        return NamedSharding(mesh, P(b_axis, *(None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec, batch_abs)
+
+
+# ------------------------------------------------------------------- state
+
+def state_shardings(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig,
+                    state_abs: Any) -> Any:
+    """Decode-state shardings (see module docstring)."""
+    dp = _fsdp(mesh)
+    b = shape.global_batch
+    # batch axis preference: full (pod, data) when divisible — matching the
+    # token sharding (a "data"-only cache forced a reshard every decode
+    # step on the 2-pod mesh); then "data"; else unsharded (long_500k)
+    b_ax = (dp if b % _axis_size(mesh, dp) == 0 else
+            ("data" if b % _axis_size(mesh, "data") == 0 else None))
+    long_ctx = b_ax is None
+
+    def spec(path, leaf):
+        name = jax.tree_util.keystr(path)
+        r = len(leaf.shape)
+        if r == 0:
+            return NamedSharding(mesh, P())
+        if re.search(r"\['k'\]|\['v'\]", name) and r >= 4:
+            # kv cache (..., B, Hkv, S, hd): sequence-shard S
+            lead = (None,) * (r - 4)
+            seq_c = leaf.shape[-2]
+            if long_ctx:
+                both = _axis_size(mesh, "data") * _axis_size(mesh, "model")
+                seq_ax = (("data", "model") if seq_c % both == 0 else
+                          ("model" if _fits(seq_c, mesh, "model") else None))
+                return NamedSharding(mesh, P(*lead, None, None, seq_ax, None))
+            s_ax = "model" if _fits(seq_c, mesh, "model") else None
+            return NamedSharding(mesh, P(*lead, b_ax, None, s_ax, None))
+        if ("wkv" in name or "ssm" in name) and r >= 4:
+            # recurrent state (..., B, H, *, *): batch + heads
+            lead = (None,) * (r - 4)
+            h_ax = "model" if leaf.shape[-3] % _axis_size(mesh, "model") == 0 \
+                else None
+            return NamedSharding(mesh, P(*lead, b_ax, h_ax, None, None))
+        if ("conv" in name or "time_x" in name or "chan_x" in name) and r >= 3:
+            lead = (None,) * (r - 3)
+            return NamedSharding(mesh, P(*lead, b_ax, None, None))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_abs)
+    return treedef.unflatten([spec(p, l) for p, l in flat])
+
+
+def logits_sharding(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig):
+    b_ok = shape.global_batch % _axis_size(mesh, "data") == 0
+    v_ok = cfg.vocab % _axis_size(mesh, "model") == 0
+    return NamedSharding(mesh, P("data" if b_ok else None, None,
+                                 "model" if v_ok else None))

@@ -1,0 +1,81 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero-allocation stand-ins — the dry-run lowers
+against these.  Modality frontends are STUBS: the specs provide precomputed
+patch/frame embeddings (assignment brief).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import lm
+
+S = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    text = s
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm" and cfg.num_patches:
+        text = s - cfg.num_patches            # early fusion keeps total = s
+        out["patches"] = S((b, cfg.num_patches, cfg.frontend_dim),
+                           jnp.float32)
+    if cfg.family == "encdec":
+        out["frames"] = S((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    out["tokens"] = S((b, text), jnp.int32)
+    out["labels"] = S((b, text), jnp.int32)
+    out["mask"] = S((b, text), jnp.float32)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    text = s
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm" and cfg.num_patches:
+        text = s - cfg.num_patches
+        out["patches"] = S((b, cfg.num_patches, cfg.frontend_dim),
+                           jnp.float32)
+    if cfg.family == "encdec":
+        out["frames"] = S((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    out["tokens"] = S((b, text), jnp.int32)
+    return out
+
+
+def decode_token_specs(shape: ShapeConfig) -> Any:
+    return S((shape.global_batch, 1), jnp.int32)
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """Abstract decode state with a cache of seq_len (one new token against
+    a seq_len KV cache — the assigned decode semantics)."""
+    b = shape.global_batch
+
+    if cfg.family == "encdec":
+        frames = S((b, cfg.num_patches, cfg.d_model), jnp.float32)
+        return jax.eval_shape(
+            lambda p, f: lm.init_decode_state(cfg, p, b, shape.seq_len,
+                                              batch={"frames": f}),
+            lm.abstract_params(cfg), frames)
+    return jax.eval_shape(
+        lambda p: lm.init_decode_state(cfg, p, b, shape.seq_len),
+        lm.abstract_params(cfg))
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return lm.abstract_params(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """The full lowering signature for a cell, keyed by step kind."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    return {"tokens": decode_token_specs(shape),
+            "state": decode_state_specs(cfg, shape)}

@@ -1,0 +1,72 @@
+"""Training driver (CPU-scale end-to-end; same code path the pod run uses).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch
+from ..data import HashTokenizer, PackedBatches, TextDataset, hospital_corpus
+from ..models import init_params
+from ..training import (AdamWConfig, LoopConfig, TrainLoop, adamw_init,
+                        make_train_step)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--trees", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=10,
+                          total_steps=args.steps)
+    opt_state = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      microbatches=args.microbatches))
+
+    corpus = hospital_corpus(num_trees=args.trees)
+    tok = HashTokenizer(cfg.vocab)
+    ds = TextDataset(corpus.documents, tok)
+    pb = PackedBatches(ds, batch_size=args.batch, seq_len=args.seq)
+
+    def batches():
+        for b in pb:
+            extra = {}
+            if cfg.family == "encdec":
+                extra["frames"] = jnp.zeros(
+                    (args.batch, cfg.num_patches, cfg.d_model), jnp.float32)
+            if cfg.family == "vlm" and cfg.num_patches:
+                extra["patches"] = jnp.zeros(
+                    (args.batch, cfg.num_patches, cfg.frontend_dim),
+                    jnp.float32)
+            yield {**{k: jnp.asarray(v) for k, v in b.items()}, **extra}
+
+    loop = TrainLoop(LoopConfig(total_steps=args.steps,
+                                ckpt_dir=args.ckpt_dir,
+                                ckpt_every=args.ckpt_every),
+                     step_fn, params, opt_state, batches(), pipeline=pb)
+    metrics = loop.run()
+    print(f"done at step {loop.step}: loss={float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

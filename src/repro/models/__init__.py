@@ -1,0 +1,8 @@
+"""Generator architectures (the LLM slot CFT-RAG augments)."""
+from .lm import (abstract_params, active_param_count, decode_step, forward,
+                 greedy_token, init_decode_state, init_params, loss_fn,
+                 param_count, prefill)
+
+__all__ = ["abstract_params", "active_param_count", "decode_step", "forward",
+           "greedy_token", "init_decode_state", "init_params", "loss_fn",
+           "param_count", "prefill"]

@@ -1,0 +1,25 @@
+"""Modality frontend STUBS (per assignment brief).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer BACKBONE only;
+the conv/ViT frontends are stubs — ``launch.specs.input_specs`` provides
+precomputed frame/patch embeddings of the right shape, and synthetic
+embeddings are generated here for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def stub_patches(cfg: ModelConfig, key, batch: int) -> jax.Array:
+    """Precomputed ViT patch embeddings (B, P, frontend_dim)."""
+    return jax.random.normal(key, (batch, cfg.num_patches, cfg.frontend_dim),
+                             jnp.float32) * 0.02
+
+
+def stub_frames(cfg: ModelConfig, key, batch: int) -> jax.Array:
+    """Precomputed audio conv-frontend frames (B, T, d_model)."""
+    return jax.random.normal(key, (batch, cfg.num_patches, cfg.d_model),
+                             jnp.float32) * 0.02

@@ -1,0 +1,151 @@
+"""Unified model API over all families: init / forward / loss / serve steps.
+
+`batch` dict convention (built by data/pipeline.py and launch/specs):
+  train:   {"tokens": (B,S) i32, "labels": (B,S) i32, "mask": (B,S) f32,
+            + "patches" (B,P,Fd) for vlm | "frames" (B,T,D) for encdec}
+  prefill: {"tokens": (B,S)} (+ modality inputs)
+  decode:  {"tokens": (B,1)} + the state threaded from prefill/init
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import transformer as T
+from .layers import Params
+
+
+# ------------------------------------------------------------------- init
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    if cfg.family == "mamba_hybrid":
+        return T.init_zamba_params(cfg, key)
+    if cfg.family == "rwkv":
+        return T.init_rwkv_params(cfg, key)
+    if cfg.family == "encdec":
+        return T.init_encdec_params(cfg, key)
+    return T.init_decoder_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig, key: Optional[jax.Array] = None):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_params(cfg, k), key)
+
+
+# ---------------------------------------------------------------- forward
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, Any]
+            ) -> jax.Array:
+    if cfg.family == "mamba_hybrid":
+        return T.zamba_forward(cfg, params, batch["tokens"])
+    if cfg.family == "rwkv":
+        return T.rwkv_forward(cfg, params, batch["tokens"])
+    if cfg.family == "encdec":
+        return T.encdec_forward(cfg, params, batch["tokens"], batch["frames"])
+    return T.decoder_forward(cfg, params, batch["tokens"],
+                             patches=batch.get("patches"))
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            z_loss: float = 1e-4) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Masked CE (+ z-loss). Labels for vlm cover text positions only —
+    patch positions carry mask 0 (specs pad labels/mask to the fused len)."""
+    logits = forward(cfg, params, batch)               # (B, L, V) f32
+    labels = batch["labels"]
+    mask = batch["mask"].astype(jnp.float32)
+    if logits.shape[1] != labels.shape[1]:             # early-fusion prefix
+        pad = logits.shape[1] - labels.shape[1]
+        logits = logits[:, pad:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    zl = jnp.sum(jnp.square(lse) * mask) / denom
+    loss = ce + z_loss * zl
+    return loss, {"ce": ce, "z_loss": zl,
+                  "tokens": jnp.sum(mask).astype(jnp.int32)}
+
+
+# ------------------------------------------------------------------ serve
+
+def init_decode_state(cfg: ModelConfig, params: Params, batch_size: int,
+                      cache_size: int, batch: Optional[Dict[str, Any]] = None
+                      ) -> Dict[str, Any]:
+    """Decode state for a fresh (or dry-run) cache of ``cache_size``."""
+    dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    if cfg.family == "mamba_hybrid":
+        return T.zamba_init_state(cfg, batch_size, cache_size, dtype)
+    if cfg.family == "rwkv":
+        return T.rwkv_init_state(cfg, batch_size, dtype)
+    if cfg.family == "encdec":
+        assert batch is not None and "frames" in batch
+        return T.encdec_init_state(cfg, params, batch["frames"], cache_size)
+    steps, per = T._moe_layout(cfg)
+    hd = cfg.resolved_head_dim
+    kv = lambda: {"k": jnp.zeros((steps, batch_size, cfg.n_kv_heads,
+                                  cache_size, hd), dtype),
+                  "v": jnp.zeros((steps, batch_size, cfg.n_kv_heads,
+                                  cache_size, hd), dtype)}
+    cache = ({"dense": kv(), "moe": kv()} if per == 2 else kv())
+    return {"cache": cache, "len": jnp.int32(0)}
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            cache_size: int) -> Tuple[jax.Array, Dict[str, Any]]:
+    if cfg.family == "rwkv":
+        logits, state = T.rwkv_forward(cfg, params, batch["tokens"],
+                                       collect=True)
+        return logits[:, -1:], state
+    if cfg.family == "encdec":
+        return T.encdec_prefill(cfg, params, batch["tokens"],
+                                batch["frames"], cache_size)
+    if cfg.family == "mamba_hybrid":
+        return T.zamba_prefill(cfg, params, batch["tokens"], cache_size)
+    return T.decoder_prefill(cfg, params, batch["tokens"], cache_size,
+                             patches=batch.get("patches"))
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                state: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B, 1) -> (logits (B,1,V), new state)."""
+    if cfg.family == "mamba_hybrid":
+        return T.zamba_decode(cfg, params, tokens, state)
+    if cfg.family == "rwkv":
+        return T.rwkv_decode(cfg, params, tokens, state)
+    if cfg.family == "encdec":
+        return T.encdec_decode(cfg, params, tokens, state)
+    return T.decoder_decode(cfg, params, tokens, state)
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+
+# -------------------------------------------------------------- accounting
+
+def param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k of num_experts routed)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    tree = abstract_params(cfg)
+    import numpy as np
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = jax.tree_util.keystr(path)
+        if any(t in name for t in ("w_gate", "w_up", "w_down")):
+            routed += int(np.prod(leaf.shape))
+    active_routed = routed * cfg.top_k // cfg.num_experts
+    return total - routed + active_routed

@@ -1,0 +1,118 @@
+"""RWKV6 "Finch" block — attention-free, data-dependent decay.
+
+Time-mix: static per-channel token-shift mixes for r/k/v/g + the Finch
+hallmark, a *data-dependent* decay w produced by a low-rank MLP of the
+token-shifted input: w = -exp(w0 + tanh(xw @ A) @ B) (log-decay <= 0 by
+construction).  The WKV recurrence runs through the shared linear_scan
+kernel in EXCLUSIVE mode (out_t = r_t . S_{t-1}) plus the u-bonus term for
+the current token.  Per-head GroupNorm, SiLU(g) gate, out-proj.
+
+Channel-mix: token-shifted squared-ReLU FFN with sigmoid receptance gate.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.linear_scan.ops import linear_scan
+from ..kernels.linear_scan.ref import linear_scan_chunked, linear_scan_ref
+from .layers import Params, dense, dense_init, groupnorm
+
+_LORA = 64        # decay low-rank width
+
+
+def init_rwkv6_time(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_a": (jax.random.normal(ks[5], (d, _LORA), jnp.float32) * 0.01
+                ).astype(dtype),
+        "w_b": (jax.random.normal(ks[6], (_LORA, d), jnp.float32) * 0.01
+                ).astype(dtype),
+        "u": (jax.random.normal(ks[7], (h, hd), jnp.float32) * 0.1
+              ).astype(jnp.float32),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+        "wo": dense_init(jax.random.fold_in(key, 99), d, d, dtype),
+    }
+
+
+def init_rwkv6_channel(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, d), jnp.float32).astype(dtype),
+        "wk": dense_init(ks[1], d, f, dtype),
+        "wv": dense_init(ks[2], f, d, dtype),
+        "wr": dense_init(jax.random.fold_in(key, 7), d, d, dtype),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """Token shift: x_{t-1}, with ``last`` as the t=0 predecessor (B,1,D)."""
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _heads(x, h):
+    b, l, d = x.shape
+    return x.reshape(b, l, h, d // h).transpose(0, 2, 1, 3)   # (B,H,L,hd)
+
+
+def rwkv6_time_mix(cfg: ModelConfig, p: Params, x: jax.Array,
+                   last_x: jax.Array, state: jax.Array,
+                   use_kernel: bool = False
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,L,D); last_x: (B,1,D); state: (B,H,hd,hd) WKV state.
+    Returns (out, new_last_x, new_state)."""
+    b, l, d = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    xp = _shift(x, last_x)
+    mu = p["mu"]
+    mix = lambda i: x + (xp - x) * mu[i]
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+
+    r = _heads(dense(p["wr"], xr), h)
+    k = _heads(dense(p["wk"], xk), h)
+    v = _heads(dense(p["wv"], xv), h)
+    g = dense(p["wg"], xg)
+
+    # Finch data-dependent decay (log-space, <= 0)
+    lora = jnp.tanh(xw @ p["w_a"]) @ p["w_b"]
+    w = -jnp.exp(p["w0"] + lora.astype(jnp.float32))          # (B,L,D)
+    gk = _heads(w.astype(x.dtype), h).astype(jnp.float32)     # (B,H,L,hd)
+
+    scan = linear_scan if use_kernel else linear_scan_chunked
+    kw = dict(inclusive=False)
+    if use_kernel:
+        kw["interpret"] = jax.default_backend() != "tpu"
+    wkv, new_state = scan(r, k, v, gk, state, **kw)           # (B,H,L,hd)
+    # u-bonus: current token's contribution weighted by u instead of decay
+    bonus = jnp.einsum("bhld,bhld->bhl", r.astype(jnp.float32),
+                       k.astype(jnp.float32) * p["u"][None, :, None, :])
+    wkv = wkv.astype(jnp.float32) + bonus[..., None] * v.astype(jnp.float32)
+
+    out = wkv.transpose(0, 2, 1, 3).reshape(b, l, d).astype(x.dtype)
+    out = groupnorm(out, h, p["gn_scale"], p["gn_bias"])
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return dense(p["wo"], out), x[:, -1:], new_state
+
+
+def rwkv6_channel_mix(cfg: ModelConfig, p: Params, x: jax.Array,
+                      last_x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    xp = _shift(x, last_x)
+    mu = p["mu"]
+    xk = x + (xp - x) * mu[0]
+    xr = x + (xp - x) * mu[1]
+    kk = dense(p["wk"], xk)
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(dense(p["wr"], xr).astype(jnp.float32)).astype(x.dtype)
+    return r * dense(p["wv"], kk), x[:, -1:]

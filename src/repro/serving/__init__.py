@@ -1,0 +1,6 @@
+"""Serving: engine (prefill/decode/scheduler) + the CFT-RAG pipeline."""
+from .engine import Request, ServeEngine, kv_cache_bytes
+from .rag import RAGAnswer, RAGPipeline
+
+__all__ = ["Request", "ServeEngine", "kv_cache_bytes", "RAGAnswer",
+           "RAGPipeline"]

@@ -1,0 +1,92 @@
+"""Serving engine: jitted prefill + decode loop with a continuous-lite
+batch scheduler.
+
+The decode step donates the cache/state buffers (no double-buffered KV), and
+greedy sampling runs on device.  The scheduler packs pending requests into
+fixed-size batches (padding short prompts) — the "continuous-lite" policy:
+new requests join at the next batch boundary rather than mid-flight, which
+keeps the step function shape-stable (one compilation per batch geometry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..data.tokenizer import HashTokenizer
+from ..models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    prompt_ids: List[int]
+    max_new_tokens: int = 16
+    out_ids: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, cache_size: int = 512,
+                 batch_size: int = 4):
+        self.cfg = cfg
+        self.params = params
+        self.cache_size = cache_size
+        self.batch_size = batch_size
+
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill, cfg, cache_size=cache_size))
+        self._decode = jax.jit(
+            functools.partial(lm.decode_step, cfg), donate_argnums=(2,))
+
+    # ----------------------------------------------------------- generate
+    def generate(self, batch: Dict[str, jax.Array], max_new_tokens: int
+                 ) -> np.ndarray:
+        """Greedy generation. batch['tokens']: (B, S) prompt ids."""
+        logits, state = self._prefill(self.params, batch)
+        tok = lm.greedy_token(logits)
+        out = [np.asarray(tok)]
+        for _ in range(max_new_tokens - 1):
+            logits, state = self._decode(self.params, tok, state)
+            tok = lm.greedy_token(logits)
+            out.append(np.asarray(tok))
+        return np.concatenate(out, axis=1)            # (B, new)
+
+    # ---------------------------------------------------------- scheduler
+    def serve(self, requests: Sequence[Request]) -> List[Request]:
+        """Continuous-lite: group requests into fixed batches, pad, run."""
+        pending = list(requests)
+        done: List[Request] = []
+        while pending:
+            group = pending[:self.batch_size]
+            pending = pending[self.batch_size:]
+            max_new = max(r.max_new_tokens for r in group)
+            # context-window truncation: keep the prompt tail (query end)
+            budget = self.cache_size - max_new
+            for r in group:
+                if len(r.prompt_ids) > budget:
+                    r.prompt_ids = r.prompt_ids[-budget:]
+            max_len = max(len(r.prompt_ids) for r in group)
+            toks = np.full((self.batch_size, max_len), HashTokenizer.PAD,
+                           np.int32)
+            for i, r in enumerate(group):     # left-pad to align last token
+                toks[i, max_len - len(r.prompt_ids):] = r.prompt_ids
+            out = self.generate({"tokens": jnp.asarray(toks)}, max_new)
+            for i, r in enumerate(group):
+                r.out_ids = out[i, :r.max_new_tokens].tolist()
+                done.append(r)
+        return done
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, cache_size: int) -> int:
+    """Sizing helper (used by roofline + admission control)."""
+    hd = cfg.resolved_head_dim
+    bpe = 2 if cfg.dtype == "bfloat16" else 4
+    if cfg.family == "rwkv":
+        return cfg.n_layers * batch * cfg.n_heads * hd * hd * 4
+    layers = cfg.n_layers if cfg.family != "mamba_hybrid" \
+        else cfg.n_layers // max(cfg.attn_every, 1)
+    return 2 * layers * batch * cfg.n_kv_heads * cache_size * hd * bpe

@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, grad accumulation, checkpoint, fault loop."""
+from .checkpoint import AsyncSaver, cleanup, latest_step, restore, save
+from .fault import LoopConfig, SimulatedPreemption, TrainLoop
+from .grad import make_train_step, quantize_grads_int8
+from .optimizer import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                        global_norm, schedule_lr)
+
+__all__ = [
+    "AsyncSaver", "cleanup", "latest_step", "restore", "save",
+    "LoopConfig", "SimulatedPreemption", "TrainLoop",
+    "make_train_step", "quantize_grads_int8",
+    "AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+    "global_norm", "schedule_lr",
+]

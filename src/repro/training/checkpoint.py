@@ -1,0 +1,134 @@
+"""Sharded, atomic, elastic checkpointing.
+
+* **Atomic**: written to ``<dir>/tmp.<step>`` and os.rename'd to
+  ``<dir>/step_<n>`` — a preemption mid-write never corrupts the latest
+  checkpoint (rename is atomic on POSIX).
+* **Elastic**: leaves are saved as full (host-gathered) arrays + a JSON
+  tree manifest; restore re-shards onto *any* mesh via device_put with that
+  mesh's NamedShardings — pod count can change between jobs.  (At true
+  multi-host scale each host writes its addressable shards and restore
+  reads per-shard files; the manifest format already carries the leaf
+  paths needed for that extension.)
+* **Async**: ``save_async`` hands the host copy to a worker thread so the
+  step loop is not blocked on disk.
+* Data-pipeline state and the step counter travel inside the checkpoint, so
+  resume replays nothing and skips nothing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _leaf_name(path) -> str:
+    return _SEP.join(re.sub(r"[^A-Za-z0-9_.-]", "_", str(p)) for p in path)
+
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [_leaf_name([getattr(k, 'key', getattr(k, 'idx', k))
+                         for k in path]) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Blocking atomic save. Returns the final checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    names, leaves, _ = _flatten_with_names(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fn = f"{name}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fn, "dtype": str(arr.dtype),
+             "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncSaver:
+    """One-slot background saver (latest request wins)."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save_async(self, ckpt_dir: str, step: int, tree: Any,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=lambda: setattr(self, "last_path",
+                                   save(ckpt_dir, step, host_tree, extra)),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, target_tree: Any, step: Optional[int] = None,
+            shardings: Optional[Any] = None
+            ) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore into the structure of ``target_tree``; optionally re-shard
+    every leaf with the matching ``shardings`` pytree (elastic restore)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    assert step is not None, f"no checkpoint under {ckpt_dir}"
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {l["name"]: l for l in manifest["leaves"]}
+
+    names, leaves, treedef = _flatten_with_names(target_tree)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    out = []
+    for name, ref, shard in zip(names, leaves, shard_leaves):
+        rec = by_name[name]
+        arr = np.load(os.path.join(path, rec["file"]))
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out), step, manifest.get("extra", {})
+
+
+def cleanup(ckpt_dir: str, keep_last: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for s in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,70 @@
+"""The paper's comparison invariant: all four retrievers locate the same
+entity addresses (CF may only add fingerprint-collision false positives,
+measured ~0 at the paper's load factor)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BloomTRAG, BloomTRAG2, CFTRAG, NaiveTRAG,
+                        build_forest, build_index)
+from repro.data import hospital_corpus, unhcr_corpus
+
+
+@pytest.mark.parametrize("corpus_fn,trees", [(hospital_corpus, 25),
+                                             (unhcr_corpus, 8)])
+def test_all_methods_agree_on_corpora(corpus_fn, trees):
+    c = corpus_fn(num_trees=trees, num_queries=6)
+    forest = build_forest(c.trees)
+    idx = build_index(forest, num_buckets=1024)
+    cf = CFTRAG(idx)
+    naive = NaiveTRAG(forest)
+    b1 = BloomTRAG(forest)
+    b2 = BloomTRAG2(forest)
+    rng = random.Random(0)
+    probe = rng.sample(forest.entity_names, min(60, forest.num_entities))
+    probe += ["Unknown Entity X", "Nobody"]
+    for nm in probe:
+        expect = sorted(naive.locate(nm))
+        assert sorted(cf.locate(nm)) == expect, nm
+        assert sorted(b1.locate(nm)) == expect, nm
+        assert sorted(b2.locate(nm)) == expect, nm
+
+
+def test_contexts_match():
+    c = hospital_corpus(num_trees=10, num_queries=4)
+    forest = build_forest(c.trees)
+    idx = build_index(forest)
+    cf = CFTRAG(idx, sort_every=1)
+    naive = NaiveTRAG(forest)
+    for q in c.query_entities:
+        a = cf.retrieve(q)
+        b = naive.retrieve(q, n=3)
+        for ca, cb in zip(a, b):
+            assert ca.locations == cb.locations
+            assert ca.up == cb.up and ca.down == cb.down
+
+
+def test_blocklist_vs_csr_paths():
+    c = hospital_corpus(num_trees=10)
+    forest = build_forest(c.trees)
+    idx = build_index(forest)
+    faithful = CFTRAG(idx, use_csr=False)
+    fast = CFTRAG(idx, use_csr=True)
+    for nm in forest.entity_names[:50]:
+        assert sorted(faithful.locate(nm)) == sorted(fast.locate(nm))
+
+
+name = st.text(alphabet="xyzw", min_size=1, max_size=3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.tuples(name, name), min_size=1, max_size=12),
+                min_size=1, max_size=6))
+def test_property_cf_equals_naive(trees):
+    forest = build_forest([list(t) for t in trees])
+    idx = build_index(forest, num_buckets=256)
+    cf = CFTRAG(idx)
+    naive = NaiveTRAG(forest)
+    for nm in forest.entity_names:
+        assert sorted(cf.locate(nm)) == sorted(naive.locate(nm)), nm

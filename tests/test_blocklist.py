@@ -1,0 +1,34 @@
+"""Block-linked-list arena vs CSR arena equivalence."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BlockListBuilder, build_csr
+
+addr = st.tuples(st.integers(0, 600), st.integers(0, 5000))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(addr, max_size=17), min_size=1, max_size=20),
+       st.integers(1, 7))
+def test_arena_csr_equivalence(address_lists, block_cap):
+    b = BlockListBuilder(block_cap=block_cap)
+    heads = [b.add_entity(a) for a in address_lists]
+    arena = b.build()
+    csr = build_csr(address_lists)
+    for eid, (head, addrs) in enumerate(zip(heads, address_lists)):
+        assert arena.walk(head) == [tuple(map(int, a)) for a in addrs]
+        assert csr.walk(eid) == [tuple(map(int, a)) for a in addrs]
+
+
+def test_block_chaining():
+    b = BlockListBuilder(block_cap=2)
+    head = b.add_entity([(0, 1), (0, 2), (1, 3), (2, 4), (2, 5)])
+    arena = b.build()
+    assert arena.num_blocks == 3            # ceil(5/2)
+    assert arena.walk(head) == [(0, 1), (0, 2), (1, 3), (2, 4), (2, 5)]
+
+
+def test_empty_entity():
+    b = BlockListBuilder()
+    head = b.add_entity([])
+    assert head == -1
+    assert b.build().walk(head) == []

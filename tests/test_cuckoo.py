@@ -1,0 +1,124 @@
+"""Cuckoo filter unit + property tests (paper §3, §4.5 claims)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CuckooFilter, build_forest, build_index
+from repro.core import hashing
+
+
+def _hashes(n, seed=0):
+    return hashing.hash_entities([f"entity {seed}_{i}" for i in range(n)])
+
+
+def test_insert_lookup_basic():
+    f = CuckooFilter(num_buckets=64)
+    hs = _hashes(100)
+    for i, h in enumerate(hs):
+        f.insert(int(h), head=i, entity_id=i)
+    for i, h in enumerate(hs):
+        hit, head = f.lookup(int(h), bump=False)
+        assert hit and head == i
+
+
+def test_delete():
+    f = CuckooFilter(num_buckets=64)
+    hs = _hashes(50)
+    for i, h in enumerate(hs):
+        f.insert(int(h), i, i)
+    for h in hs[:25]:
+        assert f.delete(int(h))
+    for h in hs[:25]:
+        assert not f.contains(int(h))       # no false negatives after delete
+    for i, h in enumerate(hs[25:], start=25):
+        hit, head = f.lookup(int(h), bump=False)
+        assert hit and head == i
+    assert f.num_items == 25
+
+
+def test_eviction_chain_under_load():
+    """Insertions past bucket conflicts must relocate, not lose items."""
+    f = CuckooFilter(num_buckets=16, load_threshold=0.99)
+    hs = _hashes(48)                       # 75% of 16*4 slots
+    for i, h in enumerate(hs):
+        f.insert(int(h), i, i)
+    for i, h in enumerate(hs):
+        assert f.contains(int(h)), i
+
+
+def test_expansion():
+    f = CuckooFilter(num_buckets=8, load_threshold=0.9)
+    hs = _hashes(200)
+    for i, h in enumerate(hs):
+        f.insert(int(h), i, i)
+    assert f.num_expansions >= 1
+    assert f.num_buckets > 8
+    for i, h in enumerate(hs):
+        hit, head = f.lookup(int(h), bump=False)
+        assert hit and head == i
+    assert f.load_factor <= 0.95
+
+
+def test_false_positive_rate():
+    """12-bit fingerprints: fp rate ~ 2 * 4 / 4096 ~ 0.2% (paper: ~0)."""
+    f = CuckooFilter(num_buckets=1024)
+    for i, h in enumerate(_hashes(3148)):   # paper's entity count
+        f.insert(int(h), i, i)
+    probes = _hashes(20000, seed=99)
+    fp = sum(f.contains(int(h)) for h in probes)
+    assert fp / len(probes) < 0.01
+
+
+def test_temperature_bump_and_sort():
+    f = CuckooFilter(num_buckets=32)
+    hs = _hashes(60)
+    for i, h in enumerate(hs):
+        f.insert(int(h), i, i)
+    hot = hs[7]
+    for _ in range(5):
+        f.lookup(int(hot))
+    f.sort_buckets()
+    # the hot entity must sit at slot 0 of its bucket
+    loc = f._find(np.uint32(hot))
+    assert loc is not None and loc[1] == 0
+    # sort preserves membership + payloads
+    for i, h in enumerate(hs):
+        hit, head = f.lookup(int(h), bump=False)
+        assert hit and head == i
+
+
+def test_paper_load_factor_scenario():
+    """3148 entities / 1024 buckets x 4 slots = 0.7686 (paper §4.5.1)."""
+    forest = build_forest([[(f"root{t}", f"e{t}_{i}") for i in range(7)]
+                           for t in range(450)])
+    idx = build_index(forest, num_buckets=1024)
+    assert idx.filter.num_buckets == 1024   # no expansion needed
+    assert 0.5 < idx.filter.load_factor < 0.95
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.text(min_size=1, max_size=20), min_size=1, max_size=120,
+                unique=True))
+def test_property_insert_then_find(names):
+    f = CuckooFilter(num_buckets=32)
+    hs = hashing.hash_entities(names)
+    for i, h in enumerate(hs):
+        f.insert(int(h), i, i)
+    for i, h in enumerate(hs):
+        assert f.contains(int(h))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.text(min_size=1, max_size=12), min_size=2, max_size=60,
+                unique=True),
+       st.data())
+def test_property_delete_keeps_others(names, data):
+    f = CuckooFilter(num_buckets=32)
+    hs = hashing.hash_entities(names)
+    for i, h in enumerate(hs):
+        f.insert(int(h), i, i)
+    victim = data.draw(st.integers(0, len(names) - 1))
+    f.delete(int(hs[victim]))
+    for i, h in enumerate(hs):
+        if i != victim:
+            assert f.contains(int(h))

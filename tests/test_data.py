@@ -1,0 +1,74 @@
+"""Data substrate: NER, relations, tokenizer, pipeline determinism."""
+import numpy as np
+
+from repro.data import (HashTokenizer, PackedBatches, TextDataset,
+                        extract_relations, filter_relations, hospital_corpus,
+                        recognize_entities, unhcr_corpus)
+from repro.data.filtering import is_forest
+from repro.data.ner import build_gazetteer
+
+
+def test_ner_gazetteer_exact():
+    gaz = build_gazetteer(["Cardiology Ward A", "Oncology Center",
+                           "Dr House"])
+    ents = recognize_entities(
+        "What is the history of Cardiology Ward A and Oncology Center?", gaz)
+    assert ents == ["Cardiology Ward A", "Oncology Center"]
+
+
+def test_ner_heuristic_fallback():
+    ents = recognize_entities("The Relief Bureau reports to Field Mission.")
+    assert "Relief Bureau" in ents and "Field Mission" in ents
+
+
+def test_relation_patterns():
+    text = ("Ward A belongs to Cardiology Dept. "
+            "Oncology Center contains Ward B. "
+            "Lab One and Lab Two belong to Pathology Dept.")
+    ents = ["Ward A", "Ward B", "Cardiology Dept", "Oncology Center",
+            "Lab One", "Lab Two", "Pathology Dept"]
+    edges = extract_relations(text, entities=ents)
+    assert ("Cardiology Dept", "Ward A") in edges
+    assert ("Oncology Center", "Ward B") in edges
+    assert ("Pathology Dept", "Lab One") in edges       # conjunction
+    assert ("Pathology Dept", "Lab Two") in edges
+
+
+def test_corpus_extraction_recovers_gold():
+    c = hospital_corpus(num_trees=12)
+    recovered, gold_total = 0, 0
+    for doc, gold in zip(c.documents[:6], c.trees[:6]):
+        edges = filter_relations(extract_relations(doc, entities=c.entities))
+        assert is_forest(edges)
+        gold_set = set(gold)
+        recovered += sum(1 for e in edges if e in gold_set)
+        gold_total += len(gold_set)
+    assert recovered / gold_total > 0.8
+
+
+def test_tokenizer_deterministic_and_bounded():
+    tok = HashTokenizer(vocab_size=1000)
+    ids = tok.encode("Cardiology Ward A belongs to Hospital.", bos=True,
+                     eos=True)
+    assert ids[0] == tok.BOS and ids[-1] == tok.EOS
+    assert all(0 <= i < 1000 for i in ids)
+    assert ids == tok.encode("Cardiology Ward A belongs to Hospital.",
+                             bos=True, eos=True)
+
+
+def test_pipeline_sharding_and_resume():
+    c = unhcr_corpus(num_trees=6)
+    tok = HashTokenizer(4096)
+    ds0 = TextDataset(c.documents, tok, host_id=0, num_hosts=2)
+    ds1 = TextDataset(c.documents, tok, host_id=1, num_hosts=2)
+    assert not np.array_equal(ds0.epoch_tokens(0)[:64], ds1.epoch_tokens(0)[:64])
+
+    pb = PackedBatches(ds0, batch_size=2, seq_len=64, prefetch=False)
+    b1 = pb.next_batch()
+    st = pb.checkpoint_state()
+    b2 = pb.next_batch()
+    pb.restore_state(st)
+    b3 = pb.next_batch()
+    np.testing.assert_array_equal(b2["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])

@@ -1,0 +1,69 @@
+"""Device-side batched lookup semantics vs host filter; temperature path."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CFTDeviceState, build_forest, build_index,
+                        bump_temperature, lookup_batch, retrieve_device,
+                        sort_buckets)
+from repro.core import hashing
+from repro.data import hospital_corpus
+
+
+def _setup(trees=20):
+    c = hospital_corpus(num_trees=trees)
+    forest = build_forest(c.trees)
+    idx = build_index(forest, num_buckets=1024)
+    return c, forest, idx
+
+
+def test_lookup_batch_matches_host():
+    _, forest, idx = _setup()
+    t = idx.filter.tables()
+    names = forest.entity_names[:100] + [f"missing {i}" for i in range(20)]
+    hs = hashing.hash_entities(names)
+    res = lookup_batch(jnp.asarray(t.fingerprints), jnp.asarray(t.heads),
+                       jnp.asarray(hs))
+    for i, nm in enumerate(names):
+        hit, head = idx.filter.lookup(int(hs[i]), bump=False)
+        assert bool(res.hit[i]) == hit, nm
+        if hit:
+            assert int(res.head[i]) == head, nm
+
+
+def test_bump_and_sort_device():
+    _, forest, idx = _setup(trees=5)
+    t = idx.filter.tables()
+    fps = jnp.asarray(t.fingerprints)
+    temps = jnp.asarray(t.temperature)
+    heads = jnp.asarray(t.heads)
+    eids = jnp.asarray(t.entity_ids)
+    h = jnp.asarray(hashing.hash_entities([forest.entity_names[3]] * 4))
+    res = lookup_batch(fps, heads, h)
+    temps2 = bump_temperature(temps, res)
+    assert int(temps2.sum()) == int(temps.sum()) + 4
+    fps2, temps3, heads2, eids2 = sort_buckets(fps, temps2, heads, eids)
+    # hot entity now at slot 0 of its bucket; membership preserved
+    res2 = lookup_batch(fps2, heads2, h)
+    assert bool(res2.hit[0]) and int(res2.slot[0]) == 0
+    assert int((fps2 != 0).sum()) == int((fps != 0).sum())
+
+
+def test_retrieve_device_matches_host_contexts():
+    _, forest, idx = _setup(trees=10)
+    state = CFTDeviceState.from_index(idx)
+    names = forest.entity_names[:32]
+    hs = jnp.asarray(hashing.hash_entities(names))
+    out = retrieve_device(state, hs, max_locs=6, n=3)
+    for i, nm in enumerate(names):
+        eid = forest.name_to_id[nm]
+        gold_locs = sorted(n for _, n in forest.entity_locations[eid])[:6]
+        got = sorted(int(v) for v in np.asarray(out.locations[i]) if v >= 0)
+        assert got == gold_locs[:len(got)] and len(got) == min(6, len(gold_locs))
+        # ancestors per location must match host walk
+        for j, node in enumerate(np.asarray(out.locations[i])):
+            if node < 0:
+                continue
+            up = [int(u) for u in np.asarray(out.up[i, j]) if u >= 0]
+            assert up == forest.ancestors(int(node), 3)
+            down = [int(dn) for dn in np.asarray(out.down[i, j]) if dn >= 0]
+            assert down == forest.descendants(int(node), 3)

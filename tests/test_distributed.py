@@ -1,0 +1,182 @@
+"""Distribution tests — run in SUBPROCESSES with XLA host-device counts so
+the main pytest process keeps its single default device (dry-run rule:
+never set the flag globally)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=520)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_filter_lookup():
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import build_forest, build_index, lookup_batch
+    from repro.core import hashing
+    from repro.core.distributed import shard_filter_tables, sharded_lookup
+    from repro.data import hospital_corpus
+
+    c = hospital_corpus(num_trees=15)
+    forest = build_forest(c.trees)
+    idx = build_index(forest, num_buckets=256)
+    t = idx.filter.tables()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    fps, heads = shard_filter_tables(mesh, "model",
+                                     jnp.asarray(t.fingerprints),
+                                     jnp.asarray(t.heads))
+    names = forest.entity_names[:64] + ["missing A", "missing B"]
+    h = jnp.asarray(hashing.hash_entities(names))
+    ref = lookup_batch(jnp.asarray(t.fingerprints), jnp.asarray(t.heads), h)
+    got = sharded_lookup(mesh, "model", fps, heads, h)
+    np.testing.assert_array_equal(np.asarray(ref.hit), np.asarray(got.hit))
+    np.testing.assert_array_equal(np.asarray(ref.head), np.asarray(got.head))
+    print("sharded lookup OK")
+    """)
+
+
+def test_small_mesh_train_step_sharded():
+    """Sharded train step == single-device train step (tiny dense model)."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_arch
+    from repro.models import init_params, runtime
+    from repro.training import AdamWConfig, adamw_init, make_train_step
+    from repro.launch import sharding as sh
+
+    # capacity_factor high enough that no tokens drop: per-shard capacity
+    # (sharded path) and global capacity (local path) then agree exactly
+    cfg = get_arch("granite-moe-1b-a400m").smoke().replace(
+        d_model=128, num_experts=4, top_k=2, capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (8, 32), 4, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+             "mask": jnp.ones((8, 32), jnp.float32)}
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+
+    p1, _, m1 = make_train_step(cfg, ocfg)(params, adamw_init(params), batch)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    runtime.set_mesh(mesh, ("data",))
+    params_sh = sh.params_shardings(mesh, jax.eval_shape(lambda: params))
+    opt_abs = jax.eval_shape(adamw_init, params)
+    opt_sh = sh.opt_shardings(mesh, opt_abs, params_sh)
+    bs = jax.tree.map(lambda t: NamedSharding(
+        mesh, P("data", *(None,) * (t.ndim - 1))), batch)
+    step = make_train_step(cfg, ocfg, param_shardings=params_sh,
+                           data_axes=("data",))
+    with mesh:
+        fn = jax.jit(step, in_shardings=(params_sh, opt_sh, bs),
+                     out_shardings=(params_sh, opt_sh, None))
+        p2, _, m2 = fn(jax.device_put(params, params_sh),
+                       jax.device_put(adamw_init(params), opt_sh),
+                       jax.device_put(batch, bs))
+    runtime.clear_mesh()
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3, \
+        (float(m1["loss"]), float(m2["loss"]))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+    print("sharded train step OK")
+    """)
+
+
+def test_elastic_checkpoint_restore_across_meshes():
+    """Save on a (2,4) mesh, restore onto (4,2) — elastic re-shard."""
+    _run("""
+    import tempfile, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_arch
+    from repro.models import init_params
+    from repro.training import adamw_init, restore, save
+    from repro.launch import sharding as sh
+
+    cfg = get_arch("qwen2-0.5b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"))
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"))
+    sh_a = sh.params_shardings(mesh_a, jax.eval_shape(lambda: params))
+    sh_b = sh.params_shardings(mesh_b, jax.eval_shape(lambda: params))
+    placed = jax.device_put(params, sh_a)
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 1, {"params": placed})
+        got, step, _ = restore(d, {"params": params},
+                               shardings={"params": sh_b})
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(got["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("elastic restore OK")
+    """)
+
+
+def test_moe_small_batch_token_routing():
+    """Decode-scale MoE: token-routed path == local path (weights resident)."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_arch
+    from repro.models import moe as M
+
+    cfg = get_arch("granite-moe-1b-a400m").smoke().replace(
+        d_model=64, num_experts=8, top_k=2, d_ff=32, capacity_factor=8.0,
+        shared_expert=True)
+    p = M.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, 64), jnp.float32)
+    y_local = M._moe_apply_local(cfg, p, x)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    with mesh:
+        y_small = M._moe_small_batch(cfg, p, x, mesh, ("data",), "model", 2)
+    np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_small),
+                               atol=2e-5, rtol=2e-5)
+    print("token-routed MoE OK")
+    """)
+
+
+def test_mini_dryrun_multi_pod_mesh():
+    """A miniature multi-pod mesh (2,2,2) lower+compile for a smoke arch —
+    proves the pod axis shards end to end without the 512-device cost."""
+    _run("""
+    import jax, jax.numpy as jnp
+    from repro.configs import get_arch, SHAPES
+    from repro.launch import sharding as sh, specs
+    from repro.models import lm, runtime
+    from repro.training.grad import make_train_step
+    from repro.training.optimizer import AdamWConfig, adamw_init
+    import dataclasses
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    runtime.set_mesh(mesh, ("pod", "data"))
+    cfg = get_arch("qwen2-0.5b").smoke()
+    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                global_batch=8)
+    params_abs = specs.params_specs(cfg)
+    params_sh = sh.params_shardings(mesh, params_abs)
+    with mesh:
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        opt_sh = sh.opt_shardings(mesh, opt_abs, params_sh)
+        batch_abs = specs.train_batch_specs(cfg, shape)
+        batch_sh = sh.batch_shardings(mesh, cfg, shape, batch_abs)
+        step = make_train_step(cfg, AdamWConfig(), microbatches=2,
+                               param_shardings=params_sh,
+                               data_axes=("pod", "data"))
+        c = jax.jit(step, in_shardings=(params_sh, opt_sh, batch_sh),
+                    out_shardings=(params_sh, opt_sh, None)
+                    ).lower(params_abs, opt_abs, batch_abs).compile()
+    assert c.memory_analysis() is not None
+    print("mini multi-pod dryrun OK")
+    """, devices=8)

@@ -1,0 +1,113 @@
+"""Per-arch smoke tests (REQUIRED: reduced config, one forward/train step on
+CPU, output shapes + no NaNs) and prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_arch
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn, prefill)
+from repro.training import AdamWConfig, adamw_init, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key, seq=S):
+    toks = jax.random.randint(key, (B, seq), 4, cfg.vocab)
+    batch = {"tokens": toks,
+             "labels": jnp.roll(toks, -1, axis=1),
+             "mask": jnp.ones((B, seq), jnp.float32)}
+    if cfg.family == "vlm" and cfg.num_patches:
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.num_patches, cfg.frontend_dim), jnp.float32) * 0.02
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.num_patches, cfg.d_model), jnp.float32) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_arch(arch).smoke()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    logits = forward(cfg, params, batch)
+    expected_len = S + (cfg.num_patches if cfg.family == "vlm"
+                        and cfg.num_patches else 0)
+    assert logits.shape == (B, expected_len, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1,
+                                            total_steps=4))
+    params2, opt2, metrics = step(params, adamw_init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert not any(bool(jnp.any(jnp.isnan(l)))
+                   for l in jax.tree.leaves(params2))
+
+
+@pytest.mark.parametrize("arch", ["yi-34b", "qwen2-0.5b",
+                                  "granite-moe-1b-a400m",
+                                  "llama4-maverick-400b-a17b",
+                                  "rwkv6-1.6b", "zamba2-7b", "whisper-base"])
+def test_prefill_decode_consistency(arch):
+    cfg = get_arch(arch).smoke().replace(attn_impl="reference",
+                                         capacity_factor=64.0)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    seq = 16
+    toks = jax.random.randint(key, (B, seq + 1), 4, cfg.vocab)
+    batch = {"tokens": toks[:, :seq]}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.num_patches, cfg.d_model), jnp.float32) * 0.02
+
+    full = forward(cfg, params, dict(batch))
+    lg_pre, state = prefill(cfg, params, batch, cache_size=32)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, -1]),
+                               np.asarray(full[:, -1]), atol=2e-3, rtol=2e-3)
+    full2 = forward(cfg, params, {**batch, "tokens": toks})
+    lg_dec, _ = decode_step(cfg, params, toks[:, seq:seq + 1], state)
+    np.testing.assert_allclose(np.asarray(lg_dec[:, -1]),
+                               np.asarray(full2[:, -1]), atol=2e-3, rtol=2e-3)
+
+
+def test_decode_steps_chain():
+    """Multiple decode steps stay consistent with teacher-forced forward."""
+    cfg = get_arch("qwen2-0.5b").smoke().replace(attn_impl="reference")
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (B, 20), 4, cfg.vocab)
+    lg, state = prefill(cfg, params, {"tokens": toks[:, :16]}, cache_size=32)
+    for i in range(16, 20):
+        full = forward(cfg, params, {"tokens": toks[:, :i + 1]})
+        lg, state = decode_step(cfg, params, toks[:, i:i + 1], state)
+        np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                                   np.asarray(full[:, -1]),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_blocked_attention_equals_reference():
+    cfg_ref = get_arch("yi-34b").smoke().replace(attn_impl="reference")
+    cfg_blk = cfg_ref.replace(attn_impl="blocked", attn_chunk=16)
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg_ref, key)
+    batch = _batch(cfg_ref, key, seq=50)
+    a = forward(cfg_ref, params, batch)
+    b = forward(cfg_blk, params, batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_vocab_padding_masked():
+    cfg = get_arch("whisper-base").smoke().replace(vocab=500)  # pads to 512
+    assert cfg.padded_vocab == 512
+    key = jax.random.PRNGKey(4)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    batch["tokens"] = jnp.clip(batch["tokens"], 0, 499)
+    logits = forward(cfg, params, batch)
+    assert logits.shape[-1] == 512
+    assert float(jnp.max(logits[..., 500:])) < -1e29   # padded ids masked

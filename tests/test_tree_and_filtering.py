@@ -1,0 +1,70 @@
+"""Entity forest construction + relationship filtering properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_forest
+from repro.data.filtering import filter_relations, is_forest
+
+name = st.text(alphabet="abcdef", min_size=1, max_size=3)
+edge = st.tuples(name, name)
+
+
+def test_forest_basic():
+    f = build_forest([[("a", "b"), ("a", "c"), ("b", "d")]])
+    assert f.num_nodes == 4
+    na = f.name_to_id["a"]
+    nd = f.name_to_id["d"]
+    d_node = [g for g in range(4) if f.entity_id[g] == nd][0]
+    assert f.ancestors(d_node, 3) == [f.name_to_id["b"], na]
+    a_node = [g for g in range(4) if f.entity_id[g] == na][0]
+    assert set(f.descendants(a_node, 3)) == {f.name_to_id["b"],
+                                             f.name_to_id["c"],
+                                             f.name_to_id["d"]}
+
+
+def test_forest_cycle_guard():
+    """Adversarial edges must never detach nodes from the roots."""
+    f = build_forest([[("a", "b"), ("b", "c"), ("c", "a")]])   # cycle edge
+    reachable = set()
+    stack = list(f.roots)
+    while stack:
+        g = stack.pop()
+        reachable.add(g)
+        stack.extend(int(c) for c in f.children(g))
+    assert reachable == set(range(f.num_nodes))
+
+
+def test_filter_rules():
+    edges = [("a", "a"),                  # self loop
+             ("a", "b"), ("a", "b"),      # duplicate
+             ("b", "c"), ("c", "a"),      # cycle back-edge
+             ("a", "c")]                  # transitive (a->b->c exists)
+    out = filter_relations(edges)
+    assert ("a", "a") not in out
+    assert out.count(("a", "b")) == 1
+    assert ("c", "a") not in out
+    assert ("a", "c") not in out
+    assert is_forest(out)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(edge, max_size=40))
+def test_property_filter_yields_forest(edges):
+    out = filter_relations(edges)
+    assert is_forest(out)
+    # no edge is invented
+    assert set(out) <= set(edges)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(edge, max_size=30))
+def test_property_forest_build_total(edges):
+    """build_forest never crashes and preserves reachability from roots."""
+    f = build_forest([list(edges)])
+    reachable = set()
+    stack = list(f.roots)
+    while stack:
+        g = stack.pop()
+        reachable.add(g)
+        stack.extend(int(c) for c in f.children(g))
+    assert reachable == set(range(f.num_nodes))
