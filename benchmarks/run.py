@@ -1,21 +1,28 @@
 """Benchmark entry point — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus the human tables from
-each module's main()).  ``python -m benchmarks.run [--fast]``.
+each module's main()).  ``python -m benchmarks.run [--fast|--smoke]``
+(``--smoke`` is the CI-sized variant: tiny inputs, every harness exercised).
 """
 from __future__ import annotations
 
 import sys
 
-from . import (bench_fig5, bench_filter, bench_kernels, bench_serving,
-               bench_table1, bench_table2)
+from . import (bench_bank, bench_fig5, bench_filter, bench_kernels,
+               bench_serving, bench_table1, bench_table2)
 
 
 def main() -> None:
-    fast = "--fast" in sys.argv
+    unknown = [a for a in sys.argv[1:] if a not in ("--fast", "--smoke")]
+    if unknown:        # a typo'd flag must not silently run the full suite
+        sys.exit(f"usage: python -m benchmarks.run [--fast|--smoke] "
+                 f"(unknown: {' '.join(unknown)})")
+    smoke = "--smoke" in sys.argv
+    fast = smoke or "--fast" in sys.argv
     csv = []
 
-    tree_counts = (50, 120) if fast else (50, 300, 600)
+    tree_counts = ((12, 25) if smoke else
+                   (50, 120) if fast else (50, 300, 600))
     rows = bench_table1.run(tree_counts=tree_counts)
     print("\n== Table 1: retrieval time vs #trees ==")
     print(f"{'trees':>6s} {'algo':>6s} {'time_s':>12s} {'speedup':>9s} "
@@ -26,9 +33,10 @@ def main() -> None:
         csv.append((f"table1/trees{r['trees']}/{r['algo']}",
                     r["time_s"] * 1e6, r["speedup_vs_naive"]))
 
-    ent_counts = (5, 10) if fast else (5, 10, 20)
+    ent_counts = (5,) if smoke else (5, 10) if fast else (5, 10, 20)
     rows = bench_table2.run(entity_counts=ent_counts,
-                            num_trees=120 if fast else 600)
+                            num_trees=25 if smoke else
+                            120 if fast else 600)
     print("\n== Table 2: retrieval time vs #entities per query ==")
     print(f"{'ents':>5s} {'algo':>6s} {'time_s':>12s} {'speedup':>9s} "
           f"{'acc':>6s}")
@@ -38,12 +46,12 @@ def main() -> None:
         csv.append((f"table2/ents{r['entities']}/{r['algo']}",
                     r["time_s"] * 1e6, r["speedup_vs_naive"]))
 
-    rows = bench_fig5.run(num_trees=60 if fast else 300,
-                          rounds=4 if fast else 8)
+    rows = bench_fig5.run(num_trees=20 if smoke else 60 if fast else 300,
+                          rounds=2 if smoke else 4 if fast else 8)
     print("\n== Figure 5: temperature-sort ablation (per round) ==")
     print(f"{'round':>6s} {'unsorted_probes':>16s} {'sorted_probes':>14s} "
           f"{'gain':>6s}")
-    nr = 4 if fast else 8
+    nr = 2 if smoke else 4 if fast else 8
     for rnd in range(1, nr + 1):
         u = next(r for r in rows if not r["sorted"] and r["round"] == rnd)
         s = next(r for r in rows if r["sorted"] and r["round"] == rnd)
@@ -51,20 +59,40 @@ def main() -> None:
         print(f"{rnd:6d} {u['probes']:16d} {s['probes']:14d} {gain:6.2f}")
         csv.append((f"fig5/round{rnd}/sorted", s["time_s"] * 1e6, gain))
 
-    er = bench_filter.error_rate(probes=20_000 if fast else 100_000)
+    er = bench_filter.error_rate(probes=2_000 if smoke else
+                                 20_000 if fast else 100_000)
     print("\n== Filter: load factor / error rate ==")
     for k, v in er.items():
         print(f"  {k}: {v}")
     csv.append(("filter/error_rate", 0.0, er["false_positive_rate"]))
     csv.append(("filter/load_factor", 0.0, er["load_factor"]))
 
-    bv = bench_filter.batched_vs_sequential(num_trees=60 if fast else 300,
-                                            batch=256 if fast else 512)
+    bv = bench_filter.batched_vs_sequential(
+        num_trees=20 if smoke else 60 if fast else 300,
+        batch=128 if smoke else 256 if fast else 512)
     print("\n== Batched device lookup vs sequential host loop ==")
     for k, v in bv.items():
         print(f"  {k}: {v}")
     csv.append(("filter/batched_speedup", bv["vectorized_s"] * 1e6,
                 bv["speedup"]))
+
+    bank_trees = ((1, 4) if smoke else (1, 8, 64) if fast
+                  else (1, 8, 64, 256))
+    rows = bench_bank.run(tree_counts=bank_trees,
+                          entities_per_tree=8 if smoke else 48,
+                          batch_per_tree=16 if smoke else 64,
+                          repeats=1 if smoke else 3)
+    print("\n== Filter bank: bulk build + vmapped lookup vs #trees ==")
+    print(f"{'trees':>6s} {'items':>7s} {'build_x':>8s} {'lookup_x':>9s} "
+          f"{'exact':>6s}")
+    for r in rows:
+        assert r["vmap_exact"], "bank lookup diverged from reference"
+        print(f"{r['trees']:6d} {r['items']:7d} {r['build_speedup']:8.1f} "
+              f"{r['lookup_speedup']:9.1f} {str(r['vmap_exact']):>6s}")
+        csv.append((f"bank/trees{r['trees']}/build",
+                    r["build_bulk_s"] * 1e6, r["build_speedup"]))
+        csv.append((f"bank/trees{r['trees']}/lookup",
+                    r["lookup_vmap_s"] * 1e6, r["lookup_speedup"]))
 
     print("\n== Kernel microbenchmarks (vs jnp oracle) ==")
     for name, work, derived in bench_kernels.run():

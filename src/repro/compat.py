@@ -1,0 +1,11 @@
+"""Version-compatibility shims for the pinned accelerator stack."""
+from __future__ import annotations
+
+import jax
+
+try:                                   # jax >= 0.5 exposes it at top level
+    shard_map = jax.shard_map
+except AttributeError:                 # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

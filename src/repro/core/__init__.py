@@ -1,21 +1,28 @@
 """CFT-RAG core: improved cuckoo filter + entity-tree retrieval."""
+from .bank import FilterBank, build_bank
 from .baselines import BloomTRAG, BloomTRAG2, NaiveTRAG
 from .blocklist import BlockListArena, BlockListBuilder, CSRArena, build_csr
 from .context import (EntityContext, context_from_arena, context_from_csr,
                       generate_context, render_context)
-from .cuckoo import CFTIndex, CuckooFilter, CuckooTables, build_index
-from .lookup import LookupResult, bump_temperature, lookup_batch, sort_buckets
+from .cuckoo import (CFTIndex, CuckooFilter, CuckooTables, build_index,
+                     bulk_place)
+from .lookup import (LookupResult, bump_temperature, bump_temperature_bank,
+                     lookup_batch, lookup_batch_bank, lookup_batch_trees,
+                     sort_buckets)
 from .trag import (CFTRAG, CFTDeviceState, DeviceRetrieval, build_retriever,
                    retrieve_device)
 from .tree import EntityForest, build_forest
 
 __all__ = [
+    "FilterBank", "build_bank",
     "BloomTRAG", "BloomTRAG2", "NaiveTRAG",
     "BlockListArena", "BlockListBuilder", "CSRArena", "build_csr",
     "EntityContext", "context_from_arena", "context_from_csr",
     "generate_context", "render_context",
-    "CFTIndex", "CuckooFilter", "CuckooTables", "build_index",
-    "LookupResult", "bump_temperature", "lookup_batch", "sort_buckets",
+    "CFTIndex", "CuckooFilter", "CuckooTables", "build_index", "bulk_place",
+    "LookupResult", "bump_temperature", "bump_temperature_bank",
+    "lookup_batch", "lookup_batch_bank", "lookup_batch_trees",
+    "sort_buckets",
     "CFTRAG", "CFTDeviceState", "DeviceRetrieval", "build_retriever",
     "retrieve_device",
     "EntityForest", "build_forest",

@@ -30,6 +30,99 @@ DEFAULT_MAX_KICKS = 500
 DEFAULT_LOAD_THRESHOLD = 0.95      # expand beyond this
 
 
+def bulk_place(fingerprints: np.ndarray, temperature: np.ndarray,
+               heads: np.ndarray, entity_ids: np.ndarray,
+               stored_hash: np.ndarray, fp: np.ndarray, b1: np.ndarray,
+               b2: np.ndarray, new_heads: np.ndarray, new_eids: np.ndarray,
+               new_hashes: np.ndarray, nb: int, rng,
+               max_rounds: int = 48) -> Tuple[np.ndarray, ...]:
+    """Vectorized cuckoo placement into flat ``(num_rows, S)`` tables.
+
+    Rows may be a single filter's buckets or a whole filter bank flattened
+    to ``tree * NB + bucket`` — the routine only sees row indices, with
+    ``nb`` (per-filter bucket count) used to compute a victim's alternate
+    bucket within its own filter's row range.
+
+    Each round: items grouped by candidate bucket claim that bucket's free
+    slots by within-group rank (one fancy-indexed write for all of them);
+    round 0 survivors retry their second choice; later survivors run a
+    vectorized eviction — one leader per bucket swaps with a random victim
+    slot, the victim re-enters the pool at its partner bucket (temperature
+    rides along) and non-leaders flip to their other bucket.  Returns
+    ``(heads, eids, hashes, temps)`` of the items still homeless after
+    ``max_rounds`` — the scalar-fallback remainder, ~empty below the
+    expansion load threshold.
+    """
+    pool_fp = np.asarray(fp, np.uint32).copy()
+    pool_head = np.asarray(new_heads, np.int32).copy()
+    pool_eid = np.asarray(new_eids, np.int32).copy()
+    pool_hash = np.asarray(new_hashes, np.uint32).copy()
+    pool_temp = np.zeros(pool_fp.shape[0], np.int32)
+    bucket = np.asarray(b1, np.int64).copy()
+    other = np.asarray(b2, np.int64).copy()
+    slots = fingerprints.shape[1]
+
+    for rnd in range(max_rounds):
+        if pool_fp.size == 0:
+            break
+        # ---- empty-slot pass at each item's current candidate bucket
+        occupied = fingerprints != hashing.EMPTY_FP            # (rows, S)
+        # k-th free slot of each row: stable argsort floats empties first
+        free_pos = np.argsort(occupied, axis=1, kind="stable")
+        free_cnt = (~occupied).sum(axis=1)
+        order = np.argsort(bucket, kind="stable")
+        bs = bucket[order]
+        starts = np.flatnonzero(np.r_[True, bs[1:] != bs[:-1]])
+        run_len = np.diff(np.append(starts, bs.size))
+        rank = np.arange(bs.size) - np.repeat(starts, run_len)
+        fits = rank < free_cnt[bs]
+        rows = bs[fits]
+        ss = free_pos[rows, rank[fits]]
+        sel = order[fits]
+        fingerprints[rows, ss] = pool_fp[sel]
+        temperature[rows, ss] = pool_temp[sel]
+        heads[rows, ss] = pool_head[sel]
+        entity_ids[rows, ss] = pool_eid[sel]
+        stored_hash[rows, ss] = pool_hash[sel]
+        keep = order[~fits]
+        pool_fp, pool_head = pool_fp[keep], pool_head[keep]
+        pool_eid, pool_hash = pool_eid[keep], pool_hash[keep]
+        pool_temp = pool_temp[keep]
+        bucket, other = bucket[keep], other[keep]
+        if pool_fp.size == 0:
+            break
+        if rnd == 0:                   # try every item's second choice once
+            bucket, other = other, bucket
+            continue
+        # ---- vectorized eviction (survivor buckets are provably full)
+        order = np.argsort(bucket, kind="stable")
+        bs = bucket[order]
+        is_lead = np.r_[True, bs[1:] != bs[:-1]]
+        lead = order[is_lead]
+        lb = bucket[lead]
+        s = rng.integers(0, slots, size=lb.size)
+        v = (fingerprints[lb, s].copy(), temperature[lb, s].copy(),
+             heads[lb, s].copy(), entity_ids[lb, s].copy(),
+             stored_hash[lb, s].copy())
+        fingerprints[lb, s] = pool_fp[lead]
+        temperature[lb, s] = pool_temp[lead]
+        heads[lb, s] = pool_head[lead]
+        entity_ids[lb, s] = pool_eid[lead]
+        stored_hash[lb, s] = pool_hash[lead]
+        base = (lb // nb) * nb
+        v_other = base + hashing.alt_bucket(
+            (lb - base).astype(np.uint32), v[0], nb).astype(np.int64)
+        waiters = order[~is_lead]
+        pool_fp = np.concatenate([pool_fp[waiters], v[0]])
+        pool_temp = np.concatenate([pool_temp[waiters], v[1]])
+        pool_head = np.concatenate([pool_head[waiters], v[2]])
+        pool_eid = np.concatenate([pool_eid[waiters], v[3]])
+        pool_hash = np.concatenate([pool_hash[waiters], v[4]])
+        bucket, other = (np.concatenate([other[waiters], v_other]),
+                         np.concatenate([bucket[waiters], lb]))
+    return pool_head, pool_eid, pool_hash, pool_temp
+
+
 @dataclasses.dataclass
 class CuckooTables:
     """Device-ready views of the filter (plain arrays, jit-friendly)."""
@@ -121,6 +214,37 @@ class CuckooFilter:
         self._homeless = cur
         return False
 
+    def insert_many(self, hashes: Sequence[int], heads: Sequence[int],
+                    entity_ids: Sequence[int]) -> None:
+        """Vectorized bulk build: batched hash/fingerprint/bucket compute,
+        vectorized empty-slot placement via ``bulk_place``, then the scalar
+        eviction path only for the small remainder.  Same membership and
+        payload semantics as calling :meth:`insert` per item."""
+        hashes = np.asarray(hashes, dtype=np.uint32)
+        new_heads = np.asarray(heads, dtype=np.int32)
+        new_eids = np.asarray(entity_ids, dtype=np.int32)
+        n = int(hashes.shape[0])
+        if n == 0:
+            return
+        # pre-expand so the final load factor stays under the threshold,
+        # matching where sequential insertion would have ended up
+        while ((self.num_items + n)
+               / (self.num_buckets * self.slots) >= self.load_threshold):
+            self.expand()
+        fp = hashing.fingerprint(hashes)
+        i1 = hashing.bucket_i1(hashes, self.num_buckets)
+        i2 = hashing.alt_bucket(i1, fp, self.num_buckets)
+        r_head, r_eid, r_hash, r_temp = bulk_place(
+            self.fingerprints, self.temperature, self.heads,
+            self.entity_ids, self.stored_hash, fp, i1.astype(np.int64),
+            i2.astype(np.int64), new_heads, new_eids, hashes,
+            nb=self.num_buckets, rng=self._rng)
+        self.num_items += n - r_head.size
+        for j in range(r_head.size):   # rare remainder — scalar kick chains
+            self.insert(int(r_hash[j]), int(r_head[j]), int(r_eid[j]))
+            if r_temp[j]:              # displaced survivors keep their heat
+                self._set_temp_of(np.uint32(r_hash[j]), int(r_temp[j]))
+
     @staticmethod
     def _unpack(item):
         fp, t, head, eid, h = item
@@ -190,6 +314,18 @@ class CuckooFilter:
             self.temperature[hit] += 1
         return True, int(self.heads[hit])
 
+    def lookup_entry(self, h: int, bump: bool = True
+                     ) -> Tuple[bool, int, int]:
+        """Like :meth:`lookup` but also returns the slot's entity-id payload
+        — the CSR retrieval path must use this rather than re-resolving the
+        query name, so filter hits and arena hits stay consistent."""
+        hit = self._find(np.uint32(h))
+        if hit is None:
+            return False, NULL, NULL
+        if bump:
+            self.temperature[hit] += 1
+        return True, int(self.heads[hit]), int(self.entity_ids[hit])
+
     def contains(self, h: int) -> bool:
         return self._find(np.uint32(h)) is not None
 
@@ -251,7 +387,6 @@ def build_index(forest: EntityForest, num_buckets: int = 1024,
     csr = build_csr(forest.entity_locations)
     hashes = hashing.hash_entities(forest.entity_names)
     filt = CuckooFilter(num_buckets=num_buckets, slots=slots, seed=seed)
-    for eid, (h, head) in enumerate(zip(hashes, heads)):
-        filt.insert(int(h), int(head), eid)
+    filt.insert_many(hashes, heads, np.arange(len(heads), dtype=np.int32))
     return CFTIndex(filter=filt, arena=arena, csr=csr, forest=forest,
                     entity_hashes=hashes)

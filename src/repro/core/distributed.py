@@ -19,16 +19,17 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map as _shard_map
 from . import hashing
 from .lookup import LookupResult
 
 
 def _local_probe(fps_shard: jax.Array, heads_shard: jax.Array,
-                 h: jax.Array, axis_name: str) -> LookupResult:
+                 h: jax.Array, axis_name: str,
+                 nb_global: int) -> LookupResult:
     """Probe only the locally-owned bucket range; miss -> -1 everywhere."""
     nb_local, s = fps_shard.shape
     shard = jax.lax.axis_index(axis_name)
-    nb_global = nb_local * jax.lax.axis_size(axis_name)
     lo = shard * nb_local
 
     fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb_global, jnp)
@@ -63,8 +64,9 @@ def _local_probe(fps_shard: jax.Array, heads_shard: jax.Array,
 def sharded_lookup(mesh: Mesh, axis: str, fingerprints: jax.Array,
                    heads: jax.Array, h: jax.Array) -> LookupResult:
     """Top-level: tables sharded on bucket dim over ``axis``; h replicated."""
-    fn = jax.shard_map(
-        functools.partial(_local_probe, axis_name=axis),
+    fn = _shard_map(
+        functools.partial(_local_probe, axis_name=axis,
+                          nb_global=fingerprints.shape[0]),
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P()),
         out_specs=LookupResult(hit=P(), head=P(), bucket=P(), slot=P()),

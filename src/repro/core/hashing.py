@@ -33,7 +33,25 @@ def entity_hash(s: str) -> np.uint32:
 
 
 def hash_entities(names) -> np.ndarray:
-    return np.array([fnv1a_64(n) for n in names], dtype=np.uint32)
+    """Batched FNV-1a: sequential over byte position, vectorized over
+    names — bit-identical to ``fnv1a_64`` per string (the bulk index/bank
+    builds hash every entity in one shot through here)."""
+    names = list(names)
+    if not names:
+        return np.zeros(0, dtype=np.uint32)
+    bs = [n.encode("utf-8") for n in names]
+    lens = np.asarray([len(b) for b in bs], dtype=np.int64)
+    offsets = np.zeros(len(bs) + 1, dtype=np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    flat = np.frombuffer(b"".join(bs), dtype=np.uint8).astype(np.uint64)
+    h = np.full(len(bs), 0xCBF29CE484222325, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        for j in range(int(lens.max()) if lens.size else 0):
+            idx = np.minimum(offsets[:-1] + j, max(flat.size - 1, 0))
+            step = (h ^ flat[idx]) * np.uint64(0x100000001B3)
+            h = np.where(j < lens, step, h)
+        return ((h ^ (h >> np.uint64(32)))
+                & np.uint64(0xFFFFFFFF)).astype(np.uint32)
 
 
 def _mix(h, xp):

@@ -26,20 +26,18 @@ class LookupResult(NamedTuple):
     slot: jax.Array       # (B,) int32 — slot within that bucket
 
 
-def lookup_batch(fingerprints: jax.Array, heads: jax.Array,
-                 h: jax.Array) -> LookupResult:
-    """fingerprints/heads: (NB, S); h: (B,) uint32 entity hashes."""
-    nb, s = fingerprints.shape
-    fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb, jnp)
-    rows1 = fingerprints[i1]                         # (B, S)
-    rows2 = fingerprints[i2]
+def _match_rows(fp: jax.Array, i1: jax.Array, i2: jax.Array,
+                rows1: jax.Array, rows2: jax.Array,
+                heads1: jax.Array, heads2: jax.Array,
+                s: int) -> LookupResult:
+    """Shared slot-priority match over two gathered bucket rows."""
     match = jnp.concatenate([rows1 == fp[:, None],
                              rows2 == fp[:, None]], axis=1)   # (B, 2S)
     hit = jnp.any(match, axis=1)
     first = jnp.argmax(match, axis=1)                # first matching position
     bucket = jnp.where(first < s, i1, i2).astype(jnp.int32)
     slot = jnp.where(first < s, first, first - s).astype(jnp.int32)
-    heads_cat = jnp.concatenate([heads[i1], heads[i2]], axis=1)
+    heads_cat = jnp.concatenate([heads1, heads2], axis=1)
     head = jnp.where(hit,
                      jnp.take_along_axis(heads_cat, first[:, None], axis=1)[:, 0],
                      jnp.int32(-1))
@@ -47,9 +45,49 @@ def lookup_batch(fingerprints: jax.Array, heads: jax.Array,
                         bucket=bucket, slot=slot)
 
 
+def lookup_batch(fingerprints: jax.Array, heads: jax.Array,
+                 h: jax.Array) -> LookupResult:
+    """fingerprints/heads: (NB, S); h: (B,) uint32 entity hashes."""
+    nb, s = fingerprints.shape
+    fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb, jnp)
+    return _match_rows(fp, i1, i2, fingerprints[i1], fingerprints[i2],
+                       heads[i1], heads[i2], s)
+
+
+def lookup_batch_bank(fingerprints: jax.Array, heads: jax.Array,
+                      tree_ids: jax.Array, h: jax.Array) -> LookupResult:
+    """Per-query tree routing over a filter bank.
+
+    fingerprints/heads: (T, NB, S); tree_ids/h: (B,).  Each query probes
+    only its own tree's filter; ``bucket`` is the tree-local bucket index.
+    """
+    _, nb, s = fingerprints.shape
+    fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb, jnp)
+    t = tree_ids.astype(jnp.int32)
+    return _match_rows(fp, i1, i2, fingerprints[t, i1], fingerprints[t, i2],
+                       heads[t, i1], heads[t, i2], s)
+
+
+def lookup_batch_trees(fingerprints: jax.Array, heads: jax.Array,
+                       h: jax.Array) -> LookupResult:
+    """Vmapped-over-trees entry point: one dense query batch per tree.
+
+    fingerprints/heads: (T, NB, S); h: (T, B) — result fields are (T, B).
+    """
+    return jax.vmap(lookup_batch)(fingerprints, heads, h)
+
+
 def bump_temperature(temperature: jax.Array, res: LookupResult) -> jax.Array:
     """Algorithm 3: temperature += 1 for every hit slot (scatter-add)."""
     return temperature.at[res.bucket, res.slot].add(
+        res.hit.astype(temperature.dtype))
+
+
+def bump_temperature_bank(temperature: jax.Array, tree_ids: jax.Array,
+                          res: LookupResult) -> jax.Array:
+    """Bank-axis variant: temperature is (T, NB, S), scatter per tree."""
+    return temperature.at[tree_ids.astype(jnp.int32),
+                          res.bucket, res.slot].add(
         res.hit.astype(temperature.dtype))
 
 

@@ -18,10 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import hashing
+from .bank import FilterBank
 from .context import (EntityContext, context_from_arena, context_from_csr,
                       gather_descendants, gather_hierarchy, render_context)
 from .cuckoo import CFTIndex, build_index
-from .lookup import LookupResult, bump_temperature, lookup_batch, sort_buckets
+from .lookup import LookupResult, bump_temperature_bank, lookup_batch_bank
 from .tree import EntityForest
 
 NULL = -1
@@ -42,12 +43,13 @@ class CFTRAG:
     def locate(self, name: str):
         """Filter lookup -> address list (the paper's accelerated locate)."""
         h = hashing.entity_hash(name)
-        hit, head = self.index.filter.lookup(int(h))
+        hit, head, eid = self.index.filter.lookup_entry(int(h))
         if not hit:
             return []
         if self.use_csr:
-            # CSR heads store the entity id directly
-            eid = self.index.forest.name_to_id.get(name, -1)
+            # use the slot's entity-id payload, NOT a name->id re-resolve:
+            # on a fingerprint collision the arena path walks the stored
+            # entity's addresses, and the CSR path must agree with it
             return self.index.csr.walk(eid) if eid >= 0 else []
         return self.index.arena.walk(head)
 
@@ -80,22 +82,34 @@ class DeviceRetrieval(NamedTuple):
     locations: jax.Array    # (B, max_locs) int32 node ids (NULL-padded)
     up: jax.Array           # (B, max_locs, n) ancestor entity ids
     down: jax.Array         # (B, max_locs, n) descendant entity ids
-    temperature: jax.Array  # updated (NB, S) table — thread back into state
+    temperature: jax.Array  # updated (T, NB, S) table — thread into state
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class CFTDeviceState:
-    """All retrieval tensors living on device, usable inside jit."""
-    fingerprints: jax.Array   # (NB, S) uint32
-    temperature: jax.Array    # (NB, S) int32
-    heads: jax.Array          # (NB, S) int32  — CSR entity ids (device path)
-    csr_offsets: jax.Array    # (E + 1,) int32
+    """All retrieval tensors living on device, usable inside jit.
+
+    Filter tables carry a leading bank axis ``T`` (number of trees): the
+    single-index state from :meth:`from_index` is simply a bank with
+    ``T == 1``, while :meth:`from_bank` stacks one filter per tree.  Slot
+    payloads index rows of ``csr_offsets`` — per-entity rows in the T == 1
+    case, per-(tree, entity) rows in the bank case — so the retrieval
+    arithmetic downstream of the lookup is identical for both.
+    """
+    fingerprints: jax.Array   # (T, NB, S) uint32
+    temperature: jax.Array    # (T, NB, S) int32
+    heads: jax.Array          # (T, NB, S) int32 — CSR row id payloads
+    csr_offsets: jax.Array    # (R + 1,) int32
     csr_nodes: jax.Array      # (L,) int32 — node id per location
     parent: jax.Array         # (N,) int32
     entity_id: jax.Array      # (N,) int32
     child_offsets: jax.Array  # (N + 1,) int32
     child_index: jax.Array    # (C,) int32
+
+    @property
+    def num_trees(self) -> int:
+        return int(self.fingerprints.shape[0])
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -105,39 +119,72 @@ class CFTDeviceState:
     def tree_unflatten(cls, _aux, children):
         return cls(*children)
 
-    @classmethod
-    def from_index(cls, index: CFTIndex) -> "CFTDeviceState":
-        f = index.forest
-        t = index.filter.tables()
-        return cls(
-            fingerprints=jnp.asarray(t.fingerprints),
-            temperature=jnp.asarray(t.temperature),
-            # the device path uses CSR: slot payload = entity id
-            heads=jnp.asarray(t.entity_ids),
-            csr_offsets=jnp.asarray(index.csr.offsets),
-            csr_nodes=jnp.asarray(index.csr.addrs[:, 1]
-                                  if index.csr.addrs.size else
-                                  np.zeros((1,), np.int32)),
-            parent=jnp.asarray(f.parent if f.num_nodes else np.zeros(1, np.int32)),
-            entity_id=jnp.asarray(f.entity_id if f.num_nodes else np.zeros(1, np.int32)),
+    @staticmethod
+    def _forest_arrays(f: EntityForest):
+        return dict(
+            parent=jnp.asarray(f.parent if f.num_nodes
+                               else np.zeros(1, np.int32)),
+            entity_id=jnp.asarray(f.entity_id if f.num_nodes
+                                  else np.zeros(1, np.int32)),
             child_offsets=jnp.asarray(f.child_offsets),
             child_index=jnp.asarray(f.child_index if f.child_index.size
                                     else np.zeros(1, np.int32)),
         )
 
+    @classmethod
+    def from_index(cls, index: CFTIndex) -> "CFTDeviceState":
+        t = index.filter.tables()
+        return cls(
+            fingerprints=jnp.asarray(t.fingerprints)[None],
+            temperature=jnp.asarray(t.temperature)[None],
+            # the device path uses CSR: slot payload = entity id (= row)
+            heads=jnp.asarray(t.entity_ids)[None],
+            csr_offsets=jnp.asarray(index.csr.offsets),
+            csr_nodes=jnp.asarray(index.csr.addrs[:, 1]
+                                  if index.csr.addrs.size else
+                                  np.zeros((1,), np.int32)),
+            **cls._forest_arrays(index.forest),
+        )
+
+    @classmethod
+    def from_bank(cls, bank: FilterBank, forest: EntityForest
+                  ) -> "CFTDeviceState":
+        return cls(
+            fingerprints=jnp.asarray(bank.fingerprints),
+            temperature=jnp.asarray(bank.temperature),
+            heads=jnp.asarray(bank.heads),
+            csr_offsets=jnp.asarray(bank.csr_offsets),
+            csr_nodes=jnp.asarray(bank.csr_nodes if bank.csr_nodes.size
+                                  else np.zeros((1,), np.int32)),
+            **cls._forest_arrays(forest),
+        )
+
 
 def retrieve_device(state: CFTDeviceState, query_hashes: jax.Array,
+                    query_trees: Optional[jax.Array] = None,
                     max_locs: int = 4, n: int = 3,
-                    lookup_fn=lookup_batch) -> DeviceRetrieval:
+                    lookup_fn=None) -> DeviceRetrieval:
     """Batched CFT-RAG retrieval, jit-compatible end to end.
 
-    ``lookup_fn`` defaults to the pure-jnp reference; the serving engine
-    passes the Pallas kernel wrapper (identical signature/semantics).
+    Queries are ``(tree_id, hash)`` pairs; ``query_trees`` defaults to all
+    zeros, which on a ``T == 1`` state reproduces the single-filter
+    behaviour.  ``lookup_fn(fingerprints, heads, tree_ids, h)`` defaults to
+    the pure-jnp bank reference; the serving engine passes the Pallas bank
+    kernel wrapper (identical signature/semantics).
     """
+    if lookup_fn is None:
+        lookup_fn = lookup_batch_bank
+    if query_trees is None:
+        query_trees = jnp.zeros(query_hashes.shape, jnp.int32)
+    # out-of-range tree ids must miss, not alias to a clamped gather row
+    in_range = ((query_trees >= 0)
+                & (query_trees < state.fingerprints.shape[0]))
+    query_trees = jnp.where(in_range, query_trees, 0).astype(jnp.int32)
     res: LookupResult = lookup_fn(state.fingerprints, state.heads,
-                                  query_hashes)
-    temp = bump_temperature(state.temperature, res)
-    eid = jnp.where(res.hit, res.head, 0)                    # (B,)
+                                  query_trees, query_hashes)
+    res = res._replace(hit=res.hit & in_range)
+    temp = bump_temperature_bank(state.temperature, query_trees, res)
+    eid = jnp.where(res.hit, res.head, 0)                    # (B,) CSR rows
     lo = state.csr_offsets[eid]                              # (B,)
     count = state.csr_offsets[eid + 1] - lo
     k = jnp.arange(max_locs, dtype=jnp.int32)                # (max_locs,)

@@ -78,3 +78,74 @@ def cuckoo_lookup_pallas(h: jax.Array, fp_table_f32: jax.Array,
         out_shape=out_shapes,
         interpret=interpret,
     )(h, fp_table_f32, head_table_f32)
+
+
+def _bank_kernel(h_ref, tid_ref, fp_tab_ref, head_tab_ref, hit_ref,
+                 head_ref, bucket_ref, slot_ref, *, num_buckets: int,
+                 slots: int):
+    """Per-query tree routing: tables are the whole bank flattened to
+    (T * NB, S); each query's bucket rows are tid * NB + {i1, i2}.  The
+    hash pipeline stays tree-local (num_buckets = per-tree NB), so a bank
+    lookup is bit-identical to probing that tree's standalone filter."""
+    h = h_ref[...].astype(jnp.uint32)                       # (TILE,)
+    tid = tid_ref[...].astype(jnp.int32)
+    fp, i1, i2 = hashing.candidate_buckets(h, num_buckets, jnp)
+    r1 = tid * num_buckets + i1.astype(jnp.int32)
+    r2 = tid * num_buckets + i2.astype(jnp.int32)
+
+    fp_tab = fp_tab_ref[...]                                # (T*NB, S) f32
+    head_tab = head_tab_ref[...]
+    tab = jnp.concatenate([fp_tab, head_tab], axis=1)       # (T*NB, 2S)
+    rows_total = fp_tab.shape[0]
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, rows_total), 1)
+    oh1 = (row_iota == r1[:, None]).astype(jnp.float32)
+    oh2 = (row_iota == r2[:, None]).astype(jnp.float32)
+    rows1 = jax.lax.dot(oh1, tab, precision=jax.lax.Precision.HIGHEST)
+    rows2 = jax.lax.dot(oh2, tab, precision=jax.lax.Precision.HIGHEST)
+
+    fps = jnp.concatenate([rows1[:, :slots], rows2[:, :slots]], axis=1)
+    heads = jnp.concatenate([rows1[:, slots:], rows2[:, slots:]], axis=1)
+
+    match = fps == fp.astype(jnp.float32)[:, None]          # (TILE, 2S)
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, 2 * slots), 1)
+    first = jnp.min(jnp.where(match, pos_iota, 2 * slots), axis=1)
+    hit = first < 2 * slots
+    firstc = jnp.minimum(first, 2 * slots - 1)
+
+    sel = (pos_iota == firstc[:, None]).astype(jnp.float32)
+    head = jnp.sum(heads * sel, axis=1)                     # exact gather
+
+    hit_ref[...] = hit.astype(jnp.int32)
+    head_ref[...] = jnp.where(hit, head.astype(jnp.int32), -1)
+    bucket_ref[...] = jnp.where(first < slots, i1, i2).astype(jnp.int32)
+    slot_ref[...] = jnp.where(first < slots, firstc,
+                              firstc - slots).astype(jnp.int32)
+
+
+def cuckoo_lookup_bank_pallas(h: jax.Array, tree_ids: jax.Array,
+                              fp_table_f32: jax.Array,
+                              head_table_f32: jax.Array, num_buckets: int,
+                              interpret: bool = True):
+    """h/tree_ids: (B,) with B % TILE == 0; tables: (T * NB, S) float32.
+
+    The whole bank lives as one VMEM block, so this kernel targets banks up
+    to a few MiB (T * NB * S * 8 bytes) — the many-small-trees regime the
+    bank exists for.  Larger banks should shard over the mesh first
+    (core.distributed) and route within each shard.
+    """
+    rows_total, slots = fp_table_f32.shape
+    b = h.shape[0]
+    grid = (b // TILE,)
+    out_shapes = [jax.ShapeDtypeStruct((b,), jnp.int32) for _ in range(4)]
+    qspec = pl.BlockSpec((TILE,), lambda i: (i,))
+    tabspec = pl.BlockSpec((rows_total, slots), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_bank_kernel, num_buckets=num_buckets,
+                          slots=slots),
+        grid=grid,
+        in_specs=[qspec, qspec, tabspec, tabspec],
+        out_specs=[qspec] * 4,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(h, tree_ids, fp_table_f32, head_table_f32)

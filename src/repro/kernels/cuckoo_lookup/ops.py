@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.lookup import LookupResult
-from .kernel import TILE, cuckoo_lookup_pallas
+from .kernel import TILE, cuckoo_lookup_bank_pallas, cuckoo_lookup_pallas
 
 
 def on_tpu() -> bool:
@@ -43,3 +43,41 @@ def cuckoo_lookup(fingerprints: jax.Array, heads: jax.Array, h: jax.Array,
 def cuckoo_lookup_auto(fingerprints, heads, h) -> LookupResult:
     """Kernel on TPU, interpret elsewhere — the serving engine's entry."""
     return cuckoo_lookup(fingerprints, heads, h, interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cuckoo_lookup_bank(fingerprints: jax.Array, heads: jax.Array,
+                       tree_ids: jax.Array, h: jax.Array,
+                       interpret: bool = True) -> LookupResult:
+    """Bank lookup with per-query tree routing — same signature/semantics
+    as core.lookup.lookup_batch_bank.  Tables: (T, NB, S)."""
+    t, nb, s = fingerprints.shape
+    b = h.shape[0]
+    pad = (-b) % TILE
+    hp = jnp.pad(h, (0, pad))
+    tp = jnp.pad(tree_ids.astype(jnp.int32), (0, pad))
+    fp32, hd32 = stage_tables(fingerprints.reshape(t * nb, s),
+                              heads.reshape(t * nb, s))
+    hit, head, bucket, slot = cuckoo_lookup_bank_pallas(
+        hp.astype(jnp.uint32), tp, fp32, hd32, num_buckets=nb,
+        interpret=interpret)
+    return LookupResult(hit=hit[:b].astype(jnp.bool_), head=head[:b],
+                        bucket=bucket[:b], slot=slot[:b])
+
+
+def cuckoo_lookup_bank_auto(fingerprints, heads, tree_ids, h
+                            ) -> LookupResult:
+    """Kernel on TPU, interpret elsewhere — serving's bank-routing entry."""
+    return cuckoo_lookup_bank(fingerprints, heads, tree_ids, h,
+                              interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cuckoo_lookup_trees(fingerprints: jax.Array, heads: jax.Array,
+                        h: jax.Array, interpret: bool = True
+                        ) -> LookupResult:
+    """Vmapped-over-trees kernel entry: tables (T, NB, S), h (T, B) —
+    one dense query batch per tree, result fields shaped (T, B)."""
+    return jax.vmap(
+        lambda f, d, q: cuckoo_lookup(f, d, q, interpret=interpret)
+    )(fingerprints, heads, h)

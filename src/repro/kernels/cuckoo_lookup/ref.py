@@ -4,9 +4,15 @@ from __future__ import annotations
 
 import jax
 
-from ...core.lookup import LookupResult, lookup_batch
+from ...core.lookup import LookupResult, lookup_batch, lookup_batch_bank
 
 
 def cuckoo_lookup_ref(fingerprints: jax.Array, heads: jax.Array,
                       h: jax.Array) -> LookupResult:
     return lookup_batch(fingerprints, heads, h)
+
+
+def cuckoo_lookup_bank_ref(fingerprints: jax.Array, heads: jax.Array,
+                           tree_ids: jax.Array, h: jax.Array
+                           ) -> LookupResult:
+    return lookup_batch_bank(fingerprints, heads, tree_ids, h)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..core import CFTDeviceState, DeviceRetrieval, retrieve_device
 from ..data.tokenizer import HashTokenizer
 from ..models import lm
 
@@ -41,6 +42,44 @@ class ServeEngine:
             functools.partial(lm.prefill, cfg, cache_size=cache_size))
         self._decode = jax.jit(
             functools.partial(lm.decode_step, cfg), donate_argnums=(2,))
+        self._ret_state: Optional[CFTDeviceState] = None
+
+    # ---------------------------------------------------------- retrieval
+    def attach_retrieval(self, state: CFTDeviceState, lookup_fn=None,
+                         max_locs: int = 4, n: int = 3,
+                         batch_pad: int = 64) -> None:
+        """Fuse CFT retrieval into the engine: one jitted step over the
+        bank-axis device state, shape-stable via fixed padding geometry."""
+        self._ret_state = state
+        self._ret_pad = batch_pad
+        self._ret_step = jax.jit(functools.partial(
+            retrieve_device, max_locs=max_locs, n=n, lookup_fn=lookup_fn))
+
+    def retrieve(self, tree_ids: Sequence[int],
+                 hashes: Sequence[int]) -> DeviceRetrieval:
+        """Serve one ``(tree_id, hash)`` query batch.
+
+        Queries pad to a multiple of ``batch_pad`` (one compilation per
+        geometry, like the token scheduler).  Pad slots query tree 0 with
+        hash 0; a pad hash can in principle alias a stored fingerprint,
+        which only over-bumps that slot's temperature — a heuristic,
+        not a correctness input.
+        """
+        if self._ret_state is None:
+            raise RuntimeError("call attach_retrieval() first")
+        b = len(hashes)
+        bp = max(self._ret_pad, -(-b // self._ret_pad) * self._ret_pad)
+        tid = np.zeros((bp,), np.int32)
+        tid[:b] = np.asarray(tree_ids, np.int32)
+        hh = np.zeros((bp,), np.uint32)
+        hh[:b] = np.asarray(hashes, np.uint32)
+        out = self._ret_step(self._ret_state, jnp.asarray(hh),
+                             jnp.asarray(tid))
+        self._ret_state = dataclasses.replace(self._ret_state,
+                                              temperature=out.temperature)
+        return DeviceRetrieval(hit=out.hit[:b], locations=out.locations[:b],
+                               up=out.up[:b], down=out.down[:b],
+                               temperature=out.temperature)
 
     # ----------------------------------------------------------- generate
     def generate(self, batch: Dict[str, jax.Array], max_new_tokens: int

@@ -18,13 +18,13 @@ from typing import Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (CFTRAG, CFTDeviceState, build_forest, build_index,
-                    retrieve_device)
+from ..core import (CFTRAG, CFTDeviceState, build_bank, build_forest,
+                    build_index, retrieve_device)
 from ..core import hashing
 from ..data.datasets import SyntheticCorpus
 from ..data.ner import build_gazetteer, recognize_entities
 from ..data.tokenizer import HashTokenizer
-from ..kernels.cuckoo_lookup.ops import cuckoo_lookup_auto
+from ..kernels.cuckoo_lookup.ops import cuckoo_lookup_bank_auto
 from .engine import Request, ServeEngine
 
 SYSTEM_PROMPT = ("You are an assistant answering questions about an "
@@ -45,7 +45,7 @@ class RAGPipeline:
     def __init__(self, corpus: SyntheticCorpus, engine: Optional[ServeEngine],
                  tokenizer: Optional[HashTokenizer] = None,
                  num_buckets: int = 1024, n_hierarchy: int = 3,
-                 use_device_lookup: bool = False):
+                 use_device_lookup: bool = False, use_bank: bool = False):
         self.corpus = corpus
         self.forest = build_forest(corpus.trees)
         self.index = build_index(self.forest, num_buckets=num_buckets)
@@ -54,35 +54,65 @@ class RAGPipeline:
         self.engine = engine
         self.tokenizer = tokenizer or HashTokenizer(
             engine.cfg.vocab if engine else 64000)
-        self.use_device_lookup = use_device_lookup
-        self._dev_state = (CFTDeviceState.from_index(self.index)
-                           if use_device_lookup else None)
+        self.use_device_lookup = use_device_lookup or use_bank
+        self.use_bank = use_bank
+        self.bank = build_bank(self.forest) if use_bank else None
+        if use_bank:
+            self._dev_state = CFTDeviceState.from_bank(self.bank, self.forest)
+        elif use_device_lookup:
+            self._dev_state = CFTDeviceState.from_index(self.index)
+        else:
+            self._dev_state = None
 
     # ---------------------------------------------------------- retrieval
-    def retrieve(self, query: str) -> RAGAnswer:
+    def retrieve(self, query: str,
+                 tree_scope: Optional[int] = None) -> RAGAnswer:
+        """Recognize entities and retrieve their hierarchical context.
+
+        ``tree_scope`` routes the whole query batch to one tree of the
+        filter bank (multi-tenant shape); ``None`` retrieves globally —
+        on a bank state that fans each entity out to every tree.
+        """
         ents = recognize_entities(query, self.gazetteer)
         if self.use_device_lookup:
             hashes = jnp.asarray(hashing.hash_entities(ents)
                                  if ents else np.zeros((1,), np.uint32))
-            out = retrieve_device(self._dev_state, hashes,
-                                  lookup_fn=lambda f, h, q:
-                                  cuckoo_lookup_auto(f, h, q))
+            b = hashes.shape[0]
+            if tree_scope is not None:
+                trees = jnp.full((b,), tree_scope, jnp.int32)
+            elif self.use_bank:
+                # global query over a bank: (tree_id, hash) pairs for every
+                # tree; per-entity results merge across trees below
+                t = self.bank.num_trees
+                trees = jnp.repeat(jnp.arange(t, dtype=jnp.int32), b)
+                hashes = jnp.tile(hashes, t)
+            else:
+                trees = jnp.zeros((b,), jnp.int32)
+            out = retrieve_device(self._dev_state, hashes, trees,
+                                  lookup_fn=cuckoo_lookup_bank_auto)
             self._dev_state = dataclasses.replace(
                 self._dev_state, temperature=out.temperature)
-            ctxs = self._render_device(ents, out)
+            up, down = np.asarray(out.up), np.asarray(out.down)
+            if tree_scope is None and self.use_bank:
+                t, locs, n = self.bank.num_trees, up.shape[1], up.shape[2]
+                up = (up.reshape(t, b, locs, n).transpose(1, 0, 2, 3)
+                        .reshape(b, t * locs, n))
+                down = (down.reshape(t, b, locs, n).transpose(1, 0, 2, 3)
+                          .reshape(b, t * locs, n))
+            ctxs = self._render_device(ents, up, down)
         else:
             ctxs = self.retriever.render(self.retriever.retrieve(ents))
         prompt = f"{SYSTEM_PROMPT}\n{ctxs}\nQuestion: {query}\nAnswer:"
         return RAGAnswer(query=query, entities=ents, context=ctxs,
                          prompt=prompt)
 
-    def _render_device(self, ents: Sequence[str], out) -> str:
+    def _render_device(self, ents: Sequence[str], up_arr: np.ndarray,
+                       down_arr: np.ndarray) -> str:
         lines = []
         names = self.forest.entity_names
         for i, e in enumerate(ents):
-            ups = [names[int(u)] for u in np.asarray(out.up[i]).ravel()
-                   if int(u) >= 0]
-            downs = [names[int(d)] for d in np.asarray(out.down[i]).ravel()
+            ups = [names[int(u)] for u in up_arr[i].ravel() if int(u) >= 0]
+            downs = [names[int(d)] for d in down_arr[i].ravel()
                      if int(d) >= 0]
             if ups:
                 lines.append(f"The upward hierarchical relationship of {e} "

@@ -1,5 +1,8 @@
 """Block-linked-list arena vs CSR arena equivalence."""
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback (CI installs the real one)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import BlockListBuilder, build_csr
 

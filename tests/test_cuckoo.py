@@ -1,7 +1,10 @@
 """Cuckoo filter unit + property tests (paper §3, §4.5 claims)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback (CI installs the real one)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import CuckooFilter, build_forest, build_index
 from repro.core import hashing

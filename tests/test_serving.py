@@ -64,6 +64,45 @@ def test_rag_device_lookup_path_matches_host():
             assert (e in a.context) == (e in b.context)
 
 
+def test_engine_tree_routed_retrieval():
+    """Engine serves (tree_id, hash) query batches against a bank state."""
+    from repro.core import CFTDeviceState, build_bank, build_forest
+    from repro.core import hashing
+    corpus = hospital_corpus(num_trees=8)
+    forest = build_forest(corpus.trees)
+    bank = build_bank(forest)
+    _, eng = _engine()
+    eng.attach_retrieval(CFTDeviceState.from_bank(bank, forest),
+                         max_locs=4, batch_pad=32)
+    hashes = hashing.hash_entities(forest.entity_names)
+    tree_ids = bank.row_tree[:48].tolist()
+    qh = [int(hashes[int(e)]) for e in bank.row_entity[:48]]
+    out = eng.retrieve(tree_ids, qh)
+    assert out.hit.shape == (48,) and bool(out.hit.all())
+    for r in range(48):
+        got = [int(v) for v in np.asarray(out.locations[r]) if v >= 0]
+        assert got == bank.walk_row(r)[:4]
+    # temperature threads back into engine state across calls
+    t0 = int(np.asarray(out.temperature).sum())
+    out2 = eng.retrieve(tree_ids, qh)
+    assert int(np.asarray(out2.temperature).sum()) >= t0 + 48
+
+
+def test_rag_bank_mode_scoped_and_global():
+    corpus = hospital_corpus(num_trees=8, num_queries=4)
+    rag = RAGPipeline(corpus, None, tokenizer=HashTokenizer(1024),
+                      use_bank=True)
+    host = RAGPipeline(corpus, None, tokenizer=HashTokenizer(1024))
+    for q in corpus.queries:
+        a = host.retrieve(q)
+        b = rag.retrieve(q)                      # global: fan out over trees
+        assert a.entities == b.entities
+        for e in a.entities:
+            assert (e in a.context) == (e in b.context)
+        scoped = rag.retrieve(q, tree_scope=0)   # routed to one tree
+        assert scoped.entities == a.entities
+
+
 def test_kv_cache_sizing():
     cfg = get_arch("yi-34b")
     by = kv_cache_bytes(cfg, batch=128, cache_size=32768)

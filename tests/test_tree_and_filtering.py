@@ -1,6 +1,9 @@
 """Entity forest construction + relationship filtering properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback (CI installs the real one)
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import build_forest
 from repro.data.filtering import filter_relations, is_forest
