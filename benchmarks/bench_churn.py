@@ -1,0 +1,244 @@
+"""Churn workload — incremental bank maintenance vs rebuild-from-scratch.
+
+The paper's case for the cuckoo filter over Bloom variants is dynamic
+updates; this benchmark measures that claim at bank scale.  A randomized
+interleaving of per-tree entity inserts and deletes (with routed query
+sweeps between batches) is applied two ways:
+
+* **incremental** — ``MaintenanceEngine`` queues each batch as a
+  ``BankDelta`` and applies it in place (vectorized deletes, ``bulk_place``
+  inserts, scalar eviction fallback, threshold-triggered compaction);
+* **rebuild** — the baseline the static bank forces today: after every
+  batch, a full ``build_bank_from_rows`` over the surviving rows.
+
+Both replicas replay the *same* op sequence, and the final incrementally
+maintained bank is asserted equivalent to a from-scratch build (every live
+row hits, node lists identical) before any timing is reported.
+
+``python -m benchmarks.bench_churn [--smoke|--fast] [--json PATH]`` — the
+CI smoke job writes ``BENCH_bank.json`` from here so the maintenance perf
+trajectory is recorded per commit.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import (MaintenanceEngine, build_bank, build_bank_from_rows,
+                        build_forest)
+from repro.core import hashing
+
+
+def _forest(num_trees: int, entities_per_tree: int):
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def _op_sequence(bank, hashes, ops: int, batch: int, seed: int):
+    """Batches of (kind, tree, hash, eid, nodes) ops over the bank's rows.
+
+    Deletes target live rows, inserts re-add dead ones; one batch never
+    touches the same (tree, entity) twice, so the incremental and rebuild
+    replicas see identical well-defined state after every batch.
+    """
+    rng = np.random.default_rng(seed)
+    all_rows = {}
+    for r in range(bank.num_rows):
+        key = (int(bank.row_tree[r]), int(bank.row_entity[r]))
+        all_rows[key] = bank.walk_row(r)
+    live = dict(all_rows)
+    floor = max(8, len(all_rows) // 4)
+    batches: List[List[tuple]] = []
+    remaining = ops
+    while remaining > 0:
+        this, touched = [], set()
+        for _ in range(min(batch, remaining)):
+            dead = [k for k in all_rows if k not in live and
+                    k not in touched]
+            do_delete = (len(live) > floor and
+                         (not dead or rng.random() < 0.5))
+            if do_delete:
+                cands = [k for k in live if k not in touched]
+                if not cands:
+                    break
+                k = cands[int(rng.integers(len(cands)))]
+                this.append(("del", k[0], int(hashes[k[1]]), k[1], None))
+                del live[k]
+            else:
+                if not dead:
+                    break
+                k = dead[int(rng.integers(len(dead)))]
+                this.append(("ins", k[0], int(hashes[k[1]]), k[1],
+                             all_rows[k]))
+                live[k] = all_rows[k]
+            touched.add(k)
+        if not this:
+            break
+        remaining -= len(this)
+        batches.append(this)
+    return batches, live
+
+
+def _live_arrays(live: Dict, hashes: np.ndarray, num_trees: int):
+    ks = sorted(live)
+    rt = np.asarray([k[0] for k in ks], np.int32)
+    re_ = np.asarray([k[1] for k in ks], np.int32)
+    rh = hashes[re_].astype(np.uint32)
+    lens = np.asarray([len(live[k]) for k in ks], np.int32)
+    off = np.zeros(len(ks) + 1, np.int32)
+    np.cumsum(lens, out=off[1:])
+    nodes = (np.concatenate([np.asarray(live[k], np.int32) for k in ks])
+             if ks else np.zeros(0, np.int32))
+    return ks, rt, re_, rh, off, nodes
+
+
+def run(tree_counts: Sequence[int] = (16, 64),
+        entities_per_tree: int = 48, ops: int = 1024, batch: int = 64,
+        queries_per_batch: int = 64, seed: int = 0) -> List[Dict]:
+    rows = []
+    for T in tree_counts:
+        forest = _forest(T, entities_per_tree)
+        hashes = hashing.hash_entities(forest.entity_names)
+        bank = build_bank(forest)
+        batches, live = _op_sequence(bank, hashes, ops, batch, seed)
+        n_ops = sum(len(b) for b in batches)
+
+        # ---- incremental replica
+        inc = build_bank(forest)
+        eng = MaintenanceEngine(inc, seed=seed)
+        qrng = np.random.default_rng(seed + 1)
+        t_inc = t_query = 0.0
+        for ops_b in batches:
+            t0 = time.perf_counter()
+            for kind, tree, h, eid, nodes in ops_b:
+                if kind == "del":
+                    eng.queue_delete(tree, h)
+                else:
+                    eng.queue_insert(tree, h, nodes, entity_id=eid)
+            eng.maintain()                     # idle window: apply + compact
+            t_inc += time.perf_counter() - t0
+            # interleaved routed query sweep (host path, both replicas
+            # would answer identically — timed once here)
+            t0 = time.perf_counter()
+            pick = qrng.integers(0, inc.num_rows, size=queries_per_batch)
+            for r in pick:
+                t = int(inc.row_tree[int(r)])
+                inc.lookup(t, int(hashes[int(inc.row_entity[int(r)])]))
+            t_query += time.perf_counter() - t0
+
+        # ---- rebuild-from-scratch baseline (same sequence)
+        reb_live = {}
+        for r in range(bank.num_rows):
+            key = (int(bank.row_tree[r]), int(bank.row_entity[r]))
+            reb_live[key] = bank.walk_row(r)
+        t_reb = 0.0
+        for ops_b in batches:
+            t0 = time.perf_counter()
+            for kind, tree, h, eid, nodes in ops_b:
+                key = (tree, eid)
+                if kind == "del":
+                    reb_live.pop(key, None)
+                else:
+                    reb_live[key] = nodes
+            _, rt, re_, rh, off, nd = _live_arrays(reb_live, hashes, T)
+            rebuilt = build_bank_from_rows(T, rt, re_, rh, off, nd)
+            t_reb += time.perf_counter() - t0
+
+        # ---- equivalence gate: the incrementally maintained bank answers
+        # exactly like a from-scratch bulk build.  No false negatives:
+        # every live key's exact hash is stored in its tree.  Identical
+        # answers: the routed lookup returns the same node list from both
+        # (a rare fingerprint collision aliases both banks identically).
+        ks, rt, re_, rh, off, nd = _live_arrays(live, hashes, T)
+        fresh = build_bank_from_rows(T, rt, re_, rh, off, nd)
+        rows_i, _ = inc.find_exact(rt, rh)
+        rows_f, _ = fresh.find_exact(rt, rh)
+        equal = (len(live) == int(inc.num_items.sum())
+                 and bool((rows_i >= 0).all())
+                 and bool((rows_f >= 0).all()))
+        for j, k in enumerate(ks):
+            h = int(rh[j])
+            hi, ri, _ = inc.lookup(k[0], h)
+            hf, rf, _ = fresh.lookup(k[0], h)
+            if not (hi and hf and
+                    inc.walk_row(ri) == fresh.walk_row(rf)):
+                equal = False
+                break
+
+        rows.append(dict(
+            trees=T, start_rows=bank.num_rows, ops=n_ops,
+            live_rows=len(live),
+            inc_us_per_op=t_inc / n_ops * 1e6,
+            rebuild_us_per_op=t_reb / n_ops * 1e6,
+            speedup=t_reb / t_inc if t_inc else 0.0,
+            query_us=t_query / max(1, len(batches) * queries_per_batch)
+            * 1e6,
+            expansions=eng.stats["expansions"],
+            compactions=eng.stats["compactions"],
+            equal=equal,
+            final_buckets_inc=inc.num_buckets,
+            final_buckets_rebuild=rebuilt.num_buckets,
+        ))
+    return rows
+
+
+def print_rows(rows: List[Dict]) -> None:
+    print("churn: incremental maintenance vs full rebuild "
+          "(paper: cuckoo = dynamic updates)")
+    print(f"{'trees':>6s} {'ops':>6s} {'live':>6s} {'inc_us/op':>10s} "
+          f"{'reb_us/op':>10s} {'speedup':>8s} {'cmpct':>6s} "
+          f"{'equal':>6s}")
+    for r in rows:
+        print(f"{r['trees']:6d} {r['ops']:6d} {r['live_rows']:6d} "
+              f"{r['inc_us_per_op']:10.1f} {r['rebuild_us_per_op']:10.1f} "
+              f"{r['speedup']:8.1f} {r['compactions']:6d} "
+              f"{str(r['equal']):>6s}")
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        json_path = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    unknown = [a for a in args if a not in ("--fast", "--smoke")]
+    if unknown:
+        sys.exit(f"usage: python -m benchmarks.bench_churn "
+                 f"[--fast|--smoke] [--json PATH] "
+                 f"(unknown: {' '.join(unknown)})")
+    smoke = "--smoke" in args
+    fast = smoke or "--fast" in args
+    kw = (dict(tree_counts=(16,), entities_per_tree=48, ops=256, batch=32)
+          if smoke else
+          dict(tree_counts=(16, 64), entities_per_tree=48, ops=1024)
+          if fast else
+          dict(tree_counts=(16, 64, 256), entities_per_tree=48, ops=4096))
+    rows = run(**kw)
+    if any(r["speedup"] <= 1.0 for r in rows):
+        rows = run(**kw)        # one retry: absorb CI scheduler noise
+    print_rows(rows)
+    for r in rows:
+        assert r["equal"], "incremental bank diverged from fresh build"
+        assert r["speedup"] > 1.0, (
+            f"incremental maintenance must beat full rebuild per-op "
+            f"(got {r['speedup']:.2f}x at T={r['trees']})")
+    if json_path:
+        from . import bench_bank
+        bank_rows = bench_bank.run(
+            tree_counts=(1, 4) if smoke else (1, 8, 64),
+            entities_per_tree=8 if smoke else 48,
+            batch_per_tree=16 if smoke else 64,
+            repeats=1 if smoke else 3)
+        with open(json_path, "w") as f:
+            json.dump({"churn": rows, "bank": bank_rows}, f, indent=2)
+        print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,15 @@
 """End-to-end RAG serving latency: retrieval vs generation split, CPU-scale
-(the paper's system context: retrieval must not bottleneck the LLM)."""
+(the paper's system context: retrieval must not bottleneck the LLM).
+
+``run_bank_sweep`` is the many-tree view the ROADMAP asks for: retrieval
+fraction vs T through the bank-routed pipeline, with the per-op maintenance
+cost (incremental vs rebuild, from ``bench_churn``) in the same table — one
+place to read both what serving a bank of T trees costs and what keeping it
+fresh costs."""
 from __future__ import annotations
 
 import time
+from typing import Dict, List, Sequence
 
 import jax
 
@@ -34,6 +41,62 @@ def run(num_trees: int = 200, queries: int = 8, max_new: int = 8):
     return rows
 
 
+def run_bank_sweep(tree_counts: Sequence[int] = (8, 32, 128),
+                   queries: int = 4, max_new: int = 8,
+                   churn_ops: int = 256) -> List[Dict]:
+    """Retrieval fraction vs T (bank-routed pipeline) + maintenance cost.
+
+    Retrieval goes through ``use_bank=True`` (device bank lookup, global
+    fan-out) so the cost scales with T the way the paper's many-tree claim
+    is about; the maintenance columns come from ``bench_churn`` at the
+    same T, putting serving cost and upkeep cost side by side.
+    """
+    from . import bench_churn
+    cfg = get_arch("paper-cftrag").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rows = []
+    for T in tree_counts:
+        corpus = hospital_corpus(num_trees=T, num_queries=queries)
+        engine = ServeEngine(cfg, params, cache_size=256, batch_size=1)
+        rag = RAGPipeline(corpus, engine, tokenizer=HashTokenizer(cfg.vocab),
+                          use_bank=True)
+        rag.answer(corpus.queries[0], max_new_tokens=max_new)  # warm compile
+        t_ret = t_gen = 0.0
+        for q in corpus.queries[:queries]:
+            t0 = time.perf_counter()
+            rag.retrieve(q)
+            r = time.perf_counter() - t0          # this query's retrieval
+            t0 = time.perf_counter()
+            rag.answer(q, max_new_tokens=max_new)  # re-runs retrieve inside
+            t_ret += r
+            t_gen += max(time.perf_counter() - t0 - r, 0.0)
+        churn = bench_churn.run(tree_counts=(T,), entities_per_tree=24,
+                                ops=churn_ops, batch=32)[0]
+        ret_ms = t_ret / queries * 1e3
+        gen_ms = max(t_gen / queries * 1e3, 1e-6)
+        rows.append(dict(
+            trees=T, retrieval_ms=ret_ms, generation_ms=gen_ms,
+            retrieval_fraction=ret_ms / (ret_ms + gen_ms),
+            maint_inc_us_per_op=churn["inc_us_per_op"],
+            maint_rebuild_us_per_op=churn["rebuild_us_per_op"],
+            maint_speedup=churn["speedup"],
+            maint_equal=churn["equal"],
+        ))
+    return rows
+
+
+def print_bank_sweep(rows: List[Dict]) -> None:
+    print("serving vs #trees: retrieval fraction + bank upkeep cost")
+    print(f"{'trees':>6s} {'ret_ms':>8s} {'gen_ms':>8s} {'ret_frac':>9s} "
+          f"{'inc_us/op':>10s} {'reb_us/op':>10s} {'maint_x':>8s}")
+    for r in rows:
+        print(f"{r['trees']:6d} {r['retrieval_ms']:8.2f} "
+              f"{r['generation_ms']:8.1f} {r['retrieval_fraction']:9.3f} "
+              f"{r['maint_inc_us_per_op']:10.1f} "
+              f"{r['maint_rebuild_us_per_op']:10.1f} "
+              f"{r['maint_speedup']:8.1f}")
+
+
 def main():
     rows = run()
     print("serving: per-query retrieval vs generation (CPU smoke model)")
@@ -46,6 +109,8 @@ def main():
     gen = sum(r["generation_ms"] for r in rows) / len(rows)
     print(f"mean: retrieval {ret:.2f} ms vs generation {gen:.1f} ms "
           f"({100*ret/(ret+gen):.2f}% of latency)")
+    print()
+    print_bank_sweep(run_bank_sweep())
 
 
 if __name__ == "__main__":

@@ -8,8 +8,8 @@ from __future__ import annotations
 
 import sys
 
-from . import (bench_bank, bench_fig5, bench_filter, bench_kernels,
-               bench_serving, bench_table1, bench_table2)
+from . import (bench_bank, bench_churn, bench_fig5, bench_filter,
+               bench_kernels, bench_serving, bench_table1, bench_table2)
 
 
 def main() -> None:
@@ -94,6 +94,21 @@ def main() -> None:
         csv.append((f"bank/trees{r['trees']}/lookup",
                     r["lookup_vmap_s"] * 1e6, r["lookup_speedup"]))
 
+    churn_kw = (dict(tree_counts=(16,), entities_per_tree=24, ops=128,
+                     batch=32) if smoke else
+                dict(tree_counts=(16, 64), entities_per_tree=32, ops=512)
+                if fast else
+                dict(tree_counts=(16, 64, 256), ops=2048))
+    rows = bench_churn.run(**churn_kw)
+    print("\n== Churn: incremental bank maintenance vs full rebuild ==")
+    bench_churn.print_rows(rows)
+    for r in rows:
+        assert r["equal"], "incremental bank diverged from fresh build"
+        csv.append((f"churn/trees{r['trees']}/incremental",
+                    r["inc_us_per_op"], r["speedup"]))
+        csv.append((f"churn/trees{r['trees']}/rebuild",
+                    r["rebuild_us_per_op"], 1.0))
+
     print("\n== Kernel microbenchmarks (vs jnp oracle) ==")
     for name, work, derived in bench_kernels.run():
         print(f"  {name:34s} work~{work:10.1f}  derived {derived:.3e}")
@@ -108,6 +123,14 @@ def main() -> None:
               f"({100 * ret / (ret + gen):.2f}% of latency)")
         csv.append(("serving/retrieval_fraction", ret * 1e3,
                     ret / (ret + gen)))
+        rows = bench_serving.run_bank_sweep()
+        print("\n== Serving vs #trees: retrieval fraction + upkeep ==")
+        bench_serving.print_bank_sweep(rows)
+        for r in rows:
+            csv.append((f"serving/trees{r['trees']}/retrieval_fraction",
+                        r["retrieval_ms"] * 1e3, r["retrieval_fraction"]))
+            csv.append((f"serving/trees{r['trees']}/maint_speedup",
+                        r["maint_inc_us_per_op"], r["maint_speedup"]))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

@@ -1,5 +1,5 @@
 """CFT-RAG core: improved cuckoo filter + entity-tree retrieval."""
-from .bank import FilterBank, build_bank
+from .bank import FilterBank, build_bank, build_bank_from_rows
 from .baselines import BloomTRAG, BloomTRAG2, NaiveTRAG
 from .blocklist import BlockListArena, BlockListBuilder, CSRArena, build_csr
 from .context import (EntityContext, context_from_arena, context_from_csr,
@@ -8,13 +8,15 @@ from .cuckoo import (CFTIndex, CuckooFilter, CuckooTables, build_index,
                      bulk_place)
 from .lookup import (LookupResult, bump_temperature, bump_temperature_bank,
                      lookup_batch, lookup_batch_bank, lookup_batch_trees,
-                     sort_buckets)
+                     sort_buckets, sort_buckets_bank)
+from .maintenance import BankDelta, MaintenanceEngine, MaintenanceReport
 from .trag import (CFTRAG, CFTDeviceState, DeviceRetrieval, build_retriever,
                    retrieve_device)
 from .tree import EntityForest, build_forest
 
 __all__ = [
-    "FilterBank", "build_bank",
+    "FilterBank", "build_bank", "build_bank_from_rows",
+    "BankDelta", "MaintenanceEngine", "MaintenanceReport",
     "BloomTRAG", "BloomTRAG2", "NaiveTRAG",
     "BlockListArena", "BlockListBuilder", "CSRArena", "build_csr",
     "EntityContext", "context_from_arena", "context_from_csr",
@@ -22,7 +24,7 @@ __all__ = [
     "CFTIndex", "CuckooFilter", "CuckooTables", "build_index", "bulk_place",
     "LookupResult", "bump_temperature", "bump_temperature_bank",
     "lookup_batch", "lookup_batch_bank", "lookup_batch_trees",
-    "sort_buckets",
+    "sort_buckets", "sort_buckets_bank",
     "CFTRAG", "CFTDeviceState", "DeviceRetrieval", "build_retriever",
     "retrieve_device",
     "EntityForest", "build_forest",

@@ -90,6 +90,37 @@ class FilterBank:
     def contains(self, tree: int, h: int) -> bool:
         return self._find(tree, np.uint32(h)) is not None
 
+    def find_exact(self, tree_ids: np.ndarray, hs: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized exact-hash slot search (host maintenance path).
+
+        Unlike :meth:`lookup`, matches on the stored 32-bit hash rather
+        than the 12-bit fingerprint, so a colliding neighbour can never
+        shadow the queried entity.  Returns flat-row and slot indices,
+        both -1 where the (tree, hash) is not stored.
+        """
+        tree_ids = np.asarray(tree_ids, np.int64)
+        hq = np.asarray(hs, np.uint32)
+        nb, s = self.num_buckets, self.slots
+        fps = self.fingerprints.reshape(-1, s)
+        hst = self.stored_hash.reshape(-1, s)
+        fp = hashing.fingerprint(hq)
+        i1 = hashing.bucket_i1(hq, nb).astype(np.int64)
+        i2 = hashing.alt_bucket(i1.astype(np.uint32), fp,
+                                nb).astype(np.int64)
+        base = tree_ids * nb
+        cand = np.stack([base + i1, base + i2], axis=1)        # (k, 2)
+        match = (hst[cand] == hq[:, None, None]) & \
+                (fps[cand] != hashing.EMPTY_FP)                # (k, 2, S)
+        flat = match.reshape(match.shape[0], -1)
+        found = flat.any(axis=1)
+        first = flat.argmax(axis=1)
+        which, slot = first // s, first % s
+        row = np.where(found, np.take_along_axis(
+            cand, which[:, None], axis=1)[:, 0], -1)
+        return row.astype(np.int64), np.where(found, slot, -1).astype(
+            np.int64)
+
     def walk_row(self, row: int) -> List[int]:
         """Node ids of one (tree, entity) CSR row."""
         lo, hi = int(self.csr_offsets[row]), int(self.csr_offsets[row + 1])
@@ -105,6 +136,40 @@ class FilterBank:
         """Device-ready (fingerprints, temperature, heads) copies."""
         return (self.fingerprints.copy(), self.temperature.copy(),
                 self.heads.copy())
+
+    def absorb_temperature(self, device_state) -> int:
+        """Write device-side temperature back into the host bank.
+
+        ``device_state`` is a ``CFTDeviceState`` (or any object with a
+        ``temperature`` attribute) or a bare ``(T, NB, S)`` array.  Returns
+        the number of new bumps absorbed (sum of positive per-slot deltas)
+        — the signal the maintenance sort trigger integrates.  Replaces the
+        hand-rolled ``dataclasses.replace`` temperature write-back.
+        """
+        temp = getattr(device_state, "temperature", device_state)
+        temp = np.asarray(temp, dtype=np.int32)
+        if temp.shape != self.temperature.shape:
+            raise ValueError(f"temperature shape {temp.shape} != bank "
+                             f"{self.temperature.shape} (stale layout?)")
+        bumps = int(np.maximum(temp - self.temperature, 0).sum())
+        self.temperature[...] = temp
+        return bumps
+
+    def sort_buckets(self) -> None:
+        """Host-side idle-time adaptive sort over the whole bank: reorder
+        every bucket's slots by descending temperature, empties last — the
+        same stable ordering as the device-side ``sort_buckets_bank``, so
+        host tables and a freshly restaged device state agree slot-for-slot.
+        """
+        flat = self.fingerprints.reshape(-1, self.slots)
+        key = np.where(flat == hashing.EMPTY_FP, np.int64(-2 ** 62),
+                       self.temperature.reshape(-1, self.slots)
+                       .astype(np.int64))
+        order = np.argsort(-key, axis=1, kind="stable")
+        for arr in (self.fingerprints, self.temperature, self.heads,
+                    self.entity_ids, self.stored_hash):
+            a = arr.reshape(-1, self.slots)
+            a[...] = np.take_along_axis(a, order, axis=1)
 
 
 # ------------------------------------------------------------------- build
@@ -143,11 +208,14 @@ def _pick_num_buckets(max_per_tree: int, slots: int,
     return nb
 
 
-def _scalar_insert(fps: np.ndarray, heads: np.ndarray, eids: np.ndarray,
-                   hs: np.ndarray, base: int, nb: int, slots: int,
-                   h: int, row: int, eid: int, rng, max_kicks: int) -> bool:
+def _scalar_insert(fps: np.ndarray, temps: np.ndarray, heads: np.ndarray,
+                   eids: np.ndarray, hs: np.ndarray, base: int, nb: int,
+                   slots: int, h: int, row: int, eid: int, rng,
+                   max_kicks: int, temp: int = 0) -> bool:
     """Scalar cuckoo insert into flat bank tables, confined to one tree's
-    bucket range [base, base + nb)."""
+    bucket range [base, base + nb).  Temperature rides along the kick chain
+    so displaced hot slots keep their heat (matters for live maintenance;
+    a fresh build passes all-zero temps)."""
     h = np.uint32(h)
     fp = hashing.fingerprint(h)
     i1 = int(hashing.bucket_i1(h, nb))
@@ -157,42 +225,52 @@ def _scalar_insert(fps: np.ndarray, heads: np.ndarray, eids: np.ndarray,
         if empty.size:
             s = int(empty[0])
             fps[i, s], heads[i, s], eids[i, s], hs[i, s] = fp, row, eid, h
+            temps[i, s] = temp
             return True
     i = base + int(rng.choice((i1, i2)))
-    cur = (np.uint32(fp), np.int32(row), np.int32(eid), np.uint32(h))
+    cur = (np.uint32(fp), np.int32(temp), np.int32(row), np.int32(eid),
+           np.uint32(h))
     for _ in range(max_kicks):
         s = int(rng.integers(slots))
-        victim = (fps[i, s], heads[i, s], eids[i, s], hs[i, s])
-        fps[i, s], heads[i, s], eids[i, s], hs[i, s] = cur
+        victim = (fps[i, s], temps[i, s], heads[i, s], eids[i, s], hs[i, s])
+        fps[i, s], temps[i, s], heads[i, s], eids[i, s], hs[i, s] = cur
         cur = victim
         local = int(hashing.alt_bucket(np.uint32(i - base), cur[0], nb))
         i = base + local
         empty = np.nonzero(fps[i] == hashing.EMPTY_FP)[0]
         if empty.size:
             s = int(empty[0])
-            fps[i, s], heads[i, s], eids[i, s], hs[i, s] = cur
+            fps[i, s], temps[i, s], heads[i, s], eids[i, s], hs[i, s] = cur
             return True
     return False
 
 
-def build_bank(forest: EntityForest, num_buckets: Optional[int] = None,
-               slots: int = DEFAULT_SLOTS, seed: int = 0x5EED,
-               bulk: bool = True, max_kicks: int = DEFAULT_MAX_KICKS,
-               load_target: float = DEFAULT_LOAD_TARGET) -> FilterBank:
-    """Build the bank for ``forest``.
+def build_bank_from_rows(num_trees: int, row_tree: np.ndarray,
+                         row_entity: np.ndarray, row_hash: np.ndarray,
+                         csr_offsets: np.ndarray, csr_nodes: np.ndarray,
+                         num_buckets: Optional[int] = None,
+                         slots: int = DEFAULT_SLOTS, seed: int = 0x5EED,
+                         bulk: bool = True,
+                         max_kicks: int = DEFAULT_MAX_KICKS,
+                         load_target: float = DEFAULT_LOAD_TARGET,
+                         row_temp: Optional[np.ndarray] = None
+                         ) -> FilterBank:
+    """Build a bank directly from explicit (tree, entity) rows.
 
-    ``bulk=True`` (default) is the vectorized path: batched hashing +
-    grouped empty-slot placement across all T trees at once, scalar kicks
-    only for the remainder.  ``bulk=False`` inserts every item through the
-    scalar path — kept as the equivalence/benchmark reference.
+    The shared core of :func:`build_bank` (which derives rows from a
+    forest), the maintenance engine's restage path (which re-homes the live
+    rows of a mutated bank at a larger NB, ``row_temp`` carrying their
+    temperatures), and the churn-equivalence tests (from-scratch reference
+    for an incrementally maintained bank).
     """
-    T = max(1, forest.num_trees)
-    row_tree, row_entity, csr_offsets, csr_nodes, entity_hashes = \
-        _bank_rows(forest)
+    T = max(1, int(num_trees))
+    row_tree = np.asarray(row_tree, np.int32)
+    row_entity = np.asarray(row_entity, np.int32)
+    item_hash = np.asarray(row_hash, np.uint32)
     m = row_tree.shape[0]
-    item_hash = (entity_hashes[row_entity] if m
-                 else np.zeros(0, np.uint32)).astype(np.uint32)
     item_row = np.arange(m, dtype=np.int32)
+    item_temp = (np.zeros(m, np.int32) if row_temp is None
+                 else np.asarray(row_temp, np.int32))
 
     per_tree = np.bincount(row_tree, minlength=T) if m else np.zeros(T, int)
     nb = num_buckets or _pick_num_buckets(int(per_tree.max()) if m else 1,
@@ -216,21 +294,24 @@ def build_bank(forest: EntityForest, num_buckets: Optional[int] = None,
             i1 = hashing.bucket_i1(item_hash, nb)
             i2 = hashing.alt_bucket(i1, fp, nb)
             base = row_tree.astype(np.int64) * nb
-            r_head, r_eid, r_hash, _ = bulk_place(
+            r_head, r_eid, r_hash, r_temp = bulk_place(
                 fps, temps, heads, eids, hs, fp, base + i1, base + i2,
-                item_row, row_entity, item_hash, nb=nb, rng=rng)
+                item_row, row_entity, item_hash, nb=nb, rng=rng,
+                new_temps=item_temp)
             stats["bulk_placed"] = int(m - r_head.size)
             stats["evicted"] = int(r_head.size)
         else:
             r_head, r_eid, r_hash = item_row, row_entity, item_hash
+            r_temp = item_temp
 
         ok = True
         for j in range(r_head.size):
             # a remainder item's tree is recoverable from its row payload
             tree = int(row_tree[int(r_head[j])])
-            if not _scalar_insert(fps, heads, eids, hs, tree * nb, nb,
-                                  slots, int(r_hash[j]), int(r_head[j]),
-                                  int(r_eid[j]), rng, max_kicks):
+            if not _scalar_insert(fps, temps, heads, eids, hs, tree * nb,
+                                  nb, slots, int(r_hash[j]),
+                                  int(r_head[j]), int(r_eid[j]), rng,
+                                  max_kicks, temp=int(r_temp[j])):
                 ok = False
                 break
         if ok and (m == 0 or per_tree.max() / (nb * slots)
@@ -245,8 +326,31 @@ def build_bank(forest: EntityForest, num_buckets: Optional[int] = None,
         temperature=temps.reshape(shape),
         heads=heads.reshape(shape), entity_ids=eids.reshape(shape),
         stored_hash=hs.reshape(shape),
-        csr_offsets=csr_offsets, csr_nodes=csr_nodes,
+        csr_offsets=np.asarray(csr_offsets, np.int32),
+        csr_nodes=np.asarray(csr_nodes, np.int32),
         row_tree=row_tree, row_entity=row_entity,
         num_items=np.bincount(row_tree, minlength=T).astype(np.int32),
         build_stats=stats,
     )
+
+
+def build_bank(forest: EntityForest, num_buckets: Optional[int] = None,
+               slots: int = DEFAULT_SLOTS, seed: int = 0x5EED,
+               bulk: bool = True, max_kicks: int = DEFAULT_MAX_KICKS,
+               load_target: float = DEFAULT_LOAD_TARGET) -> FilterBank:
+    """Build the bank for ``forest``.
+
+    ``bulk=True`` (default) is the vectorized path: batched hashing +
+    grouped empty-slot placement across all T trees at once, scalar kicks
+    only for the remainder.  ``bulk=False`` inserts every item through the
+    scalar path — kept as the equivalence/benchmark reference.
+    """
+    row_tree, row_entity, csr_offsets, csr_nodes, entity_hashes = \
+        _bank_rows(forest)
+    m = row_tree.shape[0]
+    item_hash = (entity_hashes[row_entity] if m
+                 else np.zeros(0, np.uint32)).astype(np.uint32)
+    return build_bank_from_rows(
+        max(1, forest.num_trees), row_tree, row_entity, item_hash,
+        csr_offsets, csr_nodes, num_buckets=num_buckets, slots=slots,
+        seed=seed, bulk=bulk, max_kicks=max_kicks, load_target=load_target)

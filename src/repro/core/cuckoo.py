@@ -35,7 +35,9 @@ def bulk_place(fingerprints: np.ndarray, temperature: np.ndarray,
                stored_hash: np.ndarray, fp: np.ndarray, b1: np.ndarray,
                b2: np.ndarray, new_heads: np.ndarray, new_eids: np.ndarray,
                new_hashes: np.ndarray, nb: int, rng,
-               max_rounds: int = 48) -> Tuple[np.ndarray, ...]:
+               max_rounds: int = 48,
+               new_temps: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, ...]:
     """Vectorized cuckoo placement into flat ``(num_rows, S)`` tables.
 
     Rows may be a single filter's buckets or a whole filter bank flattened
@@ -51,13 +53,15 @@ def bulk_place(fingerprints: np.ndarray, temperature: np.ndarray,
     rides along) and non-leaders flip to their other bucket.  Returns
     ``(heads, eids, hashes, temps)`` of the items still homeless after
     ``max_rounds`` — the scalar-fallback remainder, ~empty below the
-    expansion load threshold.
+    expansion load threshold.  ``new_temps`` seeds the incoming items'
+    temperatures (restage path: live slots keep their heat); default 0.
     """
     pool_fp = np.asarray(fp, np.uint32).copy()
     pool_head = np.asarray(new_heads, np.int32).copy()
     pool_eid = np.asarray(new_eids, np.int32).copy()
     pool_hash = np.asarray(new_hashes, np.uint32).copy()
-    pool_temp = np.zeros(pool_fp.shape[0], np.int32)
+    pool_temp = (np.zeros(pool_fp.shape[0], np.int32) if new_temps is None
+                 else np.asarray(new_temps, np.int32).copy())
     bucket = np.asarray(b1, np.int64).copy()
     other = np.asarray(b2, np.int64).copy()
     slots = fingerprints.shape[1]

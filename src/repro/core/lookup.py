@@ -91,14 +91,32 @@ def bump_temperature_bank(temperature: jax.Array, tree_ids: jax.Array,
         res.hit.astype(temperature.dtype))
 
 
-def sort_buckets(fingerprints: jax.Array, temperature: jax.Array,
-                 heads: jax.Array, entity_ids: jax.Array):
-    """Reorder slots of every bucket by descending temperature (device-side
-    analogue of the paper's idle-time adaptive sort); empties sink last."""
+def _sort_slots(fingerprints: jax.Array, temperature: jax.Array,
+                *tables: jax.Array):
+    """Stable per-bucket slot reorder by descending temperature, empties
+    last; any number of payload tables ride along under the same order."""
     key = jnp.where(fingerprints == jnp.uint32(hashing.EMPTY_FP),
                     jnp.int64(-(2 ** 62)) if temperature.dtype == jnp.int64
                     else jnp.int32(-(2 ** 30)),
                     temperature.astype(jnp.int32))
     order = jnp.argsort(-key, axis=1, stable=True)
     take = lambda a: jnp.take_along_axis(a, order, axis=1)
-    return take(fingerprints), take(temperature), take(heads), take(entity_ids)
+    return (take(fingerprints), take(temperature)) + tuple(
+        take(t) for t in tables)
+
+
+def sort_buckets(fingerprints: jax.Array, temperature: jax.Array,
+                 heads: jax.Array, entity_ids: jax.Array):
+    """Reorder slots of every bucket by descending temperature (device-side
+    analogue of the paper's idle-time adaptive sort); empties sink last."""
+    return _sort_slots(fingerprints, temperature, heads, entity_ids)
+
+
+def sort_buckets_bank(fingerprints: jax.Array, temperature: jax.Array,
+                      *tables: jax.Array):
+    """Bank-axis idle-time sort: vmap of :func:`sort_buckets` over the tree
+    axis.  Tables are ``(T, NB, S)``; hot fingerprints float to slot 0 of
+    their bucket within every tree's filter at once.  Payload tables
+    (heads, entity ids, ...) are variadic so both the 3-table device state
+    and the 5-table host bank restage through the same routine."""
+    return jax.vmap(_sort_slots)(fingerprints, temperature, *tables)

@@ -1,0 +1,426 @@
+"""Dynamic bank maintenance — incremental updates on a live FilterBank.
+
+The paper sells the cuckoo filter over Bloom variants because it "supports
+rapid membership queries and dynamic updates"; this module supplies the
+*dynamic* half for the many-tree bank.  A built ``FilterBank`` is immutable
+everywhere else in the codebase — any change used to mean a full vectorized
+rebuild.  ``MaintenanceEngine`` mutates the live bank in place instead:
+
+* **insert** — queued ``(tree, entity, nodes)`` rows append to the bank CSR
+  arena and batch-place through ``bulk_place`` confined to each tree's
+  bucket range, with the scalar kick chain as eviction fallback;
+* **delete** — exact stored-hash slot removal (the host keeps the original
+  32-bit hash per slot, so maintenance never deletes a fingerprint-colliding
+  neighbour) with CSR row tombstoning; tombstones are reclaimed by a
+  threshold-triggered **compaction** that rebuilds the CSR arena and remaps
+  the slot payloads;
+* **expand** — when one tree outgrows the shared per-tree bucket count the
+  whole bank restages at double NB (*restage policy*: all trees share one
+  NB so the ``(T, NB, S)`` device layout and the Pallas kernels stay
+  unchanged; a per-tree ragged layout is the documented alternative and a
+  ROADMAP follow-on).  Restage preserves slot temperatures.
+
+Closing the paper's temperature feedback loop: the engine *harvests* device
+temperature after each query batch (``absorb`` →
+``FilterBank.absorb_temperature``), integrates the bump count, and a trigger
+policy (``sort_threshold`` new bumps) schedules the idle-time adaptive sort
+— host-side here, ``sort_buckets_bank`` on device — so hot entities migrate
+to slot 0 and resolve on the first probe.
+
+``maintain()`` is the serving engine's idle-time hook: absorb → apply
+pending delta → compact if worthwhile → sort if hot enough, returning a
+``MaintenanceReport`` whose ``changed`` flag tells the caller to restage
+its ``CFTDeviceState`` from the mutated bank.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple, Union
+
+import numpy as np
+
+from . import hashing
+from .bank import FilterBank, _scalar_insert, build_bank_from_rows
+from .cuckoo import (DEFAULT_LOAD_THRESHOLD, DEFAULT_MAX_KICKS, NULL,
+                     bulk_place)
+
+Key = Union[str, int]              # entity name or 32-bit entity hash
+
+
+def _as_hash(key: Key) -> int:
+    return int(hashing.entity_hash(key)) if isinstance(key, str) \
+        else int(np.uint32(key))
+
+
+@dataclasses.dataclass
+class BankDelta:
+    """Pending mutations, recorded until the next idle window.
+
+    Within one delta, deletes apply before inserts; inserting a key that is
+    already live replaces it (old CSR row tombstoned).  Queue order between
+    two operations on the *same* key in the same phase is collapsed to the
+    last one queued — callers needing strict sequential semantics apply
+    between ops.
+    """
+    inserts: List[Tuple[int, int, int, List[int]]] = \
+        dataclasses.field(default_factory=list)   # (tree, hash, eid, nodes)
+    deletes: List[Tuple[int, int]] = \
+        dataclasses.field(default_factory=list)   # (tree, hash)
+
+    def __len__(self) -> int:
+        return len(self.inserts) + len(self.deletes)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+
+@dataclasses.dataclass
+class MaintenanceReport:
+    """What one idle-time maintenance pass did."""
+    absorbed_bumps: int = 0
+    inserted: int = 0
+    deleted: int = 0
+    replaced: int = 0
+    missed_deletes: int = 0
+    expansions: int = 0
+    compacted: bool = False
+    sorted: bool = False
+
+    @property
+    def changed(self) -> bool:
+        """True when bank tables/CSR mutated — device state needs restage."""
+        return bool(self.inserted or self.deleted or self.replaced
+                    or self.expansions or self.compacted or self.sorted)
+
+
+class MaintenanceEngine:
+    """Incremental insert/delete/expand + temperature-driven sort policy
+    over a live :class:`FilterBank`.
+
+    The engine owns the bank's liveness bookkeeping: ``row_alive`` marks
+    CSR rows still referenced by a filter slot, ``row_hash`` keeps each
+    row's original entity hash (recovered from the built slots) so a
+    restage or compaction can re-home every live row without the forest.
+    Compaction and expansion renumber CSR rows — previously returned row
+    ids are invalidated, node lists (``walk_row``) are preserved exactly.
+    """
+
+    def __init__(self, bank: FilterBank, seed: int = 0x5EED,
+                 sort_threshold: int = 256,
+                 load_threshold: float = DEFAULT_LOAD_THRESHOLD,
+                 compact_min_dead: int = 32,
+                 compact_dead_frac: float = 0.25,
+                 max_kicks: int = DEFAULT_MAX_KICKS):
+        self.bank = bank
+        self.delta = BankDelta()
+        self.sort_threshold = sort_threshold
+        self.load_threshold = load_threshold
+        self.compact_min_dead = compact_min_dead
+        self.compact_dead_frac = compact_dead_frac
+        self.max_kicks = max_kicks
+        self._seed = seed
+        self._rng = np.random.default_rng(seed)
+        self.bumps_since_sort = 0
+        self.stats: Dict[str, int] = {
+            "inserted": 0, "deleted": 0, "replaced": 0,
+            "missed_deletes": 0, "expansions": 0, "compactions": 0,
+            "sorts": 0, "absorbed_bumps": 0}
+        r = bank.num_rows
+        self.row_alive = np.ones(r, dtype=bool)
+        self.row_hash = np.zeros(r, dtype=np.uint32)
+        fps, _, heads, _, hs = self._flat()
+        occ = fps != hashing.EMPTY_FP
+        self.row_hash[heads[occ]] = hs[occ]
+
+    # ------------------------------------------------------------ plumbing
+    def _flat(self):
+        """Flat (T*NB, S) in-place views of the bank tables."""
+        b = self.bank
+        n = b.num_trees * b.num_buckets
+        return (b.fingerprints.reshape(n, b.slots),
+                b.temperature.reshape(n, b.slots),
+                b.heads.reshape(n, b.slots),
+                b.entity_ids.reshape(n, b.slots),
+                b.stored_hash.reshape(n, b.slots))
+
+    @property
+    def num_dead_rows(self) -> int:
+        return int((~self.row_alive).sum())
+
+    def _find_slots(self, trees: np.ndarray, hs_q: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact-hash slot search (``FilterBank.find_exact``): maintenance
+        matches on the stored 32-bit hash, not the 12-bit fingerprint, so
+        it never mutates a colliding neighbour's slot."""
+        return self.bank.find_exact(trees, hs_q)
+
+    # ------------------------------------------------------------ queueing
+    def _check_tree(self, tree: int) -> int:
+        # reject at queue time: an out-of-range tree discovered mid-apply
+        # would leave the CSR arena mutated but the placement crashed
+        if not 0 <= tree < self.bank.num_trees:
+            raise ValueError(f"tree {tree} out of range "
+                             f"[0, {self.bank.num_trees})")
+        return tree
+
+    def queue_insert(self, tree: int, key: Key, nodes: Sequence[int],
+                     entity_id: int = NULL) -> None:
+        """Record a (tree, entity) row for the next apply; ``nodes`` are
+        the entity's node ids within that tree (its CSR row)."""
+        self.delta.inserts.append((self._check_tree(int(tree)),
+                                   _as_hash(key), int(entity_id),
+                                   [int(n) for n in nodes]))
+
+    def queue_delete(self, tree: int, key: Key) -> None:
+        self.delta.deletes.append((self._check_tree(int(tree)),
+                                   _as_hash(key)))
+
+    # --------------------------------------------------------- direct ops
+    def insert(self, tree: int, key: Key, nodes: Sequence[int],
+               entity_id: int = NULL) -> None:
+        """Queue + apply a single insert (bulk callers should queue)."""
+        self.queue_insert(tree, key, nodes, entity_id)
+        self.apply()
+
+    def delete(self, tree: int, key: Key) -> bool:
+        self.queue_delete(tree, key)
+        before = self.stats["deleted"]
+        self.apply()
+        return self.stats["deleted"] > before
+
+    # ------------------------------------------------------------- deletes
+    def _clear_slots(self, rows: np.ndarray, slots: np.ndarray,
+                     trees: np.ndarray) -> int:
+        """Clear found slots + tombstone their CSR rows; returns count."""
+        found = rows >= 0
+        if not found.any():
+            return 0
+        fps, temps, heads, eids, hs = self._flat()
+        r, s = rows[found], slots[found]
+        rids = heads[r, s].astype(np.int64)
+        fps[r, s] = hashing.EMPTY_FP
+        temps[r, s] = 0
+        heads[r, s] = NULL
+        eids[r, s] = NULL
+        hs[r, s] = 0
+        self.row_alive[rids] = False
+        b = self.bank
+        b.num_items -= np.bincount(trees[found],
+                                   minlength=b.num_trees).astype(np.int32)
+        return int(found.sum())
+
+    def _apply_deletes(self, trees: np.ndarray, hs_q: np.ndarray
+                       ) -> Tuple[int, int]:
+        rows, slots = self._find_slots(trees, hs_q)
+        n = self._clear_slots(rows, slots, trees)
+        return n, int(trees.shape[0]) - n
+
+    # ------------------------------------------------------------- inserts
+    def _append_rows(self, trees: np.ndarray, hs_q: np.ndarray,
+                     eids: np.ndarray, nodes: List[List[int]]) -> np.ndarray:
+        """Grow the CSR arena by one row per insert; returns new row ids."""
+        b = self.bank
+        k = trees.shape[0]
+        lens = np.asarray([len(ns) for ns in nodes], dtype=np.int32)
+        base = int(b.csr_offsets[-1])
+        new_off = base + np.cumsum(lens, dtype=np.int32)
+        b.csr_offsets = np.concatenate([b.csr_offsets, new_off])
+        flat = (np.concatenate([np.asarray(ns, np.int32) for ns in nodes])
+                if lens.sum() else np.zeros(0, np.int32))
+        b.csr_nodes = np.concatenate([b.csr_nodes, flat])
+        r0 = b.num_rows
+        b.row_tree = np.concatenate([b.row_tree, trees.astype(np.int32)])
+        b.row_entity = np.concatenate([b.row_entity, eids.astype(np.int32)])
+        self.row_alive = np.concatenate([self.row_alive, np.ones(k, bool)])
+        self.row_hash = np.concatenate([self.row_hash,
+                                        hs_q.astype(np.uint32)])
+        return np.arange(r0, r0 + k, dtype=np.int32)
+
+    def _apply_inserts(self, trees: np.ndarray, hs_q: np.ndarray,
+                       eids: np.ndarray, nodes: List[List[int]]
+                       ) -> Tuple[int, int]:
+        b = self.bank
+        # replace-existing: a live (tree, hash) is deleted first so the
+        # one-slot-per-key invariant (and churn equivalence) holds
+        rows, slots = self._find_slots(trees, hs_q)
+        replaced = self._clear_slots(rows, slots, trees)
+
+        # pre-expand so every tree stays under the load threshold
+        adds = np.bincount(trees, minlength=b.num_trees)
+        cap = b.num_buckets * b.slots
+        while ((b.num_items + adds).max() >= self.load_threshold * cap):
+            self._rebuild(b.num_buckets * 2)
+            self.stats["expansions"] += 1
+            cap = b.num_buckets * b.slots
+
+        new_rows = self._append_rows(trees, hs_q, eids, nodes)
+        fps, temps, heads, eids_t, hs_t = self._flat()
+        fp = hashing.fingerprint(hs_q)
+        i1 = hashing.bucket_i1(hs_q, b.num_buckets)
+        i2 = hashing.alt_bucket(i1, fp, b.num_buckets)
+        base = trees.astype(np.int64) * b.num_buckets
+        r_head, r_eid, r_hash, r_temp = bulk_place(
+            fps, temps, heads, eids_t, hs_t, fp, base + i1, base + i2,
+            new_rows, eids.astype(np.int32), hs_q, nb=b.num_buckets,
+            rng=self._rng)
+        b.num_items += np.bincount(trees,
+                                   minlength=b.num_trees).astype(np.int32)
+        # scalar eviction fallback; a dead kick chain restages at double NB
+        # (the rebuild re-homes every live row incl. the still-homeless
+        # remainder, so the loop simply stops)
+        for j in range(r_head.size):
+            rid = int(r_head[j])
+            tree = int(b.row_tree[rid])
+            if not _scalar_insert(
+                    *self._flat(), tree * b.num_buckets, b.num_buckets,
+                    b.slots, int(r_hash[j]), rid, int(r_eid[j]),
+                    self._rng, self.max_kicks, temp=int(r_temp[j])):
+                self._rebuild(b.num_buckets * 2)
+                self.stats["expansions"] += 1
+                break
+        return int(trees.shape[0]), replaced
+
+    # ------------------------------------------------------------- apply
+    @staticmethod
+    def _dedupe_last(trees: np.ndarray, hs_q: np.ndarray) -> np.ndarray:
+        """Indices keeping only the last occurrence of each (tree, hash)."""
+        key = trees.astype(np.uint64) << np.uint64(32) | \
+            hs_q.astype(np.uint64)
+        _, idx = np.unique(key[::-1], return_index=True)
+        return np.sort(key.shape[0] - 1 - idx)
+
+    def apply(self) -> Dict[str, int]:
+        """Apply the pending delta: deletes, then inserts (bulk_place with
+        scalar fallback).  Returns per-call stats."""
+        d, self.delta = self.delta, BankDelta()
+        out = {"inserted": 0, "deleted": 0, "replaced": 0,
+               "missed_deletes": 0}
+        if d.deletes:
+            trees = np.asarray([t for t, _ in d.deletes], np.int64)
+            hs_q = np.asarray([h for _, h in d.deletes], np.uint32)
+            keep = self._dedupe_last(trees, hs_q)
+            n, miss = self._apply_deletes(trees[keep], hs_q[keep])
+            out["deleted"] = n
+            out["missed_deletes"] = miss
+        if d.inserts:
+            trees = np.asarray([t for t, _, _, _ in d.inserts], np.int64)
+            hs_q = np.asarray([h for _, h, _, _ in d.inserts], np.uint32)
+            eids = np.asarray([e for _, _, e, _ in d.inserts], np.int64)
+            keep = self._dedupe_last(trees, hs_q)
+            nodes = [d.inserts[int(i)][3] for i in keep]
+            n, rep = self._apply_inserts(trees[keep], hs_q[keep],
+                                         eids[keep], nodes)
+            out["inserted"] = n
+            out["replaced"] = rep
+        for k, v in out.items():
+            self.stats[k] += v
+        return out
+
+    # --------------------------------------------------- expand / compact
+    def _rebuild(self, num_buckets: int) -> None:
+        """Restage the whole bank at ``num_buckets`` per tree: compact the
+        CSR arena to live rows, re-place every live row (temperatures
+        preserved), and adopt the new tables into the existing bank object
+        so external references stay valid."""
+        b = self.bank
+        fps, temps, heads, _, _ = self._flat()
+        occ = fps != hashing.EMPTY_FP
+        temp_r = np.zeros(b.num_rows, np.int32)
+        temp_r[heads[occ]] = temps[occ]
+
+        live = np.flatnonzero(self.row_alive)
+        starts = b.csr_offsets[live].astype(np.int64)
+        lens = (b.csr_offsets[live + 1].astype(np.int64) - starts)
+        new_off = np.zeros(live.size + 1, dtype=np.int32)
+        np.cumsum(lens, out=new_off[1:])
+        total = int(lens.sum())
+        pos = np.arange(total, dtype=np.int64)
+        idx = pos + np.repeat(starts - new_off[:-1], lens)
+        new_nodes = (b.csr_nodes[idx] if total else np.zeros(0, np.int32))
+
+        self._seed += 1
+        fresh = build_bank_from_rows(
+            b.num_trees, b.row_tree[live], b.row_entity[live],
+            self.row_hash[live], new_off, new_nodes,
+            num_buckets=num_buckets, slots=b.slots, seed=self._seed,
+            max_kicks=self.max_kicks, row_temp=temp_r[live])
+        for f in dataclasses.fields(FilterBank):
+            setattr(b, f.name, getattr(fresh, f.name))
+        self.row_hash = self.row_hash[live].copy()
+        self.row_alive = np.ones(live.size, dtype=bool)
+
+    def expand(self) -> None:
+        """Bank-wide restage at double NB (temperatures preserved)."""
+        self._rebuild(self.bank.num_buckets * 2)
+        self.stats["expansions"] += 1
+
+    def expand_tree(self, tree: int, force: bool = False) -> bool:
+        """Single-tree expansion request.  Policy: all trees share one NB
+        (keeps the dense ``(T, NB, S)`` device layout and kernels), so a
+        tree outgrowing its range restages the whole bank at double NB.
+        No-op unless that tree is actually past the load threshold, or
+        ``force``."""
+        b = self.bank
+        load = float(b.num_items[tree]) / (b.num_buckets * b.slots)
+        if not force and load < self.load_threshold:
+            return False
+        self.expand()
+        return True
+
+    def compact(self) -> bool:
+        """Reclaim tombstoned CSR rows (same NB); returns True if ran."""
+        if self.num_dead_rows == 0:
+            return False
+        self._rebuild(self.bank.num_buckets)
+        self.stats["compactions"] += 1
+        return True
+
+    def maybe_compact(self) -> bool:
+        dead = self.num_dead_rows
+        total = max(1, self.bank.num_rows)
+        if dead >= self.compact_min_dead and \
+                dead / total >= self.compact_dead_frac:
+            return self.compact()
+        return False
+
+    # --------------------------------------------- temperature feedback
+    def absorb(self, device_state) -> int:
+        """Harvest device temperature into the host bank; accumulate the
+        bump count the sort trigger integrates."""
+        bumps = self.bank.absorb_temperature(device_state)
+        self.bumps_since_sort += bumps
+        self.stats["absorbed_bumps"] += bumps
+        return bumps
+
+    def sort(self) -> None:
+        """Host-side bank-wide idle sort (hot fingerprints to slot 0)."""
+        self.bank.sort_buckets()
+        self.bumps_since_sort = 0
+        self.stats["sorts"] += 1
+
+    def maybe_sort(self) -> bool:
+        if self.bumps_since_sort >= self.sort_threshold:
+            self.sort()
+            return True
+        return False
+
+    # ------------------------------------------------------ idle-time hook
+    def maintain(self, device_state=None) -> MaintenanceReport:
+        """One idle-window pass: absorb device temperature (must run before
+        any slot moves so layouts agree), apply the pending delta, compact
+        if enough rows died, sort if enough heat accumulated.  The caller
+        restages its device state iff ``report.changed``."""
+        rep = MaintenanceReport()
+        if device_state is not None:
+            rep.absorbed_bumps = self.absorb(device_state)
+        exp0 = self.stats["expansions"]
+        if self.delta:
+            out = self.apply()
+            rep.inserted = out["inserted"]
+            rep.deleted = out["deleted"]
+            rep.replaced = out["replaced"]
+            rep.missed_deletes = out["missed_deletes"]
+        rep.compacted = self.maybe_compact()
+        rep.sorted = self.maybe_sort()
+        rep.expansions = self.stats["expansions"] - exp0
+        return rep

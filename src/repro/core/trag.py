@@ -22,7 +22,8 @@ from .bank import FilterBank
 from .context import (EntityContext, context_from_arena, context_from_csr,
                       gather_descendants, gather_hierarchy, render_context)
 from .cuckoo import CFTIndex, build_index
-from .lookup import LookupResult, bump_temperature_bank, lookup_batch_bank
+from .lookup import (LookupResult, bump_temperature_bank, lookup_batch_bank,
+                     sort_buckets_bank)
 from .tree import EntityForest
 
 NULL = -1
@@ -145,6 +146,23 @@ class CFTDeviceState:
                                   np.zeros((1,), np.int32)),
             **cls._forest_arrays(index.forest),
         )
+
+    def with_temperature(self, temperature: jax.Array) -> "CFTDeviceState":
+        """Thread an updated temperature table back into the state — the
+        one sanctioned way to carry a query batch's bumps forward (callers
+        previously hand-rolled ``dataclasses.replace``)."""
+        return dataclasses.replace(self, temperature=temperature)
+
+    def sort_idle(self) -> "CFTDeviceState":
+        """Device-side idle-time maintenance: resort every bucket of every
+        tree hot-fingerprints-first (``sort_buckets_bank``).  Pure-device
+        path for states with no host bank mirror; when a host
+        ``MaintenanceEngine`` owns the tables, sort on the host and restage
+        instead so the two layouts never diverge."""
+        f, t, h = sort_buckets_bank(self.fingerprints, self.temperature,
+                                    self.heads)
+        return dataclasses.replace(self, fingerprints=f, temperature=t,
+                                   heads=h)
 
     @classmethod
     def from_bank(cls, bank: FilterBank, forest: EntityForest

@@ -35,13 +35,19 @@ class _Trie:
         self.terminal: Optional[str] = None
 
 
+def add_to_gazetteer(root: _Trie, entity: str) -> None:
+    """Register one more entity name on a live gazetteer (dynamic bank
+    maintenance inserts entities after the trie was built)."""
+    node = root
+    for tok in tokenize(entity):
+        node = node.children.setdefault(tok.lower(), _Trie())
+    node.terminal = entity
+
+
 def build_gazetteer(entities: Iterable[str]) -> _Trie:
     root = _Trie()
     for ent in entities:
-        node = root
-        for tok in tokenize(ent):
-            node = node.children.setdefault(tok.lower(), _Trie())
-        node.terminal = ent
+        add_to_gazetteer(root, ent)
     return root
 
 

@@ -123,26 +123,116 @@ def _bank_kernel(h_ref, tid_ref, fp_tab_ref, head_tab_ref, hit_ref,
                               firstc - slots).astype(jnp.int32)
 
 
+def _bank_kernel_tiled(h_ref, tid_ref, fp_tab_ref, head_tab_ref, hit_ref,
+                       head_ref, bucket_ref, slot_ref, *, num_buckets: int,
+                       slots: int, tree_tile: int):
+    """Tree-tiled bank routing: grid axis 1 walks tiles of ``tree_tile``
+    trees, so VMEM only ever holds a ``(tree_tile * NB, S)`` slice of the
+    bank instead of the whole ``(T * NB, S)`` table.  The output block is
+    indexed by the query tile alone and revisited across tree steps
+    (accumulate pattern): step 0 writes the miss defaults — identical to
+    the single-block kernel's miss outputs (head -1, bucket i2, slot S-1)
+    — and each step overwrites the lanes whose tree id falls in its tile.
+    Every query belongs to exactly one tile, so the merge never races."""
+    ti = pl.program_id(1)
+    h = h_ref[...].astype(jnp.uint32)                       # (TILE,)
+    tid = tid_ref[...].astype(jnp.int32)
+    fp, i1, i2 = hashing.candidate_buckets(h, num_buckets, jnp)
+    i1 = i1.astype(jnp.int32)
+    i2 = i2.astype(jnp.int32)
+
+    @pl.when(ti == 0)
+    def _init():
+        hit_ref[...] = jnp.zeros((TILE,), jnp.int32)
+        head_ref[...] = jnp.full((TILE,), -1, jnp.int32)
+        bucket_ref[...] = i2
+        slot_ref[...] = jnp.full((TILE,), slots - 1, jnp.int32)
+
+    local_t = tid - ti * tree_tile
+    in_tile = (local_t >= 0) & (local_t < tree_tile)
+    r1 = local_t * num_buckets + i1
+    r2 = local_t * num_buckets + i2
+
+    fp_tab = fp_tab_ref[...]                          # (tree_tile*NB, S)
+    head_tab = head_tab_ref[...]
+    tab = jnp.concatenate([fp_tab, head_tab], axis=1)
+    rows_block = fp_tab.shape[0]
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, rows_block), 1)
+    # out-of-tile lanes produce all-zero one-hots -> zero rows -> no match
+    oh1 = ((row_iota == r1[:, None]) &
+           in_tile[:, None]).astype(jnp.float32)
+    oh2 = ((row_iota == r2[:, None]) &
+           in_tile[:, None]).astype(jnp.float32)
+    rows1 = jax.lax.dot(oh1, tab, precision=jax.lax.Precision.HIGHEST)
+    rows2 = jax.lax.dot(oh2, tab, precision=jax.lax.Precision.HIGHEST)
+
+    fps = jnp.concatenate([rows1[:, :slots], rows2[:, :slots]], axis=1)
+    heads = jnp.concatenate([rows1[:, slots:], rows2[:, slots:]], axis=1)
+
+    match = fps == fp.astype(jnp.float32)[:, None]          # (TILE, 2S)
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, 2 * slots), 1)
+    first = jnp.min(jnp.where(match, pos_iota, 2 * slots), axis=1)
+    hit = first < 2 * slots
+    firstc = jnp.minimum(first, 2 * slots - 1)
+
+    sel = (pos_iota == firstc[:, None]).astype(jnp.float32)
+    head = jnp.sum(heads * sel, axis=1)                     # exact gather
+
+    hit_ref[...] = jnp.where(in_tile, hit.astype(jnp.int32), hit_ref[...])
+    head_ref[...] = jnp.where(in_tile & hit, head.astype(jnp.int32),
+                              jnp.where(in_tile, -1, head_ref[...]))
+    bucket_ref[...] = jnp.where(in_tile,
+                                jnp.where(first < slots, i1, i2),
+                                bucket_ref[...])
+    slot_ref[...] = jnp.where(in_tile,
+                              jnp.where(first < slots, firstc,
+                                        firstc - slots),
+                              slot_ref[...])
+
+
 def cuckoo_lookup_bank_pallas(h: jax.Array, tree_ids: jax.Array,
                               fp_table_f32: jax.Array,
                               head_table_f32: jax.Array, num_buckets: int,
-                              interpret: bool = True):
+                              interpret: bool = True,
+                              tree_tile: int = 0):
     """h/tree_ids: (B,) with B % TILE == 0; tables: (T * NB, S) float32.
 
-    The whole bank lives as one VMEM block, so this kernel targets banks up
-    to a few MiB (T * NB * S * 8 bytes) — the many-small-trees regime the
-    bank exists for.  Larger banks should shard over the mesh first
-    (core.distributed) and route within each shard.
+    ``tree_tile == 0`` is the single-block path: the whole bank lives as
+    one VMEM block — right for the many-small-trees regime (a few MiB at
+    most).  ``tree_tile > 0`` tiles the tree axis over a second grid
+    dimension so only ``tree_tile * NB`` bucket rows are resident per
+    step; the caller must pad T to a multiple of ``tree_tile`` (zero rows
+    = empty fingerprints, so padded trees can never match).  Banks larger
+    than a device should shard over the mesh first (core.distributed) and
+    route within each shard.
     """
     rows_total, slots = fp_table_f32.shape
     b = h.shape[0]
-    grid = (b // TILE,)
     out_shapes = [jax.ShapeDtypeStruct((b,), jnp.int32) for _ in range(4)]
-    qspec = pl.BlockSpec((TILE,), lambda i: (i,))
-    tabspec = pl.BlockSpec((rows_total, slots), lambda i: (0, 0))
+    if tree_tile <= 0:
+        grid = (b // TILE,)
+        qspec = pl.BlockSpec((TILE,), lambda i: (i,))
+        tabspec = pl.BlockSpec((rows_total, slots), lambda i: (0, 0))
+        return pl.pallas_call(
+            functools.partial(_bank_kernel, num_buckets=num_buckets,
+                              slots=slots),
+            grid=grid,
+            in_specs=[qspec, qspec, tabspec, tabspec],
+            out_specs=[qspec] * 4,
+            out_shape=out_shapes,
+            interpret=interpret,
+        )(h, tree_ids, fp_table_f32, head_table_f32)
+
+    block_rows = tree_tile * num_buckets
+    assert rows_total % block_rows == 0, \
+        "pad T to a multiple of tree_tile before calling"
+    grid = (b // TILE, rows_total // block_rows)   # tree axis innermost
+    qspec = pl.BlockSpec((TILE,), lambda qi, ti: (qi,))
+    tabspec = pl.BlockSpec((block_rows, slots), lambda qi, ti: (ti, 0))
     return pl.pallas_call(
-        functools.partial(_bank_kernel, num_buckets=num_buckets,
-                          slots=slots),
+        functools.partial(_bank_kernel_tiled, num_buckets=num_buckets,
+                          slots=slots, tree_tile=tree_tile),
         grid=grid,
         in_specs=[qspec, qspec, tabspec, tabspec],
         out_specs=[qspec] * 4,

@@ -45,22 +45,49 @@ def cuckoo_lookup_auto(fingerprints, heads, h) -> LookupResult:
     return cuckoo_lookup(fingerprints, heads, h, interpret=not on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+# Past this many flat bucket rows the bank kernel tiles the tree axis so
+# a VMEM-resident block (and the one-hot gather operand, TILE x rows f32)
+# stays bounded instead of growing with T.
+SINGLE_BLOCK_MAX_ROWS = 2048
+
+
+def _pick_tree_tile(t: int, nb: int) -> int:
+    """0 = single-block; else trees per grid step (>= 1)."""
+    if t * nb <= SINGLE_BLOCK_MAX_ROWS:
+        return 0
+    return max(1, SINGLE_BLOCK_MAX_ROWS // nb)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tree_tile"))
 def cuckoo_lookup_bank(fingerprints: jax.Array, heads: jax.Array,
                        tree_ids: jax.Array, h: jax.Array,
-                       interpret: bool = True) -> LookupResult:
+                       interpret: bool = True,
+                       tree_tile: int = -1) -> LookupResult:
     """Bank lookup with per-query tree routing — same signature/semantics
-    as core.lookup.lookup_batch_bank.  Tables: (T, NB, S)."""
+    as core.lookup.lookup_batch_bank.  Tables: (T, NB, S).
+
+    ``tree_tile``: -1 auto-selects (single VMEM block for small banks,
+    tree-axis grid tiling past ``SINGLE_BLOCK_MAX_ROWS`` flat rows);
+    0 forces the single-block path; > 0 forces that many trees per grid
+    step.  T is padded here to a tile multiple with empty-fingerprint rows
+    (which can never match), so callers never pre-pad.
+    """
     t, nb, s = fingerprints.shape
+    if tree_tile < 0:
+        tree_tile = _pick_tree_tile(t, nb)
     b = h.shape[0]
     pad = (-b) % TILE
     hp = jnp.pad(h, (0, pad))
     tp = jnp.pad(tree_ids.astype(jnp.int32), (0, pad))
-    fp32, hd32 = stage_tables(fingerprints.reshape(t * nb, s),
-                              heads.reshape(t * nb, s))
+    fps2, hds2 = fingerprints.reshape(t * nb, s), heads.reshape(t * nb, s)
+    if tree_tile > 0:
+        row_pad = ((-t) % tree_tile) * nb
+        fps2 = jnp.pad(fps2, ((0, row_pad), (0, 0)))
+        hds2 = jnp.pad(hds2, ((0, row_pad), (0, 0)))
+    fp32, hd32 = stage_tables(fps2, hds2)
     hit, head, bucket, slot = cuckoo_lookup_bank_pallas(
         hp.astype(jnp.uint32), tp, fp32, hd32, num_buckets=nb,
-        interpret=interpret)
+        interpret=interpret, tree_tile=tree_tile)
     return LookupResult(hit=hit[:b].astype(jnp.bool_), head=head[:b],
                         bucket=bucket[:b], slot=slot[:b])
 

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import CFTDeviceState, DeviceRetrieval, retrieve_device
+from ..core import (CFTDeviceState, DeviceRetrieval, MaintenanceEngine,
+                    MaintenanceReport, retrieve_device)
 from ..data.tokenizer import HashTokenizer
 from ..models import lm
 
@@ -43,6 +44,8 @@ class ServeEngine:
         self._decode = jax.jit(
             functools.partial(lm.decode_step, cfg), donate_argnums=(2,))
         self._ret_state: Optional[CFTDeviceState] = None
+        self._maint: Optional[MaintenanceEngine] = None
+        self._maint_forest = None
 
     # ---------------------------------------------------------- retrieval
     def attach_retrieval(self, state: CFTDeviceState, lookup_fn=None,
@@ -75,11 +78,43 @@ class ServeEngine:
         hh[:b] = np.asarray(hashes, np.uint32)
         out = self._ret_step(self._ret_state, jnp.asarray(hh),
                              jnp.asarray(tid))
-        self._ret_state = dataclasses.replace(self._ret_state,
-                                              temperature=out.temperature)
+        self._ret_state = self._ret_state.with_temperature(out.temperature)
+        if self._maint is not None:
+            # close the paper's feedback loop: harvest this batch's bumps
+            # into the host bank (drives the idle-sort trigger policy)
+            self._maint.absorb(self._ret_state)
         return DeviceRetrieval(hit=out.hit[:b], locations=out.locations[:b],
                                up=out.up[:b], down=out.down[:b],
                                temperature=out.temperature)
+
+    # -------------------------------------------------------- maintenance
+    def attach_maintenance(self, maint: MaintenanceEngine, forest) -> None:
+        """Attach a host-side maintenance engine over the bank backing the
+        attached retrieval state.  ``retrieve`` then harvests temperature
+        after every query batch, and :meth:`maintain` (called between
+        batches, or by ``serve`` automatically) applies queued
+        insert/delete deltas, compacts, resorts, and restages the device
+        state whenever the bank mutated."""
+        self._maint = maint
+        self._maint_forest = forest
+
+    def maintain(self) -> Optional[MaintenanceReport]:
+        """Idle-time maintenance hook (between serving batches).
+
+        With a maintenance engine attached: one ``maintain`` pass on the
+        host bank, then restage the device tables iff anything changed
+        (host stays the source of truth so slot layouts never diverge).
+        Without one: a pure device-side idle sort (``sort_buckets_bank``)
+        — hot fingerprints bubble to slot 0 using temperature alone."""
+        if self._maint is not None:
+            report = self._maint.maintain(self._ret_state)
+            if report.changed and self._ret_state is not None:
+                self._ret_state = CFTDeviceState.from_bank(
+                    self._maint.bank, self._maint_forest)
+            return report
+        if self._ret_state is not None:
+            self._ret_state = self._ret_state.sort_idle()
+        return None
 
     # ----------------------------------------------------------- generate
     def generate(self, batch: Dict[str, jax.Array], max_new_tokens: int
@@ -117,6 +152,9 @@ class ServeEngine:
             for i, r in enumerate(group):
                 r.out_ids = out[i, :r.max_new_tokens].tolist()
                 done.append(r)
+            if self._maint is not None:
+                self.maintain()    # idle window between batches: apply
+                #                    pending deltas, resort, restage
         return done
 
 

@@ -18,11 +18,12 @@ from typing import Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (CFTRAG, CFTDeviceState, build_bank, build_forest,
-                    build_index, retrieve_device)
+from ..core import (CFTRAG, CFTDeviceState, MaintenanceEngine, build_bank,
+                    build_forest, build_index, retrieve_device)
 from ..core import hashing
 from ..data.datasets import SyntheticCorpus
-from ..data.ner import build_gazetteer, recognize_entities
+from ..data.ner import (add_to_gazetteer, build_gazetteer,
+                        recognize_entities)
 from ..data.tokenizer import HashTokenizer
 from ..kernels.cuckoo_lookup.ops import cuckoo_lookup_bank_auto
 from .engine import Request, ServeEngine
@@ -57,7 +58,12 @@ class RAGPipeline:
         self.use_device_lookup = use_device_lookup or use_bank
         self.use_bank = use_bank
         self.bank = build_bank(self.forest) if use_bank else None
+        self.maintenance = MaintenanceEngine(self.bank) if use_bank else None
         if use_bank:
+            # NB: the pipeline owns its device state, so it runs its own
+            # idle-time hook (maintain() below) rather than attaching the
+            # engine's — two restage owners over one bank would let host
+            # and device slot layouts diverge.
             self._dev_state = CFTDeviceState.from_bank(self.bank, self.forest)
         elif use_device_lookup:
             self._dev_state = CFTDeviceState.from_index(self.index)
@@ -90,8 +96,10 @@ class RAGPipeline:
                 trees = jnp.zeros((b,), jnp.int32)
             out = retrieve_device(self._dev_state, hashes, trees,
                                   lookup_fn=cuckoo_lookup_bank_auto)
-            self._dev_state = dataclasses.replace(
-                self._dev_state, temperature=out.temperature)
+            self._dev_state = self._dev_state.with_temperature(
+                out.temperature)
+            if self.maintenance is not None:
+                self.maintenance.absorb(self._dev_state)
             up, down = np.asarray(out.up), np.asarray(out.down)
             if tree_scope is None and self.use_bank:
                 t, locs, n = self.bank.num_trees, up.shape[1], up.shape[2]
@@ -105,6 +113,37 @@ class RAGPipeline:
         prompt = f"{SYSTEM_PROMPT}\n{ctxs}\nQuestion: {query}\nAnswer:"
         return RAGAnswer(query=query, entities=ents, context=ctxs,
                          prompt=prompt)
+
+    # -------------------------------------------------------- maintenance
+    def insert_entity(self, tree: int, name: str,
+                      nodes: Sequence[int]) -> None:
+        """Queue a live (tree, entity) insert; applied at the next
+        :meth:`maintain` idle window (bank mode only).  ``nodes`` are
+        existing forest node ids the entity should resolve to.  The NER
+        gazetteer learns the name immediately so queries can mention it
+        as soon as the delta lands."""
+        if self.maintenance is None:
+            raise RuntimeError("dynamic updates need use_bank=True")
+        eid = self.forest.name_to_id.get(name, -1)
+        self.maintenance.queue_insert(tree, name, nodes, entity_id=eid)
+        add_to_gazetteer(self.gazetteer, name)
+
+    def delete_entity(self, tree: int, name: str) -> None:
+        if self.maintenance is None:
+            raise RuntimeError("dynamic updates need use_bank=True")
+        self.maintenance.queue_delete(tree, name)
+
+    def maintain(self):
+        """Idle-time maintenance: apply queued inserts/deletes, compact,
+        resort hot buckets, and restage the device state if the bank
+        mutated.  Returns the MaintenanceReport (None in non-bank mode)."""
+        if self.maintenance is None:
+            return None
+        report = self.maintenance.maintain(self._dev_state)
+        if report.changed:
+            self._dev_state = CFTDeviceState.from_bank(self.bank,
+                                                       self.forest)
+        return report
 
     def _render_device(self, ents: Sequence[str], up_arr: np.ndarray,
                        down_arr: np.ndarray) -> str:
@@ -132,6 +171,7 @@ class RAGPipeline:
         self.engine.serve([req])
         ans.output_ids = req.out_ids
         ans.text = self.tokenizer.decode(req.out_ids)
+        self.maintain()        # generation was the idle window
         return ans
 
     # --------------------------------------------------- retrieval metrics

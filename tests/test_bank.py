@@ -140,6 +140,71 @@ def test_pallas_bank_kernel_matches_reference():
                                       np.asarray(getattr(ker, field)))
 
 
+def test_pallas_bank_kernel_tree_tiled_matches_single_block():
+    """The tree-axis-tiled grid must be bit-identical to the single-VMEM-
+    block kernel on every lane (hits AND misses), for tile sizes that do
+    and do not divide T."""
+    forest = _forest(num_trees=12)
+    bank = build_bank(forest)
+    hashes = hashing.hash_entities(forest.entity_names)
+    tid = np.concatenate([bank.row_tree,
+                          np.full(24, 5, np.int32)]).astype(np.int32)
+    hh = np.concatenate([hashes[bank.row_entity],
+                         hashing.hash_entities([f"missing {i}"
+                                                for i in range(24)])])
+    fps, heads = jnp.asarray(bank.fingerprints), jnp.asarray(bank.heads)
+    tid_j, hh_j = jnp.asarray(tid), jnp.asarray(hh)
+    ref = lookup_batch_bank(fps, heads, tid_j, hh_j)
+    m = np.asarray(ref.hit)
+    base = cuckoo_lookup_bank(fps, heads, tid_j, hh_j, interpret=True,
+                              tree_tile=0)
+    for tt in (1, 4, 5, 12, -1):   # 5 does not divide T=12 -> pad path
+        ker = cuckoo_lookup_bank(fps, heads, tid_j, hh_j, interpret=True,
+                                 tree_tile=tt)
+        for field in ("hit", "head", "bucket", "slot"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ker, field)),
+                np.asarray(getattr(base, field)),
+                err_msg=f"tree_tile={tt} {field}")
+        np.testing.assert_array_equal(np.asarray(ker.hit), m)
+        np.testing.assert_array_equal(np.asarray(ker.head),
+                                      np.asarray(ref.head))
+        for field in ("bucket", "slot"):       # defined only on hits
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ker, field))[m],
+                np.asarray(getattr(ref, field))[m])
+
+
+def test_bank_auto_tiling_threshold():
+    """Auto selection keeps small banks single-block and tiles big ones;
+    both answer identically to the jnp reference."""
+    from repro.kernels.cuckoo_lookup.ops import (SINGLE_BLOCK_MAX_ROWS,
+                                                 _pick_tree_tile)
+    assert _pick_tree_tile(4, 64) == 0
+    assert _pick_tree_tile(SINGLE_BLOCK_MAX_ROWS, 16) >= 1
+    assert _pick_tree_tile(64, 2 * SINGLE_BLOCK_MAX_ROWS) == 1
+
+
+def test_absorb_temperature_replaces_handrolled_writeback():
+    forest = _forest(num_trees=4)
+    bank = build_bank(forest)
+    state = CFTDeviceState.from_bank(bank, forest)
+    hashes = hashing.hash_entities(forest.entity_names)
+    tid = jnp.asarray(bank.row_tree[:8].astype(np.int32))
+    hh = jnp.asarray(hashes[bank.row_entity[:8]])
+    out = retrieve_device(state, hh, query_trees=tid)
+    bumps = bank.absorb_temperature(state.with_temperature(out.temperature))
+    assert bumps == 8
+    np.testing.assert_array_equal(bank.temperature,
+                                  np.asarray(out.temperature))
+    # shape mismatch (stale layout after an expand) must be loud
+    try:
+        bank.absorb_temperature(np.zeros((1, 2, 3), np.int32))
+        assert False, "expected ValueError"
+    except ValueError:
+        pass
+
+
 def test_retrieve_device_routes_to_queried_tree():
     forest = _forest()
     bank = build_bank(forest)

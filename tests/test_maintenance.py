@@ -1,0 +1,307 @@
+"""Dynamic bank maintenance: incremental insert/delete/expand, temperature
+write-back, idle-time sort, and churn equivalence vs a fresh bulk build."""
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # offline container
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (CFTDeviceState, MaintenanceEngine, build_bank,
+                        build_bank_from_rows, build_forest, retrieve_device,
+                        sort_buckets_bank)
+from repro.core import hashing
+
+
+def _forest(num_trees=8, entities_per_tree=20):
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def _setup(num_trees=8, entities_per_tree=20, **kw):
+    forest = _forest(num_trees, entities_per_tree)
+    bank = build_bank(forest)
+    return forest, bank, MaintenanceEngine(bank, **kw), \
+        hashing.hash_entities(forest.entity_names)
+
+
+# ---------------------------------------------------------- insert / delete
+
+def test_insert_round_trip():
+    """insert -> lookup hit with the exact node list and entity payload."""
+    forest, bank, eng, hashes = _setup()
+    h = int(hashing.entity_hash("brand new entity"))
+    eng.insert(3, h, [5, 9, 11], entity_id=12345)
+    hit, row, eid = bank.lookup(3, h)
+    assert hit and eid == 12345
+    assert bank.walk_row(row) == [5, 9, 11]
+    # routed: the other trees still miss it (modulo fp collisions, which
+    # exact-find rules out)
+    rows, _ = bank.find_exact(np.asarray([0, 1, 2]), np.asarray([h] * 3))
+    assert (rows == -1).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_delete_keeps_remaining_rows(seed):
+    """delete -> no false negative for any surviving (tree, entity)."""
+    forest, bank, eng, hashes = _setup(num_trees=6)
+    rng = np.random.default_rng(seed)
+    kill = rng.choice(bank.num_rows, size=bank.num_rows // 3, replace=False)
+    killset = set(int(k) for k in kill)
+    for r in kill:
+        t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
+        assert eng.delete(t, int(hashes[e]))
+    for r in range(bank.num_rows):
+        t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
+        h = int(hashes[e])
+        if r in killset:
+            rows, _ = bank.find_exact(np.asarray([t]), np.asarray([h]))
+            assert int(rows[0]) == -1          # exact hash really gone
+        else:
+            hit, row, eid = bank.lookup(t, h)
+            assert hit and eid == e            # survivors never go missing
+            assert bank.walk_row(row)
+
+
+def test_replace_semantics():
+    """Inserting a live key replaces its CSR row (no duplicate slots)."""
+    forest, bank, eng, hashes = _setup()
+    r = 7
+    t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
+    h = int(hashes[e])
+    eng.insert(t, h, [1, 2], entity_id=e)
+    hit, row, eid = bank.lookup(t, h)
+    assert hit and bank.walk_row(row) == [1, 2]
+    occ = bank.stored_hash[t] == np.uint32(h)
+    occ &= bank.fingerprints[t] != hashing.EMPTY_FP
+    assert int(occ.sum()) == 1                 # exactly one slot holds it
+
+
+def test_expand_preserves_memberships_and_temperature():
+    forest, bank, eng, hashes = _setup(num_trees=4, entities_per_tree=12)
+    bank.temperature[bank.fingerprints != hashing.EMPTY_FP] = 7
+    nb0 = bank.num_buckets
+    eng.expand()
+    assert bank.num_buckets == 2 * nb0
+    for r in range(bank.num_rows):
+        t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
+        hit, row, eid = bank.lookup(t, int(hashes[e]))
+        assert hit and eid == e and row == r
+    assert (bank.temperature[bank.fingerprints
+                             != hashing.EMPTY_FP] == 7).all()
+
+
+def test_overload_triggers_expand():
+    """Inserts past the load threshold restage the bank at a bigger NB
+    (the single-tree expand policy: shared NB doubles bank-wide)."""
+    forest, bank, eng, hashes = _setup(num_trees=4, entities_per_tree=12)
+    nb0 = bank.num_buckets
+    cap = nb0 * bank.slots
+    extra = int(cap - bank.num_items[1] + 4)   # push tree 1 over
+    for i in range(extra):
+        eng.queue_insert(1, int(hashing.entity_hash(f"stuffing {i}")), [i])
+    eng.apply()
+    assert bank.num_buckets > nb0
+    assert eng.stats["expansions"] >= 1
+    for i in range(extra):
+        h = int(hashing.entity_hash(f"stuffing {i}"))
+        hit, row, _ = bank.lookup(1, h)
+        assert hit and bank.walk_row(row) == [i]
+
+
+def test_compaction_reclaims_and_preserves():
+    forest, bank, eng, hashes = _setup()
+    rows0 = bank.num_rows
+    for r in range(0, rows0, 2):
+        t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
+        eng.queue_delete(t, int(hashes[e]))
+    eng.apply()
+    assert eng.num_dead_rows == (rows0 + 1) // 2
+    survivors = {}
+    for r in range(1, rows0, 2):
+        t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
+        survivors[(t, e)] = bank.walk_row(r)
+    assert eng.compact()
+    assert eng.num_dead_rows == 0 and bank.num_rows == len(survivors)
+    for (t, e), nodes in survivors.items():
+        hit, row, eid = bank.lookup(t, int(hashes[e]))
+        assert hit and eid == e and bank.walk_row(row) == nodes
+
+
+# --------------------------------------------------- temperature + sorting
+
+def test_absorb_temperature_counts_bumps():
+    forest, bank, eng, hashes = _setup()
+    state = CFTDeviceState.from_bank(bank, forest)
+    tid = jnp.asarray(bank.row_tree[:16].astype(np.int32))
+    hh = jnp.asarray(hashes[bank.row_entity[:16]])
+    out = retrieve_device(state, hh, tid)
+    state = state.with_temperature(out.temperature)
+    assert eng.absorb(state) == 16
+    assert eng.bumps_since_sort == 16
+    assert eng.absorb(state) == 0              # idempotent re-absorb
+    np.testing.assert_array_equal(bank.temperature,
+                                  np.asarray(out.temperature))
+
+
+def test_sort_trigger_policy_and_host_device_agreement():
+    forest, bank, eng, hashes = _setup(sort_threshold=8)
+    # heat a few slots, below threshold: no sort
+    occ = np.argwhere(bank.fingerprints != hashing.EMPTY_FP)
+    t0, b0, s0 = occ[len(occ) // 2]
+    bank.temperature[t0, b0, s0] = 50
+    eng.bumps_since_sort = 4
+    assert not eng.maybe_sort()
+    eng.bumps_since_sort = 9                   # past threshold: sorts
+    # device sort of the same tables must agree with the host sort
+    f, tt, hd = sort_buckets_bank(jnp.asarray(bank.fingerprints),
+                                  jnp.asarray(bank.temperature),
+                                  jnp.asarray(bank.heads))
+    assert eng.maybe_sort()
+    assert eng.bumps_since_sort == 0
+    np.testing.assert_array_equal(np.asarray(f), bank.fingerprints)
+    np.testing.assert_array_equal(np.asarray(tt), bank.temperature)
+    np.testing.assert_array_equal(np.asarray(hd), bank.heads)
+    assert bank.temperature[t0, b0, 0] == 50   # hot slot floated to 0
+    # membership survives the reorder
+    for r in range(bank.num_rows):
+        t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
+        assert bank.lookup(t, int(hashes[e]))[0]
+
+
+def test_maintain_reports_and_restage_flag():
+    forest, bank, eng, hashes = _setup(sort_threshold=4)
+    state = CFTDeviceState.from_bank(bank, forest)
+    rep = eng.maintain(state)
+    assert not rep.changed                     # nothing pending, no heat
+    tid = jnp.asarray(bank.row_tree[:8].astype(np.int32))
+    hh = jnp.asarray(hashes[bank.row_entity[:8]])
+    out = retrieve_device(state, hh, tid)
+    eng.queue_insert(0, int(hashing.entity_hash("fresh")), [0])
+    rep = eng.maintain(state.with_temperature(out.temperature))
+    assert rep.absorbed_bumps == 8 and rep.inserted == 1 and rep.sorted
+    assert rep.changed                         # caller must restage
+
+
+# ------------------------------------------------------- churn equivalence
+
+def test_churn_equivalence_1k_ops_16_trees():
+    """Acceptance gate: after >= 1k randomized insert/delete ops across
+    >= 16 trees, the incrementally maintained bank answers exactly like a
+    from-scratch bulk build — every surviving key is stored (no false
+    negatives, exact-hash check) and routed lookups return identical node
+    lists."""
+    num_trees, total_ops, batch = 16, 1024, 64
+    forest = _forest(num_trees, 48)
+    hashes = hashing.hash_entities(forest.entity_names)
+    bank = build_bank(forest)
+    eng = MaintenanceEngine(bank, seed=1)
+    rng = np.random.default_rng(42)
+
+    all_rows = {}
+    for r in range(bank.num_rows):
+        all_rows[(int(bank.row_tree[r]),
+                  int(bank.row_entity[r]))] = bank.walk_row(r)
+    live = dict(all_rows)
+    ops = 0
+    while ops < total_ops:
+        touched = set()
+        for _ in range(batch):
+            dead = [k for k in all_rows if k not in live
+                    and k not in touched]
+            if len(live) > len(all_rows) // 3 and \
+                    (not dead or rng.random() < 0.5):
+                cands = [k for k in live if k not in touched]
+                k = cands[int(rng.integers(len(cands)))]
+                eng.queue_delete(k[0], int(hashes[k[1]]))
+                del live[k]
+            else:
+                k = dead[int(rng.integers(len(dead)))]
+                eng.queue_insert(k[0], int(hashes[k[1]]), all_rows[k],
+                                 entity_id=k[1])
+                live[k] = all_rows[k]
+            touched.add(k)
+            ops += 1
+        eng.maintain()                         # apply + maybe compact
+    assert ops >= 1000 and bank.num_trees >= 16
+
+    ks = sorted(live)
+    rt = np.asarray([k[0] for k in ks], np.int32)
+    re_ = np.asarray([k[1] for k in ks], np.int32)
+    rh = hashes[re_].astype(np.uint32)
+    lens = np.asarray([len(live[k]) for k in ks], np.int32)
+    off = np.zeros(len(ks) + 1, np.int32)
+    np.cumsum(lens, out=off[1:])
+    nodes = np.concatenate([np.asarray(live[k], np.int32) for k in ks])
+    fresh = build_bank_from_rows(num_trees, rt, re_, rh, off, nodes)
+
+    assert int(bank.num_items.sum()) == len(live)
+    np.testing.assert_array_equal(bank.num_items, fresh.num_items)
+    rows_i, _ = bank.find_exact(rt, rh)
+    rows_f, _ = fresh.find_exact(rt, rh)
+    assert (rows_i >= 0).all() and (rows_f >= 0).all()   # no false negs
+    for j, k in enumerate(ks):
+        h = int(rh[j])
+        hi, ri, _ = bank.lookup(k[0], h)
+        hf, rf, _ = fresh.lookup(k[0], h)
+        assert hi and hf
+        assert bank.walk_row(ri) == fresh.walk_row(rf)   # identical CSR
+
+
+def test_out_of_range_tree_rejected_at_queue_time():
+    forest, bank, eng, hashes = _setup(num_trees=4)
+    for bad in (-1, 4, 99):
+        try:
+            eng.queue_insert(bad, "x", [0])
+            assert False, "expected ValueError"
+        except ValueError:
+            pass
+        try:
+            eng.queue_delete(bad, "x")
+            assert False, "expected ValueError"
+        except ValueError:
+            pass
+    assert not eng.delta                       # nothing half-queued
+
+
+def test_pipeline_live_insert_reachable_in_queries():
+    """A live-inserted entity must be recognizable by NER and resolvable
+    end to end (gazetteer learns the name, bank serves the nodes)."""
+    from repro.data import HashTokenizer, hospital_corpus
+    from repro.serving import RAGPipeline
+    corpus = hospital_corpus(num_trees=6, num_queries=2)
+    rag = RAGPipeline(corpus, None, tokenizer=HashTokenizer(1024),
+                      use_bank=True)
+    node = int(rag.forest.child_index[0])      # a node with a parent
+    rag.insert_entity(2, "Brand New Clinic", [node])
+    rep = rag.maintain()
+    assert rep.inserted == 1
+    ans = rag.retrieve("Describe the Brand New Clinic please")
+    assert "Brand New Clinic" in ans.entities
+    assert "hierarchical relationship of Brand New Clinic" in ans.context
+
+
+# -------------------------------------------------- serving-path retrieval
+
+def test_maintained_bank_serves_through_device_path():
+    """Inserted rows become retrievable through retrieve_device after the
+    idle-time restage; deleted rows stop hitting."""
+    forest, bank, eng, hashes = _setup(num_trees=6)
+    h_new = int(hashing.entity_hash("night shift ward"))
+    eng.queue_insert(2, h_new, [3, 4], entity_id=-1)
+    r0 = 0
+    t0, e0 = int(bank.row_tree[r0]), int(bank.row_entity[r0])
+    eng.queue_delete(t0, int(hashes[e0]))
+    rep = eng.maintain()
+    assert rep.changed
+    state = CFTDeviceState.from_bank(bank, forest)
+    out = retrieve_device(
+        state, jnp.asarray(np.asarray([h_new, hashes[e0]], np.uint32)),
+        jnp.asarray(np.asarray([2, t0], np.int32)))
+    assert bool(out.hit[0])
+    locs = [int(v) for v in np.asarray(out.locations[0]) if v >= 0]
+    assert locs == [3, 4]
+    assert not bool(out.hit[1])
