@@ -1,0 +1,167 @@
+"""Replicated vs bank-axis-sharded lookup — the scaling claim, measured.
+
+The replicated path keeps the whole ``(T, NB, S)`` bank on one device and
+probes it with ``lookup_batch_bank``; the sharded path partitions tree
+ranges over the mesh (``FilterBank.shard`` + ``stage_sharded_bank``) and
+routes each query batch through the ``shard_map`` all-to-all
+(``sharded_lookup_bank``).  For every T the sweep records wall-clock for
+both, the per-device filter-table bytes for both (the capacity axis the
+sharding actually buys), and gates on bit-identical results before any
+timing is reported.
+
+Run on a forced multi-device host platform::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.bench_distributed \\
+        [--smoke] [--json BENCH_shard.json]
+
+The CI smoke job writes ``BENCH_shard.json`` from here (next to
+``BENCH_bank.json`` from ``bench_churn``) so the distributed-lookup perf
+trajectory is recorded per commit.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import build_bank, build_forest, lookup_batch_bank
+from repro.core import hashing
+from repro.core.distributed import stage_sharded_bank, sharded_lookup_bank
+
+
+def _forest(num_trees: int, entities_per_tree: int):
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def _queries(forest, bank, batch: int, seed: int):
+    """Mixed hit/miss batch spread over every tree."""
+    rng = np.random.default_rng(seed)
+    t = bank.num_trees
+    qt = rng.integers(0, t, size=batch).astype(np.int32)
+    names = np.asarray(forest.entity_names)
+    qh = np.empty(batch, np.uint32)
+    for j in range(batch):
+        if j % 4 == 0:                                   # 25% misses
+            qh[j] = np.uint32(rng.integers(1, 2 ** 32))
+        else:
+            qh[j] = hashing.entity_hash(
+                f"entity {qt[j]}_{rng.integers(len(names) // t)}")
+    return qt, qh
+
+
+def _time(fn, iters: int) -> float:
+    fn()                                                 # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(tree_counts: Sequence[int] = (16, 64, 256),
+        entities_per_tree: int = 24, batch: int = 1024, iters: int = 5,
+        seed: int = 0) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+
+    d = jax.device_count()
+    mesh = jax.make_mesh((d,), ("model",))
+    rows = []
+    for t in tree_counts:
+        forest = _forest(t, entities_per_tree)
+        bank = build_bank(forest)
+        sbank = bank.shard(d)
+        state = stage_sharded_bank(sbank, forest, mesh, "model")
+        qt, qh = _queries(forest, bank, batch, seed)
+        qt_j, qh_j = jnp.asarray(qt), jnp.asarray(qh)
+
+        mf, _, mh = sbank.merged_tables()
+        fps_r, heads_r = jnp.asarray(mf), jnp.asarray(mh)
+        rep_fn = jax.jit(lookup_batch_bank)
+
+        # ---- equivalence gate before timing
+        ref = rep_fn(fps_r, heads_r, qt_j, qh_j)
+        got = sharded_lookup_bank(state, qt_j, qh_j)
+        for f in ("hit", "head", "bucket", "slot"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)),
+                err_msg=f"sharded {f} diverged at T={t}")
+
+        t_rep = _time(
+            lambda: jax.block_until_ready(
+                rep_fn(fps_r, heads_r, qt_j, qh_j)), iters)
+        t_shd = _time(
+            lambda: jax.block_until_ready(
+                sharded_lookup_bank(state, qt_j, qh_j)), iters)
+
+        table_bytes = lambda a: int(a.nbytes)            # noqa: E731
+        rep_dev = sum(table_bytes(x) for x in (fps_r, heads_r)) \
+            + int(jnp.asarray(mf).nbytes)                # temperature too
+        shard_dev = sum(
+            next(iter(x.addressable_shards)).data.nbytes
+            for x in (state.fingerprints, state.temperature, state.heads))
+        rows.append(dict(
+            trees=t, num_buckets=bank.num_buckets, slots=bank.slots,
+            devices=d, batch=batch,
+            replicated_ms=t_rep * 1e3, sharded_ms=t_shd * 1e3,
+            speedup=t_rep / t_shd if t_shd else 0.0,
+            replicated_device_bytes=rep_dev,
+            sharded_device_bytes=shard_dev,
+            bytes_fraction=shard_dev / rep_dev,
+            hits=int(np.asarray(got.hit).sum()),
+        ))
+    return rows
+
+
+def print_rows(rows: List[Dict]) -> None:
+    print("distributed: replicated vs bank-axis sharded lookup "
+          "(all-to-all routed, no bank broadcast)")
+    print(f"{'trees':>6s} {'dev':>4s} {'batch':>6s} {'rep_ms':>9s} "
+          f"{'shard_ms':>9s} {'speedup':>8s} {'dev_bytes':>10s} "
+          f"{'frac':>6s}")
+    for r in rows:
+        print(f"{r['trees']:6d} {r['devices']:4d} {r['batch']:6d} "
+              f"{r['replicated_ms']:9.3f} {r['sharded_ms']:9.3f} "
+              f"{r['speedup']:8.2f} {r['sharded_device_bytes']:10d} "
+              f"{r['bytes_fraction']:6.3f}")
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        json_path = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    unknown = [a for a in args if a != "--smoke"]
+    if unknown:
+        sys.exit(f"usage: python -m benchmarks.bench_distributed "
+                 f"[--smoke] [--json PATH] (unknown: {' '.join(unknown)})")
+    kw = (dict(tree_counts=(16, 64), entities_per_tree=12, batch=256,
+               iters=2)
+          if "--smoke" in args else
+          dict(tree_counts=(16, 64, 256), entities_per_tree=24,
+               batch=1024, iters=5))
+    import jax
+    rows = run(**kw)
+    print_rows(rows)
+    for r in rows:
+        # the capacity claim: per-device table bytes shrink ~1/D
+        # (padding can round one tree range up)
+        assert r["bytes_fraction"] <= 1.0 / r["devices"] + 0.05, r
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"device_count": jax.device_count(),
+                       "rows": rows}, f, indent=2)
+        print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

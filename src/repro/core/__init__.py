@@ -1,5 +1,6 @@
 """CFT-RAG core: improved cuckoo filter + entity-tree retrieval."""
-from .bank import FilterBank, build_bank, build_bank_from_rows
+from .bank import (FilterBank, ShardedBank, build_bank,
+                   build_bank_from_rows, plan_partition)
 from .baselines import BloomTRAG, BloomTRAG2, NaiveTRAG
 from .blocklist import BlockListArena, BlockListBuilder, CSRArena, build_csr
 from .context import (EntityContext, context_from_arena, context_from_csr,
@@ -9,14 +10,23 @@ from .cuckoo import (CFTIndex, CuckooFilter, CuckooTables, build_index,
 from .lookup import (LookupResult, bump_temperature, bump_temperature_bank,
                      lookup_batch, lookup_batch_bank, lookup_batch_trees,
                      sort_buckets, sort_buckets_bank)
-from .maintenance import BankDelta, MaintenanceEngine, MaintenanceReport
+from .maintenance import (BankDelta, MaintenanceEngine, MaintenanceReport,
+                          ShardedMaintenanceEngine)
 from .trag import (CFTRAG, CFTDeviceState, DeviceRetrieval, build_retriever,
-                   retrieve_device)
+                   gather_context, retrieve_device)
+from .distributed import (ShardedBankState, shard_bank, sharded_lookup,
+                          sharded_lookup_bank, sharded_retrieve_device,
+                          shard_filter_tables, stage_sharded_bank)
 from .tree import EntityForest, build_forest
 
 __all__ = [
-    "FilterBank", "build_bank", "build_bank_from_rows",
+    "FilterBank", "ShardedBank", "build_bank", "build_bank_from_rows",
+    "plan_partition",
     "BankDelta", "MaintenanceEngine", "MaintenanceReport",
+    "ShardedMaintenanceEngine",
+    "ShardedBankState", "shard_bank", "sharded_lookup",
+    "sharded_lookup_bank", "sharded_retrieve_device",
+    "shard_filter_tables", "stage_sharded_bank", "gather_context",
     "BloomTRAG", "BloomTRAG2", "NaiveTRAG",
     "BlockListArena", "BlockListBuilder", "CSRArena", "build_csr",
     "EntityContext", "context_from_arena", "context_from_csr",

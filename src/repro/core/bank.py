@@ -24,7 +24,7 @@ locations inside the queried tree — no cross-tree leakage by construction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -155,6 +155,69 @@ class FilterBank:
         self.temperature[...] = temp
         return bumps
 
+    # ------------------------------------------------------------ sharding
+    def shard(self, num_shards: Optional[int] = None,
+              tree_starts: Optional[Sequence[int]] = None) -> "ShardedBank":
+        """Partition the bank into contiguous tree ranges, one self-contained
+        sub-bank per shard (mesh device).
+
+        Each sub-bank relabels its trees to ``0..Td-1`` and carves out a
+        local CSR arena holding only its own (tree, entity) rows, so the
+        full :class:`MaintenanceEngine` machinery (insert/delete/expand/
+        compact) runs per shard without touching any other shard's tables
+        — the point of bank-axis sharding.  Slot placement, NB and slot
+        ordering are *sliced*, not rebuilt, so a freshly sharded bank
+        answers bit-identically to the original.
+        """
+        if tree_starts is None:
+            if num_shards is None:
+                raise ValueError("need num_shards or tree_starts")
+            tree_starts = plan_partition(self.num_items, num_shards)
+        starts = np.asarray(tree_starts, np.int64)
+        if starts[0] != 0 or starts[-1] != self.num_trees or \
+                np.any(np.diff(starts) < 1):
+            raise ValueError(f"bad tree partition {starts.tolist()} for "
+                             f"T={self.num_trees}")
+        off = self.csr_offsets.astype(np.int64)
+        # carry only rows a filter slot still references: a maintained bank
+        # may hold tombstoned CSR rows, and the per-shard engines rebuild
+        # liveness from slots — a dangling row would resurrect on restage
+        occ_slots = self.fingerprints != hashing.EMPTY_FP
+        live = np.zeros(max(self.num_rows, 1), bool)
+        live[self.heads[occ_slots]] = True
+        banks: List[FilterBank] = []
+        for d in range(starts.size - 1):
+            lo, hi = int(starts[d]), int(starts[d + 1])
+            rows = np.flatnonzero((self.row_tree >= lo)
+                                  & (self.row_tree < hi)
+                                  & live[:self.num_rows])
+            inv = np.full(max(self.num_rows, 1), NULL, np.int32)
+            inv[rows] = np.arange(rows.size, dtype=np.int32)
+            lens = off[rows + 1] - off[rows]
+            loc_off = np.zeros(rows.size + 1, dtype=np.int32)
+            np.cumsum(lens, out=loc_off[1:])
+            total = int(lens.sum())
+            idx = (np.arange(total, dtype=np.int64)
+                   + np.repeat(off[rows] - loc_off[:-1], lens))
+            fps = self.fingerprints[lo:hi].copy()
+            occ = fps != hashing.EMPTY_FP
+            heads = np.where(occ, inv[self.heads[lo:hi]],
+                             NULL).astype(np.int32)
+            banks.append(FilterBank(
+                num_trees=hi - lo, num_buckets=self.num_buckets,
+                slots=self.slots, fingerprints=fps,
+                temperature=self.temperature[lo:hi].copy(), heads=heads,
+                entity_ids=self.entity_ids[lo:hi].copy(),
+                stored_hash=self.stored_hash[lo:hi].copy(),
+                csr_offsets=loc_off,
+                csr_nodes=(self.csr_nodes[idx].astype(np.int32) if total
+                           else np.zeros(0, np.int32)),
+                row_tree=(self.row_tree[rows] - lo).astype(np.int32),
+                row_entity=self.row_entity[rows].copy(),
+                num_items=self.num_items[lo:hi].copy(),
+                build_stats=dict(self.build_stats)))
+        return ShardedBank(tree_starts=starts.astype(np.int32), banks=banks)
+
     def sort_buckets(self) -> None:
         """Host-side idle-time adaptive sort over the whole bank: reorder
         every bucket's slots by descending temperature, empties last — the
@@ -170,6 +233,221 @@ class FilterBank:
                     self.entity_ids, self.stored_hash):
             a = arr.reshape(-1, self.slots)
             a[...] = np.take_along_axis(a, order, axis=1)
+
+
+# --------------------------------------------------------------- sharding
+
+def plan_partition(weights: np.ndarray, num_shards: int) -> np.ndarray:
+    """Contiguous tree ranges balanced by per-tree weight (row counts).
+
+    Returns ``starts`` of shape ``(num_shards + 1,)``: shard ``d`` owns
+    global trees ``[starts[d], starts[d+1])``.  Boundaries sit at the
+    quantiles of the cumulative weight, clamped so every shard owns at
+    least one tree (requires ``T >= num_shards``).
+    """
+    w = np.asarray(weights, np.float64).ravel()
+    t, d = w.size, int(num_shards)
+    if d < 1:
+        raise ValueError("num_shards must be >= 1")
+    if t < d:
+        raise ValueError(f"cannot spread {t} trees over {d} shards")
+    if w.sum() <= 0:
+        w = np.ones(t)
+    cum = np.cumsum(w)
+    starts = np.zeros(d + 1, np.int64)
+    starts[d] = t
+    for k in range(1, d):
+        # side="right": a boundary exactly on the quantile closes the range
+        # *after* that tree (equal weights then split perfectly evenly)
+        b = int(np.searchsorted(cum, cum[-1] * k / d, side="right"))
+        starts[k] = min(max(b, starts[k - 1] + 1), t - (d - k))
+    return starts.astype(np.int32)
+
+
+@dataclasses.dataclass
+class ShardedBank:
+    """Tree-range partitioned :class:`FilterBank` — the host mirror of the
+    device-side bank-axis sharding in ``repro.core.distributed``.
+
+    Shard ``d`` owns global trees ``[tree_starts[d], tree_starts[d+1])`` as
+    a self-contained sub-bank (local tree ids, local CSR arena), so every
+    maintenance operation — insert, delete, compact, *expand* — is
+    shard-local: one hot tree outgrowing its buckets restages only its own
+    shard's tree range at 2xNB while every other shard's tables stay
+    byte-identical.  Per-shard ``num_buckets`` may therefore diverge; the
+    packed device layout pads to the max NB and routes candidate-bucket
+    arithmetic through a per-shard NB table.
+
+    Row numbering: the *merged* numbering (shard-major, ``shard_row_base``
+    offsets) is canonical for a sharded bank — it is what the packed device
+    ``heads`` payloads carry and what :meth:`walk_row` resolves.
+    """
+    tree_starts: np.ndarray        # (D + 1,) int32
+    banks: List[FilterBank]
+
+    # --------------------------------------------------------------- sizes
+    @property
+    def num_shards(self) -> int:
+        return len(self.banks)
+
+    @property
+    def num_trees(self) -> int:
+        return int(self.tree_starts[-1])
+
+    @property
+    def slots(self) -> int:
+        return self.banks[0].slots
+
+    @property
+    def trees_per_shard(self) -> int:
+        """Padded per-shard tree count of the packed device layout."""
+        return max(b.num_trees for b in self.banks)
+
+    @property
+    def max_buckets(self) -> int:
+        """Padded per-shard bucket count of the packed device layout."""
+        return max(b.num_buckets for b in self.banks)
+
+    @property
+    def num_items(self) -> np.ndarray:
+        return np.concatenate([b.num_items for b in self.banks])
+
+    @property
+    def num_rows(self) -> int:
+        return int(sum(b.num_rows for b in self.banks))
+
+    # ------------------------------------------------------------- routing
+    def tree_shard_map(self) -> np.ndarray:
+        """(T,) int32: owning shard of every global tree."""
+        return np.repeat(np.arange(self.num_shards, dtype=np.int32),
+                         np.diff(self.tree_starts))
+
+    def tree_local_map(self) -> np.ndarray:
+        """(T,) int32: local tree index within the owning shard."""
+        t = np.arange(self.num_trees, dtype=np.int32)
+        return t - self.tree_starts[self.tree_shard_map()]
+
+    def owner(self, tree: int) -> Tuple[int, int]:
+        """Global tree -> (shard, local tree)."""
+        if not 0 <= tree < self.num_trees:
+            raise ValueError(f"tree {tree} out of range "
+                             f"[0, {self.num_trees})")
+        d = int(np.searchsorted(self.tree_starts, tree, side="right")) - 1
+        return d, tree - int(self.tree_starts[d])
+
+    def shard_row_base(self) -> np.ndarray:
+        """(D + 1,) merged-row offsets: shard d's local row r is merged row
+        ``base[d] + r`` — the numbering the packed device heads carry."""
+        base = np.zeros(self.num_shards + 1, np.int64)
+        np.cumsum([b.num_rows for b in self.banks], out=base[1:])
+        return base
+
+    # ----------------------------------------------------------- host path
+    def lookup(self, tree: int, h: int, bump: bool = False
+               ) -> Tuple[bool, int, int]:
+        """Routed host lookup; the returned row id is *merged* numbering."""
+        d, lt = self.owner(tree)
+        hit, row, eid = self.banks[d].lookup(lt, h, bump=bump)
+        if hit and row >= 0:
+            row += int(self.shard_row_base()[d])
+        return hit, row, eid
+
+    def contains(self, tree: int, h: int) -> bool:
+        d, lt = self.owner(tree)
+        return self.banks[d].contains(lt, h)
+
+    def locate(self, tree: int, name: str) -> List[int]:
+        d, lt = self.owner(tree)
+        return self.banks[d].locate(lt, name)
+
+    def walk_row(self, row: int) -> List[int]:
+        """Node ids of one merged-numbering (tree, entity) row."""
+        base = self.shard_row_base()
+        d = int(np.searchsorted(base, row, side="right")) - 1
+        return self.banks[d].walk_row(int(row - base[d]))
+
+    # -------------------------------------------------------------- device
+    def packed_tables(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Device-ready packed (fingerprints, temperature, heads).
+
+        Shape ``(D * Tpad, NBmax, S)``: shard d's block occupies rows
+        ``[d*Tpad, d*Tpad + Td)``, buckets ``[0, NB_d)``; padding rows and
+        buckets hold empty fingerprints (never match).  Head payloads are
+        merged row ids (``shard_row_base`` offsets applied).
+        """
+        d, tp, nb, s = (self.num_shards, self.trees_per_shard,
+                        self.max_buckets, self.slots)
+        fps = np.full((d * tp, nb, s), hashing.EMPTY_FP, np.uint32)
+        temp = np.zeros((d * tp, nb, s), np.int32)
+        heads = np.full((d * tp, nb, s), NULL, np.int32)
+        base = self.shard_row_base()
+        for k, b in enumerate(self.banks):
+            blk = slice(k * tp, k * tp + b.num_trees)
+            fps[blk, :b.num_buckets] = b.fingerprints
+            temp[blk, :b.num_buckets] = b.temperature
+            occ = b.fingerprints != hashing.EMPTY_FP
+            heads[blk, :b.num_buckets] = np.where(
+                occ, b.heads + np.int32(base[k]), NULL)
+        return fps, temp, heads
+
+    def merged_tables(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Replicated-reference ``(T, NB, S)`` tables in global tree order
+        with merged-row head payloads — the tables ``lookup_batch_bank``
+        probes to produce the sharded path's exact results.  Only defined
+        while all shards share one NB (before any shard-local expansion
+        diverges them); heterogeneous banks answer per shard instead.
+        """
+        nbs = {b.num_buckets for b in self.banks}
+        if len(nbs) != 1:
+            raise ValueError(f"heterogeneous per-shard NB {sorted(nbs)}: "
+                             "no dense merged layout exists")
+        base = self.shard_row_base()
+        fps = np.concatenate([b.fingerprints for b in self.banks], axis=0)
+        temp = np.concatenate([b.temperature for b in self.banks], axis=0)
+        heads = np.concatenate(
+            [np.where(b.fingerprints != hashing.EMPTY_FP,
+                      b.heads + np.int32(base[k]), NULL)
+             for k, b in enumerate(self.banks)], axis=0)
+        return fps, temp, heads
+
+    def merged_csr(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Concatenated CSR arena in merged-row order (device staging)."""
+        offsets = [np.zeros(1, np.int32)]
+        nodes = []
+        shift = 0
+        for b in self.banks:
+            offsets.append(b.csr_offsets[1:].astype(np.int32) + shift)
+            nodes.append(b.csr_nodes)
+            shift += int(b.csr_offsets[-1])
+        return (np.concatenate(offsets),
+                np.concatenate(nodes) if nodes else np.zeros(0, np.int32))
+
+    # --------------------------------------------- temperature feedback
+    def temperature_blocks(self, packed) -> List[np.ndarray]:
+        """Slice a packed ``(D*Tpad, NBmax, S)`` device temperature into
+        per-shard owner blocks ``(Td, NB_d, S)`` — padding rows/buckets are
+        excluded, so each slot's bumps are harvested exactly once, against
+        the owning shard's baseline only."""
+        temp = np.asarray(getattr(packed, "temperature", packed), np.int32)
+        d, tp = self.num_shards, self.trees_per_shard
+        want = (d * tp, self.max_buckets, self.slots)
+        if temp.shape != want:
+            raise ValueError(f"packed temperature shape {temp.shape} != "
+                             f"{want} (stale sharded layout?)")
+        return [temp[k * tp:k * tp + b.num_trees, :b.num_buckets]
+                for k, b in enumerate(self.banks)]
+
+    def absorb_temperature(self, device_state) -> int:
+        """Write a packed sharded device temperature back into the host
+        sub-banks; returns total new bumps (sum of positive deltas against
+        each owning shard's own baseline — never double-counted across
+        shards or padding)."""
+        return sum(b.absorb_temperature(blk) for b, blk in
+                   zip(self.banks, self.temperature_blocks(device_state)))
+
+    def sort_buckets(self) -> None:
+        for b in self.banks:
+            b.sort_buckets()
 
 
 # ------------------------------------------------------------------- build

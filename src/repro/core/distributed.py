@@ -1,77 +1,405 @@
-"""Distributed cuckoo-filter lookup — buckets sharded across the mesh.
+"""Bank-axis sharding — tree-range partitioned FilterBank over the mesh.
 
-At pod scale the entity forest can exceed a single host's memory; the filter
-(and the CSR location arena) shard over the ``model`` mesh axis.  Queries are
-replicated (they are tiny — B hashes), every shard probes only the buckets it
-owns, and partial results combine with a max-reduce (misses are -1, hits are
-unique because an entity lives in exactly one or two buckets, both possibly
-on different shards — each shard reports only local hits).
+The paper's many-tree regime ("hundreds of times faster ... when the number
+of trees is large") only scales past one device if the *tree axis* shards:
+a replicated ``(T, NB, S)`` bank caps T at a single device's memory and
+adding devices buys nothing.  Here the bank partitions into contiguous
+tree ranges over the ``model`` mesh axis (``FilterBank.shard`` /
+``plan_partition`` pick ranges balanced by per-tree row counts) and queries
+travel to their data instead of the data being everywhere:
 
-This is shard_map-native: no pointer chasing crosses devices, one psum-style
-combine per lookup round.
+1. each device holds its slice of the query batch; a query's owning shard
+   comes from the replicated ``tree_shard`` routing table;
+2. queries bucket by destination and exchange once with
+   ``jax.lax.all_to_all`` inside ``shard_map`` (no full-bank broadcast);
+3. every shard probes only its own ``(Tpad, NB, S)`` block — the same
+   two-candidate-bucket ``match_rows`` semantics as ``lookup_batch_bank``,
+   with per-shard NB so shard-local expansions can diverge bucket counts;
+4. results (and nothing else) route back through the inverse all-to-all —
+   there is no max-reduce over T x NB x S replicas anywhere.
+
+Temperature bumps land in the owning shard's block during the probe, so
+the paper's feedback loop stays shard-local too; the host harvests with
+``ShardedBank.absorb_temperature`` (per-shard baselines, never
+double-counted).
+
+The legacy single-filter helpers (``shard_filter_tables`` +
+``sharded_lookup``) are thin wrappers over the same router: a bucket-striped
+filter is just a degenerate bank whose "trees" are the D bucket stripes,
+with each query fanned to its two candidate stripes and the pair merged
+with i1 priority.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map as _shard_map
 from . import hashing
-from .lookup import LookupResult
+from .bank import FilterBank, ShardedBank
+from .lookup import LookupResult, match_rows, sort_buckets_bank
+from .tree import EntityForest
+from .trag import CFTDeviceState, DeviceRetrieval, gather_context
+
+NULL = -1
 
 
-def _local_probe(fps_shard: jax.Array, heads_shard: jax.Array,
-                 h: jax.Array, axis_name: str,
-                 nb_global: int) -> LookupResult:
-    """Probe only the locally-owned bucket range; miss -> -1 everywhere."""
-    nb_local, s = fps_shard.shape
-    shard = jax.lax.axis_index(axis_name)
-    lo = shard * nb_local
+# ---------------------------------------------------------------- router
 
-    fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb_global, jnp)
-    out_hit = jnp.zeros(h.shape, dtype=jnp.bool_)
-    out_head = jnp.full(h.shape, -1, dtype=jnp.int32)
-    out_bucket = jnp.full(h.shape, -1, dtype=jnp.int32)
-    out_slot = jnp.full(h.shape, -1, dtype=jnp.int32)
+def _exchange(buf: jax.Array, axis: str) -> jax.Array:
+    """One all-to-all hop: local ``(D, C, ...)`` buffer -> local
+    ``(D, C, ...)`` buffer whose row s holds what source shard s sent us.
+    Involutive — the same call routes results back."""
+    return jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
 
-    for cand in (i1, i2):
-        local = cand.astype(jnp.int32) - lo
-        owned = (local >= 0) & (local < nb_local)
-        safe = jnp.clip(local, 0, nb_local - 1)
-        rows = fps_shard[safe]                       # (B, S)
-        match = (rows == fp[:, None]) & owned[:, None]
-        hit = jnp.any(match, axis=1)
-        slot = jnp.argmax(match, axis=1).astype(jnp.int32)
-        head = jnp.take_along_axis(heads_shard[safe], slot[:, None], axis=1)[:, 0]
-        take = hit & ~out_hit                        # i1 priority over i2
-        out_hit = out_hit | hit
-        out_head = jnp.where(take, head, out_head)
-        out_bucket = jnp.where(take, cand.astype(jnp.int32), out_bucket)
-        out_slot = jnp.where(take, slot, out_slot)
 
-    # combine across shards: hits are disjoint per bucket ownership
-    combine = functools.partial(jax.lax.pmax, axis_name=axis_name)
-    return LookupResult(
-        hit=combine(out_hit.astype(jnp.int32)).astype(jnp.bool_),
-        head=combine(out_head), bucket=combine(out_bucket),
-        slot=combine(out_slot))
+def _bucket_queries(dest: jax.Array, num_shards: int,
+                    payloads: Tuple[Tuple[jax.Array, object], ...]
+                    ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Pack per-query payloads into fixed ``(D, C)`` destination buckets.
+
+    ``dest``: (Bl,) destination shard per local query.  Capacity C equals
+    Bl (the degenerate case routes every local query to one shard), so no
+    bucket can overflow and shapes stay static.  Returns each query's slot
+    ``rank`` within its bucket — the return address for ``_route_back`` —
+    plus one ``(D, C)`` buffer per (payload, fill) pair.
+    """
+    bl = dest.shape[0]
+    order = jnp.argsort(dest)                       # stable
+    counts = jnp.bincount(dest, length=num_shards)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    within = (jnp.arange(bl) - starts[dest[order]]).astype(jnp.int32)
+    rank = jnp.zeros((bl,), jnp.int32).at[order].set(within)
+    bufs = tuple(
+        jnp.full((num_shards, bl), fill, x.dtype).at[dest, rank].set(x)
+        for x, fill in payloads)
+    return rank, bufs
+
+
+def _route_back(x: jax.Array, dest: jax.Array, rank: jax.Array,
+                axis: str, num_shards: int) -> jax.Array:
+    """Send per-slot probe results home and unscatter to query order."""
+    recv = _exchange(x.reshape(num_shards, -1), axis)
+    return recv[dest, rank]
+
+
+# ------------------------------------------------------- sharded bank state
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedBankState:
+    """Device-side bank-axis sharded retrieval state.
+
+    Filter tables are *packed*: shard d's trees live in block rows
+    ``[d*Tpad, d*Tpad + Td)`` of a ``(D*Tpad, NBmax, S)`` tensor placed
+    ``P(axis, None, None)`` over the mesh, so each device holds exactly one
+    shard's block (1/D of the replicated table bytes, padding aside).
+    Routing tables, the merged CSR location arena and the forest hierarchy
+    arrays are replicated — they are O(T) / O(rows), not O(T*NB*S).
+
+    ``shard_nb`` carries each shard's true bucket count: after a
+    shard-local expansion the packed layout pads to the max NB, and the
+    probe derives candidate buckets from the owning shard's own NB.
+    ``mesh``/``axis``/``uniform_nb`` are static (pytree aux), so the state
+    passes through ``jax.jit`` like any other pytree.
+    """
+    fingerprints: jax.Array   # (D*Tpad, NBmax, S) uint32, P(axis, None, None)
+    temperature: jax.Array    # (D*Tpad, NBmax, S) int32
+    heads: jax.Array          # (D*Tpad, NBmax, S) int32 — merged CSR row ids
+    tree_shard: jax.Array     # (T,) int32 — owning shard, replicated
+    tree_local: jax.Array     # (T,) int32 — index within the owner's block
+    shard_nb: jax.Array       # (D,) int32 — per-shard true bucket count
+    csr_offsets: jax.Array    # (R + 1,) int32 — merged arena, replicated
+    csr_nodes: jax.Array      # (L,) int32
+    parent: jax.Array         # (N,) int32 — forest arrays, replicated
+    entity_id: jax.Array      # (N,) int32
+    child_offsets: jax.Array  # (N + 1,) int32
+    child_index: jax.Array    # (C,) int32
+    mesh: Mesh                # static
+    axis: str                 # static
+    uniform_nb: Optional[int]  # static; set iff every shard shares one NB
+
+    _LEAVES = ("fingerprints", "temperature", "heads", "tree_shard",
+               "tree_local", "shard_nb", "csr_offsets", "csr_nodes",
+               "parent", "entity_id", "child_offsets", "child_index")
+
+    def tree_flatten(self):
+        return (tuple(getattr(self, f) for f in self._LEAVES),
+                (self.mesh, self.axis, self.uniform_nb))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # --------------------------------------------------------------- sizes
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def trees_per_shard(self) -> int:
+        return int(self.fingerprints.shape[0]) // self.num_shards
+
+    @property
+    def num_trees(self) -> int:
+        return int(self.tree_shard.shape[0])
+
+    @property
+    def slots(self) -> int:
+        return int(self.fingerprints.shape[-1])
+
+    # ----------------------------------------------------------- threading
+    def with_temperature(self, temperature: jax.Array) -> "ShardedBankState":
+        """Thread an updated packed temperature forward (same contract as
+        ``CFTDeviceState.with_temperature``)."""
+        return dataclasses.replace(self, temperature=temperature)
+
+    def sort_idle(self) -> "ShardedBankState":
+        """Device-only idle-time bucket sort over every shard's block at
+        once (pure per-bucket slot reorder — sharding is preserved).  As
+        with ``CFTDeviceState.sort_idle``: only for states with no host
+        bank mirror; a host ``ShardedMaintenanceEngine`` sorts + restages
+        instead so layouts never diverge."""
+        f, t, h = sort_buckets_bank(self.fingerprints, self.temperature,
+                                    self.heads)
+        return dataclasses.replace(self, fingerprints=f, temperature=t,
+                                   heads=h)
+
+
+def stage_sharded_bank(sbank: ShardedBank, forest: EntityForest,
+                       mesh: Mesh, axis: str = "model") -> ShardedBankState:
+    """Place a host :class:`ShardedBank` on the mesh as a
+    :class:`ShardedBankState` (packed blocks sharded over ``axis``,
+    routing/CSR/forest replicated)."""
+    d = int(mesh.shape[axis])
+    if d != sbank.num_shards:
+        raise ValueError(f"bank has {sbank.num_shards} shards but mesh "
+                         f"axis '{axis}' has {d} devices")
+    fps, temp, heads = sbank.packed_tables()
+    csr_off, csr_nodes = sbank.merged_csr()
+    nbs = np.asarray([b.num_buckets for b in sbank.banks], np.int32)
+    blk = NamedSharding(mesh, P(axis, None, None))
+    rep = NamedSharding(mesh, P())
+    put_b = lambda a: jax.device_put(jnp.asarray(a), blk)     # noqa: E731
+    put_r = lambda a: jax.device_put(jnp.asarray(a), rep)     # noqa: E731
+    fa = CFTDeviceState._forest_arrays(forest)
+    return ShardedBankState(
+        fingerprints=put_b(fps), temperature=put_b(temp),
+        heads=put_b(heads),
+        tree_shard=put_r(sbank.tree_shard_map()),
+        tree_local=put_r(sbank.tree_local_map()),
+        shard_nb=put_r(nbs),
+        csr_offsets=put_r(csr_off),
+        csr_nodes=put_r(csr_nodes if csr_nodes.size
+                        else np.zeros(1, np.int32)),
+        parent=put_r(fa["parent"]), entity_id=put_r(fa["entity_id"]),
+        child_offsets=put_r(fa["child_offsets"]),
+        child_index=put_r(fa["child_index"]),
+        mesh=mesh, axis=axis,
+        uniform_nb=int(nbs[0]) if np.all(nbs == nbs[0]) else None)
+
+
+def shard_bank(bank: FilterBank, forest: EntityForest, mesh: Mesh,
+               axis: str = "model",
+               tree_starts: Optional[np.ndarray] = None
+               ) -> Tuple[ShardedBank, ShardedBankState]:
+    """Partition + stage in one step; returns (host sbank, device state)."""
+    sbank = bank.shard(num_shards=int(mesh.shape[axis]),
+                       tree_starts=tree_starts)
+    return sbank, stage_sharded_bank(sbank, forest, mesh, axis)
+
+
+# ------------------------------------------------------- bank-axis lookup
+
+def _bank_local_fn(axis: str, num_shards: int, num_trees: int, slots: int,
+                   bump: bool, lookup_fn, uniform_nb: Optional[int]):
+    """Build the shard-local body: route -> probe own block -> route back."""
+
+    def local(fps_b, temp_b, heads_b, shard_nb, tree_shard, tree_local,
+              tid, h):
+        # ---- destination + local coordinates (replicated routing tables)
+        tq = jnp.clip(tid, 0, num_trees - 1)
+        valid = (tid >= 0) & (tid < num_trees)
+        dest = jnp.where(valid, tree_shard[tq], 0).astype(jnp.int32)
+        lt = jnp.where(valid, tree_local[tq], 0).astype(jnp.int32)
+        rank, (bh, bt, bv) = _bucket_queries(
+            dest, num_shards, ((h.astype(jnp.uint32), jnp.uint32(0)),
+                               (lt, jnp.int32(0)), (valid, False)))
+        # ---- one exchange: every query lands on its owning shard
+        qh = _exchange(bh, axis).reshape(-1)
+        qt = _exchange(bt, axis).reshape(-1)
+        qv = _exchange(bv, axis).reshape(-1)
+        # ---- shard-local probe of the owned (Tpad, NBmax, S) block
+        if lookup_fn is not None and uniform_nb is not None:
+            res = lookup_fn(fps_b, heads_b, qt, qh)
+        else:
+            nb = shard_nb[jax.lax.axis_index(axis)]
+            fp = hashing.fingerprint(qh, jnp)
+            i1 = hashing.bucket_i1(qh, nb, jnp)
+            i2 = hashing.alt_bucket(i1, fp, nb, jnp)
+            res = match_rows(fp, i1, i2, fps_b[qt, i1], fps_b[qt, i2],
+                             heads_b[qt, i1], heads_b[qt, i2], slots)
+        hit = res.hit & qv
+        head = jnp.where(hit, res.head, jnp.int32(NULL))
+        if bump:   # owner-local: each tree's temperature has exactly 1 home
+            temp_b = temp_b.at[qt, res.bucket, res.slot].add(
+                hit.astype(temp_b.dtype))
+        # ---- inverse exchange: results home to their source shard
+        back = functools.partial(_route_back, dest=dest, rank=rank,
+                                 axis=axis, num_shards=num_shards)
+        return LookupResult(hit=back(hit), head=back(head),
+                            bucket=back(res.bucket),
+                            slot=back(res.slot)), temp_b
+
+    return local
+
+
+def _lookup_core(state: ShardedBankState, tree_ids: jax.Array,
+                 h: jax.Array, bump: bool, lookup_fn
+                 ) -> Tuple[LookupResult, jax.Array]:
+    mesh, axis = state.mesh, state.axis
+    d = state.num_shards
+    b = h.shape[0]
+    pad = (-b) % d
+    tid = jnp.pad(tree_ids.astype(jnp.int32), (0, pad),
+                  constant_values=NULL)            # pad queries always miss
+    hp = jnp.pad(h.astype(jnp.uint32), (0, pad))
+    local = _bank_local_fn(axis, d, state.num_trees, state.slots, bump,
+                           lookup_fn, state.uniform_nb)
+    spec_b = P(axis, None, None)
+    fn = _shard_map(
+        local, mesh=mesh,
+        in_specs=(spec_b, spec_b, spec_b, P(), P(), P(), P(axis), P(axis)),
+        out_specs=(LookupResult(hit=P(axis), head=P(axis), bucket=P(axis),
+                                slot=P(axis)), spec_b),
+        # pallas_call has no replication rule; rep-check only costs us the
+        # kernel probe path, so switch it off just there
+        check_rep=lookup_fn is None)
+    res, temp = fn(state.fingerprints, state.temperature, state.heads,
+                   state.shard_nb, state.tree_shard, state.tree_local,
+                   tid, hp)
+    return LookupResult(hit=res.hit[:b], head=res.head[:b],
+                        bucket=res.bucket[:b], slot=res.slot[:b]), temp
+
+
+@functools.partial(jax.jit, static_argnames=("lookup_fn",))
+def sharded_lookup_bank(state: ShardedBankState, tree_ids: jax.Array,
+                        h: jax.Array, lookup_fn=None) -> LookupResult:
+    """All-to-all routed bank lookup; bit-identical to
+    ``lookup_batch_bank`` over the merged replicated tables.
+
+    ``lookup_fn(fps, heads, tree_ids, h)`` swaps in a different shard-local
+    probe (e.g. the tiled Pallas bank kernel
+    ``repro.kernels.cuckoo_lookup.cuckoo_lookup_bank_auto``); it is used
+    only while every shard shares one NB — after per-shard expansions
+    diverge bucket counts, the probe falls back to the pure-jnp path, which
+    reads each shard's NB from the routing tables.  Pure: temperature is
+    not bumped (use :func:`sharded_retrieve_device` for serving).
+    """
+    res, _ = _lookup_core(state, tree_ids, h, bump=False,
+                          lookup_fn=lookup_fn)
+    return res
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_locs", "n", "lookup_fn"))
+def sharded_retrieve_device(state: ShardedBankState,
+                            query_hashes: jax.Array,
+                            query_trees: Optional[jax.Array] = None,
+                            max_locs: int = 4, n: int = 3,
+                            lookup_fn=None) -> DeviceRetrieval:
+    """Bank-axis sharded analogue of ``repro.core.retrieve_device``.
+
+    The lookup routes through the all-to-all; temperature bumps land in
+    the owning shard's packed block during the probe (so the returned
+    ``temperature`` keeps the sharded layout — thread it forward with
+    ``state.with_temperature``); the CSR location gather and hierarchy
+    windows run on the replicated arrays exactly as the replicated path.
+    """
+    if query_trees is None:
+        query_trees = jnp.zeros(query_hashes.shape, jnp.int32)
+    res, temp = _lookup_core(state, query_trees, query_hashes, bump=True,
+                             lookup_fn=lookup_fn)
+    return gather_context(state, res, temp, max_locs=max_locs, n=n)
+
+
+# ------------------------------------------- legacy single-filter wrappers
+
+def _filter_local_fn(axis: str, num_shards: int, nb_global: int,
+                     nb_local: int, slots: int):
+    """Shard-local body for the bucket-striped single filter: each query
+    fans out to its two candidate stripes through the shared router, each
+    stripe scans one bucket row, and the pair merges with i1 priority."""
+
+    def local(fps_s, heads_s, h_l):
+        bl = h_l.shape[0]
+        fp, i1, i2 = hashing.candidate_buckets(h_l.astype(jnp.uint32),
+                                               nb_global, jnp)
+        # 2 routed probes per query: [all i1 probes ; all i2 probes]
+        cand = jnp.concatenate([i1, i2]).astype(jnp.int32)
+        dest = cand // nb_local                    # stripe == owning shard
+        lb = cand % nb_local
+        fp2 = jnp.tile(fp, 2)
+        rank, (bb, bf) = _bucket_queries(
+            dest, num_shards, ((lb, jnp.int32(0)), (fp2, jnp.uint32(0))))
+        qb = _exchange(bb, axis).reshape(-1)
+        qf = _exchange(bf, axis).reshape(-1)
+        rows = fps_s[qb]                           # (D*C, S)
+        m = rows == qf[:, None]
+        hit = jnp.any(m, axis=1)
+        slot = jnp.argmax(m, axis=1).astype(jnp.int32)
+        head = jnp.take_along_axis(heads_s[qb], slot[:, None],
+                                   axis=1)[:, 0]
+        back = functools.partial(_route_back, dest=dest, rank=rank,
+                                 axis=axis, num_shards=num_shards)
+        hit, head, slot = back(hit), back(head), back(slot)
+        h1, h2 = hit[:bl], hit[bl:]
+        # i1 priority — identical tie-breaking to match_rows' 2S concat
+        return LookupResult(
+            hit=h1 | h2,
+            head=jnp.where(h1, head[:bl],
+                           jnp.where(h2, head[bl:], jnp.int32(NULL))),
+            bucket=jnp.where(h1 | ~h2, i1, i2).astype(jnp.int32),
+            slot=jnp.where(h1, slot[:bl],
+                           jnp.where(h2, slot[bl:], jnp.int32(0))))
+
+    return local
 
 
 def sharded_lookup(mesh: Mesh, axis: str, fingerprints: jax.Array,
                    heads: jax.Array, h: jax.Array) -> LookupResult:
-    """Top-level: tables sharded on bucket dim over ``axis``; h replicated."""
+    """Single-filter lookup with tables bucket-sharded over ``axis``.
+
+    Thin wrapper over the bank-axis router: the D bucket stripes act as a
+    degenerate D-tree bank (one "tree" per shard), each query routes to its
+    two candidate stripes, and no replica combine exists — the old
+    replicated-query pmax path is gone.  Bit-identical to
+    ``lookup_batch``.
+    """
+    nb_global, slots = fingerprints.shape
+    d = int(mesh.shape[axis])
+    if nb_global % d:
+        raise ValueError(f"bucket count {nb_global} not divisible by "
+                         f"mesh axis size {d}")
+    b = h.shape[0]
+    pad = (-b) % d
+    hp = jnp.pad(h.astype(jnp.uint32), (0, pad))
+    local = _filter_local_fn(axis, d, nb_global, nb_global // d, slots)
     fn = _shard_map(
-        functools.partial(_local_probe, axis_name=axis,
-                          nb_global=fingerprints.shape[0]),
-        mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P()),
-        out_specs=LookupResult(hit=P(), head=P(), bucket=P(), slot=P()),
-    )
-    return fn(fingerprints, heads, h)
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis)),
+        out_specs=LookupResult(hit=P(axis), head=P(axis), bucket=P(axis),
+                               slot=P(axis)))
+    res = fn(fingerprints, heads, hp)
+    return LookupResult(hit=res.hit[:b], head=res.head[:b],
+                        bucket=res.bucket[:b], slot=res.slot[:b])
 
 
 def shard_filter_tables(mesh: Mesh, axis: str, *tables: jax.Array

@@ -26,11 +26,13 @@ class LookupResult(NamedTuple):
     slot: jax.Array       # (B,) int32 — slot within that bucket
 
 
-def _match_rows(fp: jax.Array, i1: jax.Array, i2: jax.Array,
-                rows1: jax.Array, rows2: jax.Array,
-                heads1: jax.Array, heads2: jax.Array,
-                s: int) -> LookupResult:
-    """Shared slot-priority match over two gathered bucket rows."""
+def match_rows(fp: jax.Array, i1: jax.Array, i2: jax.Array,
+               rows1: jax.Array, rows2: jax.Array,
+               heads1: jax.Array, heads2: jax.Array,
+               s: int) -> LookupResult:
+    """Shared slot-priority match over two gathered bucket rows — the one
+    place lookup semantics live; the batch/bank/sharded entry points all
+    gather their candidate rows and defer to this."""
     match = jnp.concatenate([rows1 == fp[:, None],
                              rows2 == fp[:, None]], axis=1)   # (B, 2S)
     hit = jnp.any(match, axis=1)
@@ -50,8 +52,8 @@ def lookup_batch(fingerprints: jax.Array, heads: jax.Array,
     """fingerprints/heads: (NB, S); h: (B,) uint32 entity hashes."""
     nb, s = fingerprints.shape
     fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb, jnp)
-    return _match_rows(fp, i1, i2, fingerprints[i1], fingerprints[i2],
-                       heads[i1], heads[i2], s)
+    return match_rows(fp, i1, i2, fingerprints[i1], fingerprints[i2],
+                      heads[i1], heads[i2], s)
 
 
 def lookup_batch_bank(fingerprints: jax.Array, heads: jax.Array,
@@ -64,8 +66,8 @@ def lookup_batch_bank(fingerprints: jax.Array, heads: jax.Array,
     _, nb, s = fingerprints.shape
     fp, i1, i2 = hashing.candidate_buckets(h.astype(jnp.uint32), nb, jnp)
     t = tree_ids.astype(jnp.int32)
-    return _match_rows(fp, i1, i2, fingerprints[t, i1], fingerprints[t, i2],
-                       heads[t, i1], heads[t, i2], s)
+    return match_rows(fp, i1, i2, fingerprints[t, i1], fingerprints[t, i2],
+                      heads[t, i1], heads[t, i2], s)
 
 
 def lookup_batch_trees(fingerprints: jax.Array, heads: jax.Array,

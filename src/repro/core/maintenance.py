@@ -40,7 +40,8 @@ from typing import Dict, List, Sequence, Tuple, Union
 import numpy as np
 
 from . import hashing
-from .bank import FilterBank, _scalar_insert, build_bank_from_rows
+from .bank import FilterBank, ShardedBank, _scalar_insert, \
+    build_bank_from_rows
 from .cuckoo import (DEFAULT_LOAD_THRESHOLD, DEFAULT_MAX_KICKS, NULL,
                      bulk_place)
 
@@ -424,3 +425,117 @@ class MaintenanceEngine:
         rep.sorted = self.maybe_sort()
         rep.expansions = self.stats["expansions"] - exp0
         return rep
+
+
+class ShardedMaintenanceEngine:
+    """Shard-local maintenance over a :class:`ShardedBank`.
+
+    One :class:`MaintenanceEngine` per shard, each owning only its shard's
+    sub-bank: global-tree operations route to the owning shard's engine
+    (``tree_starts`` range search), so an insert, delete, compaction or
+    *expansion* mutates exactly one shard's tables — every other shard's
+    tables stay byte-identical, and a restage after maintenance ships only
+    changed blocks' worth of new content.
+
+    Temperature harvesting slices the packed ``(D*Tpad, NBmax, S)`` device
+    table into per-shard owner blocks first (``ShardedBank.
+    temperature_blocks``), so each slot's bumps are counted once against
+    the owning shard's own baseline — the padding rows/buckets of the
+    packed layout never enter the delta.
+    """
+
+    def __init__(self, sbank: ShardedBank, seed: int = 0x5EED, **policy):
+        self.sbank = sbank
+        # distinct per-shard seeds: shard-local kick chains must not be
+        # correlated replicas of each other
+        self.engines = [MaintenanceEngine(b, seed=seed + 101 * d, **policy)
+                        for d, b in enumerate(sbank.banks)]
+
+    # ------------------------------------------------------------ routing
+    def _owner(self, tree: int) -> Tuple[int, int]:
+        return self.sbank.owner(int(tree))
+
+    def queue_insert(self, tree: int, key: Key, nodes: Sequence[int],
+                     entity_id: int = NULL) -> None:
+        d, lt = self._owner(tree)
+        self.engines[d].queue_insert(lt, key, nodes, entity_id)
+
+    def queue_delete(self, tree: int, key: Key) -> None:
+        d, lt = self._owner(tree)
+        self.engines[d].queue_delete(lt, key)
+
+    def insert(self, tree: int, key: Key, nodes: Sequence[int],
+               entity_id: int = NULL) -> None:
+        d, lt = self._owner(tree)
+        self.engines[d].insert(lt, key, nodes, entity_id)
+
+    def delete(self, tree: int, key: Key) -> bool:
+        d, lt = self._owner(tree)
+        return self.engines[d].delete(lt, key)
+
+    def apply(self) -> Dict[str, int]:
+        out = {"inserted": 0, "deleted": 0, "replaced": 0,
+               "missed_deletes": 0}
+        for e in self.engines:
+            if e.delta:
+                for k, v in e.apply().items():
+                    out[k] += v
+        return out
+
+    # --------------------------------------------------- expand / compact
+    def expand_tree(self, tree: int, force: bool = False) -> bool:
+        """Shard-local expansion: restages only the owning shard's tree
+        range at 2xNB — the other shards' tables are untouched."""
+        d, lt = self._owner(tree)
+        return self.engines[d].expand_tree(lt, force=force)
+
+    def maybe_compact(self) -> bool:
+        return any([e.maybe_compact() for e in self.engines])
+
+    # --------------------------------------------- temperature feedback
+    def absorb(self, device_state) -> int:
+        blocks = self.sbank.temperature_blocks(device_state)
+        return sum(e.absorb(blk)
+                   for e, blk in zip(self.engines, blocks))
+
+    def maybe_sort(self) -> bool:
+        return any([e.maybe_sort() for e in self.engines])
+
+    # ------------------------------------------------------ idle-time hook
+    def maintain(self, device_state=None) -> MaintenanceReport:
+        """One idle-window pass over every shard (absorb -> delta ->
+        compact -> sort, shard by shard).  The packed temperature is sliced
+        against the *pre-mutation* geometry up front, so an expansion on an
+        earlier shard cannot shift a later shard's harvest window."""
+        blocks = (self.sbank.temperature_blocks(device_state)
+                  if device_state is not None
+                  else [None] * self.sbank.num_shards)
+        rep = MaintenanceReport()
+        for e, blk in zip(self.engines, blocks):
+            r = e.maintain(blk)
+            rep.absorbed_bumps += r.absorbed_bumps
+            rep.inserted += r.inserted
+            rep.deleted += r.deleted
+            rep.replaced += r.replaced
+            rep.missed_deletes += r.missed_deletes
+            rep.expansions += r.expansions
+            rep.compacted = rep.compacted or r.compacted
+            rep.sorted = rep.sorted or r.sorted
+        return rep
+
+    # ------------------------------------------------------------- stats
+    @property
+    def stats(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for e in self.engines:
+            for k, v in e.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    @property
+    def bumps_since_sort(self) -> int:
+        return sum(e.bumps_since_sort for e in self.engines)
+
+    @property
+    def num_dead_rows(self) -> int:
+        return sum(e.num_dead_rows for e in self.engines)

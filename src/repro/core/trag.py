@@ -202,6 +202,20 @@ def retrieve_device(state: CFTDeviceState, query_hashes: jax.Array,
                                   query_trees, query_hashes)
     res = res._replace(hit=res.hit & in_range)
     temp = bump_temperature_bank(state.temperature, query_trees, res)
+    return gather_context(state, res, temp, max_locs=max_locs, n=n)
+
+
+def gather_context(state, res: LookupResult, temperature: jax.Array,
+                   max_locs: int = 4, n: int = 3) -> DeviceRetrieval:
+    """CSR location gather + hierarchy windows downstream of a bank lookup.
+
+    Shared tail of :func:`retrieve_device` and the bank-axis sharded path
+    (``repro.core.distributed.sharded_retrieve_device``): ``state`` is any
+    object with replicated ``csr_offsets``/``csr_nodes`` and forest arrays
+    (``CFTDeviceState`` or ``ShardedBankState``), ``res.head`` indexes the
+    CSR rows, and ``temperature`` (whatever layout the lookup maintains) is
+    threaded through untouched.
+    """
     eid = jnp.where(res.hit, res.head, 0)                    # (B,) CSR rows
     lo = state.csr_offsets[eid]                              # (B,)
     count = state.csr_offsets[eid + 1] - lo
@@ -218,11 +232,11 @@ def retrieve_device(state: CFTDeviceState, query_hashes: jax.Array,
     down = gather_descendants(state.child_offsets, state.child_index,
                               state.entity_id, jnp.maximum(flat, 0), n)
     down = jnp.where(flat[:, None] == NULL, NULL, down)
-    B = query_hashes.shape[0]
+    B = res.hit.shape[0]
     return DeviceRetrieval(
         hit=res.hit, locations=nodes,
         up=up.reshape(B, max_locs, n), down=down.reshape(B, max_locs, n),
-        temperature=temp)
+        temperature=temperature)
 
 
 def build_retriever(trees, num_buckets: int = 1024, **kw) -> CFTRAG:

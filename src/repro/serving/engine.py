@@ -19,7 +19,9 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import (CFTDeviceState, DeviceRetrieval, MaintenanceEngine,
-                    MaintenanceReport, retrieve_device)
+                    MaintenanceReport, ShardedBankState,
+                    ShardedMaintenanceEngine, retrieve_device,
+                    sharded_retrieve_device, stage_sharded_bank)
 from ..data.tokenizer import HashTokenizer
 from ..models import lm
 
@@ -48,15 +50,29 @@ class ServeEngine:
         self._maint_forest = None
 
     # ---------------------------------------------------------- retrieval
-    def attach_retrieval(self, state: CFTDeviceState, lookup_fn=None,
+    def attach_retrieval(self, state, lookup_fn=None,
                          max_locs: int = 4, n: int = 3,
                          batch_pad: int = 64) -> None:
         """Fuse CFT retrieval into the engine: one jitted step over the
-        bank-axis device state, shape-stable via fixed padding geometry."""
+        bank-axis device state, shape-stable via fixed padding geometry.
+
+        ``state`` is either a replicated :class:`CFTDeviceState` or a
+        bank-axis :class:`ShardedBankState` — the sharded step routes each
+        query batch to the owning shards with an all-to-all instead of
+        probing a replicated bank; everything downstream (padding policy,
+        temperature threading, maintenance harvest) is identical.
+        """
         self._ret_state = state
         self._ret_pad = batch_pad
-        self._ret_step = jax.jit(functools.partial(
-            retrieve_device, max_locs=max_locs, n=n, lookup_fn=lookup_fn))
+        if isinstance(state, ShardedBankState):
+            # already jitted; mesh/axis ride in the state's static aux
+            self._ret_step = functools.partial(
+                sharded_retrieve_device, max_locs=max_locs, n=n,
+                lookup_fn=lookup_fn)
+        else:
+            self._ret_step = jax.jit(functools.partial(
+                retrieve_device, max_locs=max_locs, n=n,
+                lookup_fn=lookup_fn))
 
     def retrieve(self, tree_ids: Sequence[int],
                  hashes: Sequence[int]) -> DeviceRetrieval:
@@ -88,9 +104,10 @@ class ServeEngine:
                                temperature=out.temperature)
 
     # -------------------------------------------------------- maintenance
-    def attach_maintenance(self, maint: MaintenanceEngine, forest) -> None:
-        """Attach a host-side maintenance engine over the bank backing the
-        attached retrieval state.  ``retrieve`` then harvests temperature
+    def attach_maintenance(self, maint, forest) -> None:
+        """Attach a host-side maintenance engine (``MaintenanceEngine`` or
+        ``ShardedMaintenanceEngine``) over the bank backing the attached
+        retrieval state.  ``retrieve`` then harvests temperature
         after every query batch, and :meth:`maintain` (called between
         batches, or by ``serve`` automatically) applies queued
         insert/delete deltas, compacts, resorts, and restages the device
@@ -109,8 +126,15 @@ class ServeEngine:
         if self._maint is not None:
             report = self._maint.maintain(self._ret_state)
             if report.changed and self._ret_state is not None:
-                self._ret_state = CFTDeviceState.from_bank(
-                    self._maint.bank, self._maint_forest)
+                if isinstance(self._maint, ShardedMaintenanceEngine):
+                    # shard-local restage: repack from the per-shard banks
+                    # (only the mutated shards' blocks have new content)
+                    self._ret_state = stage_sharded_bank(
+                        self._maint.sbank, self._maint_forest,
+                        self._ret_state.mesh, self._ret_state.axis)
+                else:
+                    self._ret_state = CFTDeviceState.from_bank(
+                        self._maint.bank, self._maint_forest)
             return report
         if self._ret_state is not None:
             self._ret_state = self._ret_state.sort_idle()

@@ -18,8 +18,10 @@ from typing import Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (CFTRAG, CFTDeviceState, MaintenanceEngine, build_bank,
-                    build_forest, build_index, retrieve_device)
+from ..core import (CFTRAG, CFTDeviceState, MaintenanceEngine,
+                    ShardedBankState, ShardedMaintenanceEngine, build_bank,
+                    build_forest, build_index, retrieve_device,
+                    sharded_retrieve_device, stage_sharded_bank)
 from ..core import hashing
 from ..data.datasets import SyntheticCorpus
 from ..data.ner import (add_to_gazetteer, build_gazetteer,
@@ -46,7 +48,8 @@ class RAGPipeline:
     def __init__(self, corpus: SyntheticCorpus, engine: Optional[ServeEngine],
                  tokenizer: Optional[HashTokenizer] = None,
                  num_buckets: int = 1024, n_hierarchy: int = 3,
-                 use_device_lookup: bool = False, use_bank: bool = False):
+                 use_device_lookup: bool = False, use_bank: bool = False,
+                 mesh=None, mesh_axis: str = "model"):
         self.corpus = corpus
         self.forest = build_forest(corpus.trees)
         self.index = build_index(self.forest, num_buckets=num_buckets)
@@ -57,17 +60,27 @@ class RAGPipeline:
             engine.cfg.vocab if engine else 64000)
         self.use_device_lookup = use_device_lookup or use_bank
         self.use_bank = use_bank
+        self._mesh, self._mesh_axis = mesh, mesh_axis
         self.bank = build_bank(self.forest) if use_bank else None
-        self.maintenance = MaintenanceEngine(self.bank) if use_bank else None
-        if use_bank:
+        if use_bank and mesh is not None:
+            # bank-axis sharded deployment: tree ranges partitioned over
+            # the mesh axis, shard-local maintenance, all-to-all routing
+            self.bank = self.bank.shard(int(mesh.shape[mesh_axis]))
+            self.maintenance = ShardedMaintenanceEngine(self.bank)
+            self._dev_state = stage_sharded_bank(self.bank, self.forest,
+                                                 mesh, mesh_axis)
+        elif use_bank:
+            self.maintenance = MaintenanceEngine(self.bank)
             # NB: the pipeline owns its device state, so it runs its own
             # idle-time hook (maintain() below) rather than attaching the
             # engine's — two restage owners over one bank would let host
             # and device slot layouts diverge.
             self._dev_state = CFTDeviceState.from_bank(self.bank, self.forest)
         elif use_device_lookup:
+            self.maintenance = None
             self._dev_state = CFTDeviceState.from_index(self.index)
         else:
+            self.maintenance = None
             self._dev_state = None
 
     # ---------------------------------------------------------- retrieval
@@ -94,8 +107,17 @@ class RAGPipeline:
                 hashes = jnp.tile(hashes, t)
             else:
                 trees = jnp.zeros((b,), jnp.int32)
-            out = retrieve_device(self._dev_state, hashes, trees,
-                                  lookup_fn=cuckoo_lookup_bank_auto)
+            if isinstance(self._dev_state, ShardedBankState):
+                # kernel probe while NB is uniform; once shard-local
+                # expansions diverge bucket counts the probe falls back to
+                # the jnp path, which reads per-shard NB from the routing
+                # tables
+                out = sharded_retrieve_device(
+                    self._dev_state, hashes, trees,
+                    lookup_fn=cuckoo_lookup_bank_auto)
+            else:
+                out = retrieve_device(self._dev_state, hashes, trees,
+                                      lookup_fn=cuckoo_lookup_bank_auto)
             self._dev_state = self._dev_state.with_temperature(
                 out.temperature)
             if self.maintenance is not None:
@@ -141,8 +163,12 @@ class RAGPipeline:
             return None
         report = self.maintenance.maintain(self._dev_state)
         if report.changed:
-            self._dev_state = CFTDeviceState.from_bank(self.bank,
-                                                       self.forest)
+            if isinstance(self._dev_state, ShardedBankState):
+                self._dev_state = stage_sharded_bank(
+                    self.bank, self.forest, self._mesh, self._mesh_axis)
+            else:
+                self._dev_state = CFTDeviceState.from_bank(self.bank,
+                                                           self.forest)
         return report
 
     def _render_device(self, ents: Sequence[str], up_arr: np.ndarray,

@@ -1,0 +1,230 @@
+"""Host-side bank-axis sharding: partition planning, FilterBank.shard
+slicing, merged/packed layouts, and shard-routed maintenance — all pure
+numpy, no device mesh needed (the shard_map path is covered by
+tests/test_distributed.py subprocesses)."""
+import numpy as np
+import pytest
+
+from repro.core import (MaintenanceEngine, ShardedMaintenanceEngine,
+                        build_bank, build_forest, plan_partition)
+from repro.core import hashing
+from repro.core.cuckoo import NULL
+
+
+def _bank(num_trees=12, entities_per_tree=10):
+    forest = build_forest(
+        [[(f"r{t}", f"e{t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+    return forest, build_bank(forest)
+
+
+# ------------------------------------------------------------- partition
+
+def test_plan_partition_contiguous_balanced():
+    w = np.asarray([5, 5, 5, 5, 1, 1, 1, 1], float)
+    starts = plan_partition(w, 4)
+    assert starts[0] == 0 and starts[-1] == w.size
+    assert (np.diff(starts) >= 1).all()
+    # balanced by weight: no shard exceeds the ideal share by more than
+    # one tree's worth
+    shares = [w[starts[d]:starts[d + 1]].sum() for d in range(4)]
+    assert max(shares) <= w.sum() / 4 + w.max()
+
+
+def test_plan_partition_equal_weights_split_evenly():
+    starts = plan_partition(np.ones(16), 8)
+    assert np.diff(starts).tolist() == [2] * 8
+
+
+def test_plan_partition_zero_weights_and_errors():
+    assert plan_partition(np.zeros(6), 3)[-1] == 6
+    with pytest.raises(ValueError):
+        plan_partition(np.ones(3), 4)      # fewer trees than shards
+    with pytest.raises(ValueError):
+        plan_partition(np.ones(3), 0)
+
+
+# ----------------------------------------------------------------- shard
+
+def test_shard_slices_answer_identically():
+    forest, bank = _bank()
+    sbank = bank.shard(4)
+    assert sbank.num_trees == bank.num_trees
+    assert (sbank.num_items == bank.num_items).all()
+    for t in range(bank.num_trees):
+        for i in range(10):
+            name = f"e{t}_{i}"
+            assert sbank.locate(t, name) == bank.locate(t, name)
+            h = int(hashing.entity_hash(name))
+            assert sbank.contains(t, h) == bank.contains(t, h)
+    assert not sbank.contains(0, int(hashing.entity_hash("missing")))
+
+
+def test_shard_merged_tables_match_original():
+    _, bank = _bank()
+    sbank = bank.shard(3)
+    mf, mt, mh = sbank.merged_tables()
+    # fingerprint/temperature slot layout is sliced, never rebuilt
+    np.testing.assert_array_equal(mf, bank.fingerprints)
+    np.testing.assert_array_equal(mt, bank.temperature)
+    # heads are renumbered (merged rows) but walk to identical node lists
+    occ = mf != hashing.EMPTY_FP
+    assert (mh[occ] >= 0).all()
+    for t, b, s in zip(*np.nonzero(occ)):
+        assert sbank.walk_row(int(mh[t, b, s])) == \
+            bank.walk_row(int(bank.heads[t, b, s]))
+    assert (mh[~occ] == NULL).all()
+
+
+def test_shard_row_base_and_walk_row():
+    _, bank = _bank()
+    sbank = bank.shard(4)
+    base = sbank.shard_row_base()
+    assert int(base[-1]) == bank.num_rows
+    hit, row, _ = sbank.lookup(5, int(hashing.entity_hash("e5_3")))
+    assert hit
+    d, _ = sbank.owner(5)
+    assert base[d] <= row < base[d + 1]
+    assert sorted(sbank.walk_row(row)) == sorted(bank.locate(5, "e5_3"))
+
+
+def test_shard_bad_partitions_rejected():
+    _, bank = _bank(num_trees=6)
+    with pytest.raises(ValueError):
+        bank.shard(tree_starts=[0, 2, 4])          # does not cover T
+    with pytest.raises(ValueError):
+        bank.shard(tree_starts=[0, 3, 3, 6])       # empty shard
+    with pytest.raises(ValueError):
+        bank.shard()                               # neither arg
+
+
+def test_packed_tables_geometry_and_padding():
+    _, bank = _bank(num_trees=10)                  # ragged over 4 shards
+    sbank = bank.shard(4)
+    tp = sbank.trees_per_shard
+    fps, temp, heads = sbank.packed_tables()
+    assert fps.shape == (4 * tp, sbank.max_buckets, sbank.slots)
+    for d, b in enumerate(sbank.banks):
+        blk = fps[d * tp:(d + 1) * tp]
+        np.testing.assert_array_equal(blk[:b.num_trees, :b.num_buckets],
+                                      b.fingerprints)
+        # padding trees/buckets hold only empty fingerprints
+        assert (blk[b.num_trees:] == hashing.EMPTY_FP).all()
+        assert (heads[d * tp + b.num_trees:(d + 1) * tp] == NULL).all()
+
+
+# ----------------------------------------------------------- maintenance
+
+def test_sharded_maintenance_routes_to_owner_only():
+    _, bank = _bank()
+    sbank = bank.shard(4)
+    eng = ShardedMaintenanceEngine(sbank)
+    target = 7
+    owner, _ = sbank.owner(target)
+    snaps = [b.fingerprints.tobytes() for b in sbank.banks]
+
+    nodes = sorted(sbank.locate(target, f"e{target}_0"))
+    eng.insert(target, "fresh entity", nodes)
+    assert sbank.locate(target, "fresh entity") == nodes
+    assert eng.delete(target, f"e{target}_0")
+    assert sbank.locate(target, f"e{target}_0") == []
+    for d, b in enumerate(sbank.banks):
+        changed = b.fingerprints.tobytes() != snaps[d]
+        assert changed == (d == owner)
+    st = eng.stats
+    assert st["inserted"] == 1 and st["deleted"] == 1
+
+    with pytest.raises(ValueError):
+        eng.queue_insert(sbank.num_trees, "x", [])  # out of range
+
+
+def test_sharded_expand_tree_owner_only():
+    _, bank = _bank()
+    sbank = bank.shard(4)
+    eng = ShardedMaintenanceEngine(sbank)
+    hot = 2
+    owner, _ = sbank.owner(hot)
+    nb0 = [b.num_buckets for b in sbank.banks]
+    assert eng.expand_tree(hot, force=True)
+    for d, b in enumerate(sbank.banks):
+        assert b.num_buckets == nb0[d] * (2 if d == owner else 1)
+    # answers survive the owner-local restage
+    for i in range(10):
+        assert sbank.locate(hot, f"e{hot}_{i}") == bank.locate(
+            hot, f"e{hot}_{i}")
+    # below-threshold request without force is a no-op
+    assert not eng.expand_tree(hot)
+
+
+def test_absorb_temperature_per_shard_baselines():
+    _, bank = _bank(num_trees=10)                  # padded packed layout
+    sbank = bank.shard(4)
+    eng = ShardedMaintenanceEngine(sbank)
+    fps, temp, heads = sbank.packed_tables()
+    # bump two slots on different shards + poison every padding slot: the
+    # harvest must count only owner-block deltas
+    tp = sbank.trees_per_shard
+    occ = fps != hashing.EMPTY_FP
+    t0, b0, s0 = map(int, next(zip(*np.nonzero(occ))))
+    temp[t0, b0, s0] += 3
+    hi = np.nonzero(occ)
+    t1, b1, s1 = (int(hi[0][-1]), int(hi[1][-1]), int(hi[2][-1]))
+    temp[t1, b1, s1] += 2
+    in_block = np.zeros(fps.shape, bool)
+    for d, b in enumerate(sbank.banks):
+        in_block[d * tp:d * tp + b.num_trees, :b.num_buckets] = True
+    temp[~in_block] += 100                         # must be ignored
+    assert eng.absorb(temp) == 5
+    assert sum(int(b.temperature.sum()) for b in sbank.banks) == 5
+    # second absorb of the identical state: zero new bumps
+    assert eng.absorb(temp) == 0
+    with pytest.raises(ValueError):
+        eng.absorb(np.zeros((1, 2, 3), np.int32))  # stale layout
+
+
+def test_shard_drops_tombstoned_rows():
+    """A maintained bank's dead CSR rows must not cross into the shards:
+    the per-shard engines rebuild liveness from slots, so a dangling row
+    would resurrect as a phantom hash-0 entry on the next restage."""
+    _, bank = _bank()
+    glob = MaintenanceEngine(bank)
+    assert glob.delete(3, "e3_0")              # tombstones the CSR row
+    dead_rows = glob.num_dead_rows
+    assert dead_rows == 1
+    sbank = bank.shard(4)
+    assert sbank.num_rows == bank.num_rows - dead_rows
+    eng = ShardedMaintenanceEngine(sbank)
+    items_before = int(sbank.num_items.sum())
+    assert eng.expand_tree(3, force=True)      # owner-local restage
+    assert not sbank.contains(3, 0)            # no phantom hash-0 entry
+    assert sbank.locate(3, "e3_0") == []
+    assert int(sbank.num_items.sum()) == items_before
+    # the surviving entities all still answer
+    for i in range(1, 10):
+        assert sorted(sbank.locate(3, f"e3_{i}")) == \
+            sorted(bank.locate(3, f"e3_{i}"))
+
+
+def test_sharded_maintenance_matches_global_engine():
+    """The same op sequence through a global MaintenanceEngine and a
+    sharded one ends in identically answering banks."""
+    forest, bank_a = _bank()
+    _, bank_b = _bank()
+    glob = MaintenanceEngine(bank_a)
+    shrd = ShardedMaintenanceEngine(bank_b.shard(3))
+    ops = [("del", 1, "e1_0"), ("del", 8, "e8_5"),
+           ("ins", 1, "alpha"), ("ins", 11, "beta"), ("del", 1, "alpha")]
+    for kind, t, name in ops:
+        if kind == "ins":
+            nodes = sorted(bank_a.locate(t, f"e{t}_1"))
+            glob.queue_insert(t, name, nodes)
+            shrd.queue_insert(t, name, nodes)
+        else:
+            glob.queue_delete(t, name)
+            shrd.queue_delete(t, name)
+    glob.maintain()
+    shrd.maintain()
+    for t in range(bank_a.num_trees):
+        for name in [f"e{t}_{i}" for i in range(10)] + ["alpha", "beta"]:
+            assert sorted(glob.bank.locate(t, name)) == \
+                sorted(shrd.sbank.locate(t, name)), (t, name)
