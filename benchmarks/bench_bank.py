@@ -11,30 +11,20 @@ Two claims, measured over T in {1, 8, 64, 256}:
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (build_bank, build_forest, lookup_batch,
-                        lookup_batch_bank, lookup_batch_trees)
+from repro.core import (build_bank, lookup_batch, lookup_batch_bank,
+                        lookup_batch_trees)
 from repro.core import hashing
 
-
-def _forest(num_trees: int, entities_per_tree: int):
-    return build_forest(
-        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
-         for t in range(num_trees)])
+from .common import best_time, synthetic_forest
 
 
 def _best(fn, repeats: int) -> float:
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+    return best_time(fn, repeats, warmup=False)
 
 
 def run(tree_counts: Sequence[int] = (1, 8, 64, 256),
@@ -42,7 +32,7 @@ def run(tree_counts: Sequence[int] = (1, 8, 64, 256),
         repeats: int = 3) -> List[Dict]:
     rows = []
     for T in tree_counts:
-        forest = _forest(T, entities_per_tree)
+        forest = synthetic_forest(T, entities_per_tree)
         t_bulk = _best(lambda: build_bank(forest, bulk=True), repeats)
         t_seq = _best(lambda: build_bank(forest, bulk=False),
                       1 if T >= 64 else repeats)
@@ -53,8 +43,10 @@ def run(tree_counts: Sequence[int] = (1, 8, 64, 256),
                  for t in range(T)]
         hb = jnp.stack([jnp.asarray(hashing.hash_entities(ns))
                         for ns in names])                       # (T, B)
-        fps = jnp.asarray(bank.fingerprints)
-        heads = jnp.asarray(bank.heads)
+        # uniform synthetic forest -> the dense (T, NB, S) view exists
+        df, _, dh = bank.dense_tables()
+        fps = jnp.asarray(df)
+        heads = jnp.asarray(dh)
 
         # exactness: vmapped bank lookup vs per-tree reference
         got = lookup_batch_trees(fps, heads, hb)

@@ -21,22 +21,15 @@ trajectory is recorded per commit.
 """
 from __future__ import annotations
 
-import json
-import sys
 import time
 from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.core import (MaintenanceEngine, build_bank, build_bank_from_rows,
-                        build_forest)
+from repro.core import MaintenanceEngine, build_bank, build_bank_from_rows
 from repro.core import hashing
 
-
-def _forest(num_trees: int, entities_per_tree: int):
-    return build_forest(
-        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
-         for t in range(num_trees)])
+from .common import parse_bench_args, synthetic_forest, write_json
 
 
 def _op_sequence(bank, hashes, ops: int, batch: int, seed: int):
@@ -102,7 +95,7 @@ def run(tree_counts: Sequence[int] = (16, 64),
         queries_per_batch: int = 64, seed: int = 0) -> List[Dict]:
     rows = []
     for T in tree_counts:
-        forest = _forest(T, entities_per_tree)
+        forest = synthetic_forest(T, entities_per_tree)
         hashes = hashing.hash_entities(forest.entity_names)
         bank = build_bank(forest)
         batches, live = _op_sequence(bank, hashes, ops, batch, seed)
@@ -181,8 +174,8 @@ def run(tree_counts: Sequence[int] = (16, 64),
             expansions=eng.stats["expansions"],
             compactions=eng.stats["compactions"],
             equal=equal,
-            final_buckets_inc=inc.num_buckets,
-            final_buckets_rebuild=rebuilt.num_buckets,
+            final_buckets_inc=inc.total_buckets,
+            final_buckets_rebuild=rebuilt.total_buckets,
         ))
     return rows
 
@@ -201,19 +194,10 @@ def print_rows(rows: List[Dict]) -> None:
 
 
 def main() -> None:
-    args = sys.argv[1:]
-    json_path = None
-    if "--json" in args:
-        i = args.index("--json")
-        json_path = args[i + 1]
-        args = args[:i] + args[i + 2:]
-    unknown = [a for a in args if a not in ("--fast", "--smoke")]
-    if unknown:
-        sys.exit(f"usage: python -m benchmarks.bench_churn "
-                 f"[--fast|--smoke] [--json PATH] "
-                 f"(unknown: {' '.join(unknown)})")
-    smoke = "--smoke" in args
-    fast = smoke or "--fast" in args
+    import sys
+    flags, json_path = parse_bench_args(sys.argv[1:], "bench_churn")
+    smoke = "--smoke" in flags
+    fast = smoke or "--fast" in flags
     kw = (dict(tree_counts=(16,), entities_per_tree=48, ops=256, batch=32)
           if smoke else
           dict(tree_counts=(16, 64), entities_per_tree=48, ops=1024)
@@ -235,9 +219,7 @@ def main() -> None:
             entities_per_tree=8 if smoke else 48,
             batch_per_tree=16 if smoke else 64,
             repeats=1 if smoke else 3)
-        with open(json_path, "w") as f:
-            json.dump({"churn": rows, "bank": bank_rows}, f, indent=2)
-        print(f"wrote {json_path}")
+        write_json(json_path, {"churn": rows, "bank": bank_rows})
 
 
 if __name__ == "__main__":

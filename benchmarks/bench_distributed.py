@@ -1,7 +1,7 @@
 """Replicated vs bank-axis-sharded lookup — the scaling claim, measured.
 
-The replicated path keeps the whole ``(T, NB, S)`` bank on one device and
-probes it with ``lookup_batch_bank``; the sharded path partitions tree
+The replicated path keeps the whole ragged bucket arena on one device and
+probes it with ``lookup_batch_ragged``; the sharded path partitions tree
 ranges over the mesh (``FilterBank.shard`` + ``stage_sharded_bank``) and
 routes each query batch through the ``shard_map`` all-to-all
 (``sharded_lookup_bank``).  For every T the sweep records wall-clock for
@@ -21,22 +21,15 @@ trajectory is recorded per commit.
 """
 from __future__ import annotations
 
-import json
-import sys
-import time
 from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.core import build_bank, build_forest, lookup_batch_bank
+from repro.core import build_bank, lookup_batch_ragged
 from repro.core import hashing
-from repro.core.distributed import stage_sharded_bank, sharded_lookup_bank
 
-
-def _forest(num_trees: int, entities_per_tree: int):
-    return build_forest(
-        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
-         for t in range(num_trees)])
+from .common import (best_time, parse_bench_args, synthetic_forest,
+                     write_json)
 
 
 def _queries(forest, bank, batch: int, seed: int):
@@ -55,60 +48,54 @@ def _queries(forest, bank, batch: int, seed: int):
     return qt, qh
 
 
-def _time(fn, iters: int) -> float:
-    fn()                                                 # compile + warm
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
-
-
 def run(tree_counts: Sequence[int] = (16, 64, 256),
         entities_per_tree: int = 24, batch: int = 1024, iters: int = 5,
         seed: int = 0) -> List[Dict]:
     import jax
     import jax.numpy as jnp
+    from repro.core.distributed import (stage_sharded_bank,
+                                        sharded_lookup_bank)
 
     d = jax.device_count()
     mesh = jax.make_mesh((d,), ("model",))
     rows = []
     for t in tree_counts:
-        forest = _forest(t, entities_per_tree)
+        forest = synthetic_forest(t, entities_per_tree)
         bank = build_bank(forest)
         sbank = bank.shard(d)
         state = stage_sharded_bank(sbank, forest, mesh, "model")
         qt, qh = _queries(forest, bank, batch, seed)
         qt_j, qh_j = jnp.asarray(qt), jnp.asarray(qh)
 
-        mf, _, mh = sbank.merged_tables()
+        mf, mt, mh = sbank.merged_tables()
+        moff, mnb = sbank.merged_layout()
         fps_r, heads_r = jnp.asarray(mf), jnp.asarray(mh)
-        rep_fn = jax.jit(lookup_batch_bank)
+        off_r = jnp.asarray(moff.astype(np.int32))
+        nb_r = jnp.asarray(mnb)
+        rep_fn = jax.jit(lookup_batch_ragged)
 
         # ---- equivalence gate before timing
-        ref = rep_fn(fps_r, heads_r, qt_j, qh_j)
+        ref = rep_fn(fps_r, heads_r, off_r, nb_r, qt_j, qh_j)
         got = sharded_lookup_bank(state, qt_j, qh_j)
         for f in ("hit", "head", "bucket", "slot"):
             np.testing.assert_array_equal(
                 np.asarray(getattr(ref, f)), np.asarray(getattr(got, f)),
                 err_msg=f"sharded {f} diverged at T={t}")
 
-        t_rep = _time(
+        t_rep = best_time(
             lambda: jax.block_until_ready(
-                rep_fn(fps_r, heads_r, qt_j, qh_j)), iters)
-        t_shd = _time(
+                rep_fn(fps_r, heads_r, off_r, nb_r, qt_j, qh_j)), iters)
+        t_shd = best_time(
             lambda: jax.block_until_ready(
                 sharded_lookup_bank(state, qt_j, qh_j)), iters)
 
-        table_bytes = lambda a: int(a.nbytes)            # noqa: E731
-        rep_dev = sum(table_bytes(x) for x in (fps_r, heads_r)) \
-            + int(jnp.asarray(mf).nbytes)                # temperature too
+        rep_dev = sum(int(jnp.asarray(x).nbytes) for x in (mf, mt, mh))
         shard_dev = sum(
             next(iter(x.addressable_shards)).data.nbytes
             for x in (state.fingerprints, state.temperature, state.heads))
         rows.append(dict(
-            trees=t, num_buckets=bank.num_buckets, slots=bank.slots,
+            trees=t, arena_rows=bank.total_buckets,
+            max_tree_rows=int(bank.tree_nb.max()), slots=bank.slots,
             devices=d, batch=batch,
             replicated_ms=t_rep * 1e3, sharded_ms=t_shd * 1e3,
             speedup=t_rep / t_shd if t_shd else 0.0,
@@ -134,33 +121,28 @@ def print_rows(rows: List[Dict]) -> None:
 
 
 def main() -> None:
-    args = sys.argv[1:]
-    json_path = None
-    if "--json" in args:
-        i = args.index("--json")
-        json_path = args[i + 1]
-        args = args[:i] + args[i + 2:]
-    unknown = [a for a in args if a != "--smoke"]
-    if unknown:
-        sys.exit(f"usage: python -m benchmarks.bench_distributed "
-                 f"[--smoke] [--json PATH] (unknown: {' '.join(unknown)})")
+    import sys
+    flags, json_path = parse_bench_args(sys.argv[1:], "bench_distributed",
+                                        flags=("--smoke",))
     kw = (dict(tree_counts=(16, 64), entities_per_tree=12, batch=256,
                iters=2)
-          if "--smoke" in args else
+          if "--smoke" in flags else
           dict(tree_counts=(16, 64, 256), entities_per_tree=24,
                batch=1024, iters=5))
     import jax
     rows = run(**kw)
     print_rows(rows)
     for r in rows:
-        # the capacity claim: per-device table bytes shrink ~1/D
-        # (padding can round one tree range up)
-        assert r["bytes_fraction"] <= 1.0 / r["devices"] + 0.05, r
-    if json_path:
-        with open(json_path, "w") as f:
-            json.dump({"device_count": jax.device_count(),
-                       "rows": rows}, f, indent=2)
-        print(f"wrote {json_path}")
+        # the capacity claim: per-device table bytes shrink ~1/D.  The
+        # packed ragged layout pads every shard to the largest shard's
+        # arena, and a contiguous tree partition can misplace at most
+        # about one tree's worth of rows — so the honest bound is
+        # 1/D + (largest tree segment)/A, tight as T grows.
+        bound = (1.0 / r["devices"]
+                 + r["max_tree_rows"] / r["arena_rows"] + 0.02)
+        assert r["bytes_fraction"] <= bound, (r, bound)
+    write_json(json_path, {"device_count": jax.device_count(),
+                           "rows": rows})
 
 
 if __name__ == "__main__":

@@ -8,7 +8,6 @@ place to read both what serving a bank of T trees costs and what keeping it
 fresh costs."""
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Sequence
 
 import jax
@@ -17,6 +16,8 @@ from repro.configs import get_arch
 from repro.data import HashTokenizer, hospital_corpus
 from repro.models import init_params
 from repro.serving import RAGPipeline, ServeEngine
+
+from .common import timed_call
 
 
 def run(num_trees: int = 200, queries: int = 8, max_new: int = 8):
@@ -29,12 +30,9 @@ def run(num_trees: int = 200, queries: int = 8, max_new: int = 8):
     rag.answer(corpus.queries[0], max_new_tokens=max_new)   # warm compile
     rows = []
     for q in corpus.queries[:queries]:
-        t0 = time.perf_counter()
-        ans = rag.retrieve(q)
-        t_ret = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        rag.answer(q, max_new_tokens=max_new)
-        t_total = time.perf_counter() - t0
+        ans, t_ret = timed_call(lambda: rag.retrieve(q))
+        _, t_total = timed_call(
+            lambda: rag.answer(q, max_new_tokens=max_new))
         rows.append({"retrieval_ms": t_ret * 1e3,
                      "generation_ms": (t_total - t_ret) * 1e3,
                      "entities": len(ans.entities)})
@@ -63,13 +61,12 @@ def run_bank_sweep(tree_counts: Sequence[int] = (8, 32, 128),
         rag.answer(corpus.queries[0], max_new_tokens=max_new)  # warm compile
         t_ret = t_gen = 0.0
         for q in corpus.queries[:queries]:
-            t0 = time.perf_counter()
-            rag.retrieve(q)
-            r = time.perf_counter() - t0          # this query's retrieval
-            t0 = time.perf_counter()
-            rag.answer(q, max_new_tokens=max_new)  # re-runs retrieve inside
+            _, r = timed_call(lambda: rag.retrieve(q))
+            # answer() re-runs retrieve inside; subtract this query's cost
+            _, t = timed_call(
+                lambda: rag.answer(q, max_new_tokens=max_new))
             t_ret += r
-            t_gen += max(time.perf_counter() - t0 - r, 0.0)
+            t_gen += max(t - r, 0.0)
         churn = bench_churn.run(tree_counts=(T,), entities_per_tree=24,
                                 ops=churn_ops, batch=32)[0]
         ret_ms = t_ret / queries * 1e3

@@ -1,14 +1,77 @@
-"""Shared benchmark machinery: corpus builders, timed retrieval rounds."""
+"""Shared benchmark machinery: corpus builders, timed retrieval rounds,
+and the timing / CLI / JSON-report helpers every bench module used to
+copy-paste (``best_time`` / ``parse_bench_args`` / ``write_json``)."""
 from __future__ import annotations
 
+import json
+import sys
 import time
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.core import (BloomTRAG, BloomTRAG2, CFTRAG, NaiveTRAG,
                         build_forest, build_index)
 from repro.data import hospital_corpus
 
 ALGOS = ("naive", "bf", "bf2", "cf")
+
+
+def synthetic_forest(num_trees: int, entities_per_tree: int):
+    """Flat one-root-per-tree forest — the shared bank-bench corpus."""
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def best_time(fn: Callable[[], object], iters: int,
+              warmup: bool = True) -> float:
+    """Best-of-N wall clock; one untimed call first to absorb compiles."""
+    if warmup:
+        fn()
+    best = float("inf")
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def timed_call(fn: Callable[[], object]):
+    """Run ``fn`` once; returns (result, seconds) — the per-query timing
+    shape the serving benches repeat."""
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def parse_bench_args(argv: Sequence[str], prog: str,
+                     flags: Sequence[str] = ("--fast", "--smoke")
+                     ) -> Tuple[set, Optional[str]]:
+    """The ``[--fast|--smoke] [--json PATH]`` CLI every bench repeats.
+
+    Returns (set of present flags, json path or None); exits with a usage
+    message on anything unrecognized (a typo'd flag must not silently run
+    the full suite)."""
+    args = list(argv)
+    json_path = None
+    if "--json" in args:
+        i = args.index("--json")
+        json_path = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    unknown = [a for a in args if a not in flags]
+    if unknown:
+        sys.exit(f"usage: python -m benchmarks.{prog} "
+                 f"[{'|'.join(flags)}] [--json PATH] "
+                 f"(unknown: {' '.join(unknown)})")
+    return set(args), json_path
+
+
+def write_json(path: Optional[str], payload: Dict) -> None:
+    """Write a bench report artifact (no-op when no path was requested)."""
+    if not path:
+        return
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path}")
 
 
 def build_retrievers(num_trees: int, seed: int = 7, depth: int = 3,

@@ -9,7 +9,8 @@ from __future__ import annotations
 import sys
 
 from . import (bench_bank, bench_churn, bench_fig5, bench_filter,
-               bench_kernels, bench_serving, bench_table1, bench_table2)
+               bench_kernels, bench_ragged, bench_serving, bench_table1,
+               bench_table2)
 
 
 def main() -> None:
@@ -108,6 +109,19 @@ def main() -> None:
                     r["inc_us_per_op"], r["speedup"]))
         csv.append((f"churn/trees{r['trees']}/rebuild",
                     r["rebuild_us_per_op"], 1.0))
+
+    rows = bench_ragged.run(
+        tree_counts=(64,) if fast else (64, 256),
+        entities_per_tree=4 if smoke else 8,
+        iters=1 if smoke else 3)
+    print("\n== Ragged arena: bytes + tree-local expand vs dense ==")
+    bench_ragged.print_rows(rows)
+    for r in rows:
+        assert r["equal"], "ragged lookup diverged from reference"
+        csv.append((f"ragged/trees{r['trees']}/bytes_fraction",
+                    0.0, r["bytes_fraction"]))
+        csv.append((f"ragged/trees{r['trees']}/expand",
+                    r["expand_tree_ms"] * 1e3, r["expand_speedup"]))
 
     print("\n== Kernel microbenchmarks (vs jnp oracle) ==")
     for name, work, derived in bench_kernels.run():

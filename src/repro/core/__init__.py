@@ -7,16 +7,19 @@ from .context import (EntityContext, context_from_arena, context_from_csr,
                       generate_context, render_context)
 from .cuckoo import (CFTIndex, CuckooFilter, CuckooTables, build_index,
                      bulk_place)
-from .lookup import (LookupResult, bump_temperature, bump_temperature_bank,
-                     lookup_batch, lookup_batch_bank, lookup_batch_trees,
-                     sort_buckets, sort_buckets_bank)
+from .lookup import (LookupResult, bump_temperature, bump_temperature_arena,
+                     bump_temperature_bank, lookup_arena, lookup_batch,
+                     lookup_batch_bank, lookup_batch_ragged,
+                     lookup_batch_trees, sort_buckets, sort_buckets_arena,
+                     sort_buckets_bank)
 from .maintenance import (BankDelta, MaintenanceEngine, MaintenanceReport,
                           ShardedMaintenanceEngine)
 from .trag import (CFTRAG, CFTDeviceState, DeviceRetrieval, build_retriever,
                    gather_context, retrieve_device)
-from .distributed import (ShardedBankState, shard_bank, sharded_lookup,
-                          sharded_lookup_bank, sharded_retrieve_device,
-                          shard_filter_tables, stage_sharded_bank)
+from .distributed import (ShardedBankState, routing_capacity, shard_bank,
+                          sharded_lookup, sharded_lookup_bank,
+                          sharded_retrieve_device, shard_filter_tables,
+                          stage_sharded_bank)
 from .tree import EntityForest, build_forest
 
 __all__ = [
@@ -24,7 +27,7 @@ __all__ = [
     "plan_partition",
     "BankDelta", "MaintenanceEngine", "MaintenanceReport",
     "ShardedMaintenanceEngine",
-    "ShardedBankState", "shard_bank", "sharded_lookup",
+    "ShardedBankState", "routing_capacity", "shard_bank", "sharded_lookup",
     "sharded_lookup_bank", "sharded_retrieve_device",
     "shard_filter_tables", "stage_sharded_bank", "gather_context",
     "BloomTRAG", "BloomTRAG2", "NaiveTRAG",
@@ -32,9 +35,10 @@ __all__ = [
     "EntityContext", "context_from_arena", "context_from_csr",
     "generate_context", "render_context",
     "CFTIndex", "CuckooFilter", "CuckooTables", "build_index", "bulk_place",
-    "LookupResult", "bump_temperature", "bump_temperature_bank",
-    "lookup_batch", "lookup_batch_bank", "lookup_batch_trees",
-    "sort_buckets", "sort_buckets_bank",
+    "LookupResult", "bump_temperature", "bump_temperature_arena",
+    "bump_temperature_bank", "lookup_arena", "lookup_batch",
+    "lookup_batch_bank", "lookup_batch_ragged", "lookup_batch_trees",
+    "sort_buckets", "sort_buckets_arena", "sort_buckets_bank",
     "CFTRAG", "CFTDeviceState", "DeviceRetrieval", "build_retriever",
     "retrieve_device",
     "EntityForest", "build_forest",

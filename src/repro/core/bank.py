@@ -1,19 +1,26 @@
-"""Sharded filter bank — T per-tree cuckoo filters as dense device tables.
+"""Ragged filter-bank arena — T per-tree cuckoo filters in one flat table.
 
 The paper's headline claim ("hundreds of times faster than naive Tree-RAG
 when the number of trees is large") needs the many-tree regime: one cuckoo
-filter *per tree*, stacked into dense ``(T, NB, S)`` tables so a whole bank
-ships to the accelerator as three tensors and a query batch routes per-query
-to its tree's filter (``repro.core.lookup.lookup_batch_bank`` /
-``repro.kernels.cuckoo_lookup.cuckoo_lookup_bank``).
+filter *per tree*.  Real entity forests are skewed — one hospital tree can
+hold 16x the entities of its neighbours — so padding every tree to the
+hottest tree's bucket count (the old dense ``(T, NB, S)`` layout) wastes
+device bytes and turns any expansion into a whole-bank restage.  The bank
+therefore stores a **ragged bucket arena**: each tree ``t`` owns an
+independent power-of-two bucket count ``tree_nb[t]``, its buckets live as
+the contiguous arena segment ``[bucket_offsets[t], bucket_offsets[t+1])``
+of one flat ``(total_buckets, S)`` table, and a routed lookup probes rows
+``bucket_offsets[t] + (i & (tree_nb[t] - 1))``.  Device bytes are
+``sum(tree_nb)`` instead of ``T * max(tree_nb)``, and growing one hot tree
+restages only that tree's segment (``repro.core.maintenance``).
 
 Build path: instead of a per-entity Python insert loop, the bank is built in
-one vectorized pass over *all* trees at once.  Buckets are addressed as flat
-rows ``tree * NB + bucket``; hash, fingerprint and both candidate buckets
-are computed for every (tree, entity) item in a single numpy batch, empty
-slots are claimed by grouped rank assignment (``repro.core.cuckoo.
-bulk_place``), and only the tiny two-choice remainder walks the scalar
-eviction chain.  If any kick chain exhausts, the bank doubles NB and
+one vectorized pass over *all* trees at once.  Hash, fingerprint and both
+candidate buckets are computed for every (tree, entity) item in a single
+numpy batch with per-item bucket masks, empty slots are claimed by grouped
+rank assignment (``repro.core.cuckoo.bulk_place``), and only the tiny
+two-choice remainder walks the scalar eviction chain.  If any kick chain
+exhausts, only the failing tree doubles its bucket count and the bank
 rebuilds — the vectorized pass makes that cheap.
 
 Slot payloads are *bank CSR rows*: each (tree, entity) pair that occurs in
@@ -33,20 +40,26 @@ from .cuckoo import (DEFAULT_LOAD_THRESHOLD, DEFAULT_MAX_KICKS,
                      DEFAULT_SLOTS, NULL, bulk_place)
 from .tree import EntityForest
 
-DEFAULT_LOAD_TARGET = 0.85         # size NB so per-tree load stays under this
+DEFAULT_LOAD_TARGET = 0.85         # size nb_t so per-tree load stays under this
+EMPTY_TREE_NB = 1                  # buckets for a tree holding zero entities
 
 
 @dataclasses.dataclass
 class FilterBank:
-    """T stacked per-tree cuckoo filters plus the bank CSR location arena."""
+    """T per-tree cuckoo filters as one ragged arena + the CSR location
+    arena.  ``fingerprints``/``temperature``/``heads``/``entity_ids``/
+    ``stored_hash`` are flat ``(total_buckets, S)``; tree ``t`` owns arena
+    rows ``[bucket_offsets[t], bucket_offsets[t+1])`` with its own
+    power-of-two ``tree_nb[t]``."""
     num_trees: int
-    num_buckets: int               # per tree; power of two
+    tree_nb: np.ndarray            # (T,) int32 — per-tree buckets, powers of 2
+    bucket_offsets: np.ndarray     # (T + 1,) int64 — arena segment starts
     slots: int
-    fingerprints: np.ndarray       # (T, NB, S) uint32 — 0 = empty
-    temperature: np.ndarray        # (T, NB, S) int32
-    heads: np.ndarray              # (T, NB, S) int32 — bank CSR row id
-    entity_ids: np.ndarray         # (T, NB, S) int32 — global entity id
-    stored_hash: np.ndarray        # (T, NB, S) uint32 — host-only (rebuild)
+    fingerprints: np.ndarray       # (A, S) uint32 — 0 = empty
+    temperature: np.ndarray        # (A, S) int32
+    heads: np.ndarray              # (A, S) int32 — bank CSR row id
+    entity_ids: np.ndarray         # (A, S) int32 — global entity id
+    stored_hash: np.ndarray        # (A, S) uint32 — host-only (restage)
     csr_offsets: np.ndarray        # (R + 1,) int32
     csr_nodes: np.ndarray          # (L,) int32 — global node ids per row
     row_tree: np.ndarray           # (R,) int32
@@ -60,18 +73,51 @@ class FilterBank:
         return int(self.row_tree.shape[0])
 
     @property
+    def total_buckets(self) -> int:
+        """Arena rows == sum(tree_nb) — the quantity device bytes scale
+        with (the dense layout paid T * max(tree_nb))."""
+        return int(self.fingerprints.shape[0])
+
+    @property
+    def num_buckets(self) -> int:
+        """Uniform per-tree bucket count.  Only defined while every tree
+        shares one nb (a forced-uniform build, or a balanced forest before
+        any tree-local expansion); a ragged bank raises."""
+        nb = int(self.tree_nb[0])
+        if np.any(self.tree_nb != nb):
+            raise ValueError(
+                f"bank is ragged (tree_nb in [{int(self.tree_nb.min())}, "
+                f"{int(self.tree_nb.max())}]): no uniform num_buckets")
+        return nb
+
+    @property
     def load_factors(self) -> np.ndarray:
-        return self.num_items / float(self.num_buckets * self.slots)
+        return self.num_items / (self.tree_nb.astype(np.float64)
+                                 * self.slots)
+
+    def segment(self, tree: int) -> Tuple[int, int]:
+        """Arena row range [lo, hi) owned by ``tree``."""
+        return (int(self.bucket_offsets[tree]),
+                int(self.bucket_offsets[tree + 1]))
+
+    def arena_base_mask(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-arena-row (segment start, bucket mask) — the rehoming tables
+        ``bulk_place`` uses to keep a victim's kick inside its own tree."""
+        base = np.repeat(self.bucket_offsets[:-1].astype(np.int64),
+                         self.tree_nb)
+        mask = np.repeat((self.tree_nb - 1).astype(np.uint32), self.tree_nb)
+        return base, mask
 
     # ---------------------------------------------------------- host path
     def _find(self, tree: int, h: np.uint32) -> Optional[Tuple[int, int]]:
-        nb = self.num_buckets
+        nb = int(self.tree_nb[tree])
+        lo = int(self.bucket_offsets[tree])
         fp = hashing.fingerprint(np.uint32(h))
         i1 = int(hashing.bucket_i1(np.uint32(h), nb))
         i2 = int(hashing.alt_bucket(np.uint32(i1), fp, nb))
         for i in (i1, i2):
             for s in range(self.slots):
-                if self.fingerprints[tree, i, s] == fp:
+                if self.fingerprints[lo + i, s] == fp:
                     return (i, s)
         return None
 
@@ -82,10 +128,10 @@ class FilterBank:
         if loc is None:
             return False, NULL, NULL
         i, s = loc
+        r = int(self.bucket_offsets[tree]) + i
         if bump:
-            self.temperature[tree, i, s] += 1
-        return (True, int(self.heads[tree, i, s]),
-                int(self.entity_ids[tree, i, s]))
+            self.temperature[r, s] += 1
+        return (True, int(self.heads[r, s]), int(self.entity_ids[r, s]))
 
     def contains(self, tree: int, h: int) -> bool:
         return self._find(tree, np.uint32(h)) is not None
@@ -96,22 +142,21 @@ class FilterBank:
 
         Unlike :meth:`lookup`, matches on the stored 32-bit hash rather
         than the 12-bit fingerprint, so a colliding neighbour can never
-        shadow the queried entity.  Returns flat-row and slot indices,
-        both -1 where the (tree, hash) is not stored.
+        shadow the queried entity.  Returns flat arena-row and slot
+        indices, both -1 where the (tree, hash) is not stored.
         """
         tree_ids = np.asarray(tree_ids, np.int64)
         hq = np.asarray(hs, np.uint32)
-        nb, s = self.num_buckets, self.slots
-        fps = self.fingerprints.reshape(-1, s)
-        hst = self.stored_hash.reshape(-1, s)
+        s = self.slots
+        mask = (self.tree_nb[tree_ids] - 1).astype(np.uint32)
         fp = hashing.fingerprint(hq)
-        i1 = hashing.bucket_i1(hq, nb).astype(np.int64)
-        i2 = hashing.alt_bucket(i1.astype(np.uint32), fp,
-                                nb).astype(np.int64)
-        base = tree_ids * nb
+        i1 = hashing.bucket_i1_masked(hq, mask).astype(np.int64)
+        i2 = hashing.alt_bucket_masked(i1.astype(np.uint32), fp,
+                                       mask).astype(np.int64)
+        base = self.bucket_offsets[tree_ids].astype(np.int64)
         cand = np.stack([base + i1, base + i2], axis=1)        # (k, 2)
-        match = (hst[cand] == hq[:, None, None]) & \
-                (fps[cand] != hashing.EMPTY_FP)                # (k, 2, S)
+        match = (self.stored_hash[cand] == hq[:, None, None]) & \
+                (self.fingerprints[cand] != hashing.EMPTY_FP)  # (k, 2, S)
         flat = match.reshape(match.shape[0], -1)
         found = flat.any(axis=1)
         first = flat.argmax(axis=1)
@@ -133,18 +178,26 @@ class FilterBank:
 
     # -------------------------------------------------------------- device
     def tables(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Device-ready (fingerprints, temperature, heads) copies."""
+        """Device-ready flat-arena (fingerprints, temperature, heads)."""
         return (self.fingerprints.copy(), self.temperature.copy(),
                 self.heads.copy())
+
+    def dense_tables(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Dense ``(T, NB, S)`` views of the arena — the layout the
+        vmapped-over-trees paths consume.  Only defined for a uniform bank
+        (raises on ragged); zero-copy reshape of the contiguous arena."""
+        shape = (self.num_trees, self.num_buckets, self.slots)
+        return (self.fingerprints.reshape(shape),
+                self.temperature.reshape(shape),
+                self.heads.reshape(shape))
 
     def absorb_temperature(self, device_state) -> int:
         """Write device-side temperature back into the host bank.
 
         ``device_state`` is a ``CFTDeviceState`` (or any object with a
-        ``temperature`` attribute) or a bare ``(T, NB, S)`` array.  Returns
-        the number of new bumps absorbed (sum of positive per-slot deltas)
-        — the signal the maintenance sort trigger integrates.  Replaces the
-        hand-rolled ``dataclasses.replace`` temperature write-back.
+        ``temperature`` attribute) or a bare ``(A, S)`` arena array.
+        Returns the number of new bumps absorbed (sum of positive per-slot
+        deltas) — the signal the maintenance sort trigger integrates.
         """
         temp = getattr(device_state, "temperature", device_state)
         temp = np.asarray(temp, dtype=np.int32)
@@ -161,12 +214,12 @@ class FilterBank:
         """Partition the bank into contiguous tree ranges, one self-contained
         sub-bank per shard (mesh device).
 
-        Each sub-bank relabels its trees to ``0..Td-1`` and carves out a
-        local CSR arena holding only its own (tree, entity) rows, so the
-        full :class:`MaintenanceEngine` machinery (insert/delete/expand/
-        compact) runs per shard without touching any other shard's tables
-        — the point of bank-axis sharding.  Slot placement, NB and slot
-        ordering are *sliced*, not rebuilt, so a freshly sharded bank
+        Each sub-bank relabels its trees to ``0..Td-1``, carves out its
+        contiguous arena segment block and a local CSR arena holding only
+        its own (tree, entity) rows, so the full :class:`MaintenanceEngine`
+        machinery (insert/delete/expand/compact) runs per shard without
+        touching any other shard's tables.  Slot placement, per-tree nb and
+        slot ordering are *sliced*, not rebuilt, so a freshly sharded bank
         answers bit-identically to the original.
         """
         if tree_starts is None:
@@ -179,6 +232,7 @@ class FilterBank:
             raise ValueError(f"bad tree partition {starts.tolist()} for "
                              f"T={self.num_trees}")
         off = self.csr_offsets.astype(np.int64)
+        boff = self.bucket_offsets.astype(np.int64)
         # carry only rows a filter slot still references: a maintained bank
         # may hold tombstoned CSR rows, and the per-shard engines rebuild
         # liveness from slots — a dangling row would resurrect on restage
@@ -188,6 +242,7 @@ class FilterBank:
         banks: List[FilterBank] = []
         for d in range(starts.size - 1):
             lo, hi = int(starts[d]), int(starts[d + 1])
+            alo, ahi = int(boff[lo]), int(boff[hi])
             rows = np.flatnonzero((self.row_tree >= lo)
                                   & (self.row_tree < hi)
                                   & live[:self.num_rows])
@@ -199,16 +254,18 @@ class FilterBank:
             total = int(lens.sum())
             idx = (np.arange(total, dtype=np.int64)
                    + np.repeat(off[rows] - loc_off[:-1], lens))
-            fps = self.fingerprints[lo:hi].copy()
+            fps = self.fingerprints[alo:ahi].copy()
             occ = fps != hashing.EMPTY_FP
-            heads = np.where(occ, inv[self.heads[lo:hi]],
+            heads = np.where(occ, inv[self.heads[alo:ahi]],
                              NULL).astype(np.int32)
             banks.append(FilterBank(
-                num_trees=hi - lo, num_buckets=self.num_buckets,
+                num_trees=hi - lo,
+                tree_nb=self.tree_nb[lo:hi].copy(),
+                bucket_offsets=boff[lo:hi + 1] - alo,
                 slots=self.slots, fingerprints=fps,
-                temperature=self.temperature[lo:hi].copy(), heads=heads,
-                entity_ids=self.entity_ids[lo:hi].copy(),
-                stored_hash=self.stored_hash[lo:hi].copy(),
+                temperature=self.temperature[alo:ahi].copy(), heads=heads,
+                entity_ids=self.entity_ids[alo:ahi].copy(),
+                stored_hash=self.stored_hash[alo:ahi].copy(),
                 csr_offsets=loc_off,
                 csr_nodes=(self.csr_nodes[idx].astype(np.int32) if total
                            else np.zeros(0, np.int32)),
@@ -219,20 +276,18 @@ class FilterBank:
         return ShardedBank(tree_starts=starts.astype(np.int32), banks=banks)
 
     def sort_buckets(self) -> None:
-        """Host-side idle-time adaptive sort over the whole bank: reorder
+        """Host-side idle-time adaptive sort over the whole arena: reorder
         every bucket's slots by descending temperature, empties last — the
-        same stable ordering as the device-side ``sort_buckets_bank``, so
+        same stable ordering as the device-side ``sort_buckets_arena``, so
         host tables and a freshly restaged device state agree slot-for-slot.
         """
-        flat = self.fingerprints.reshape(-1, self.slots)
-        key = np.where(flat == hashing.EMPTY_FP, np.int64(-2 ** 62),
-                       self.temperature.reshape(-1, self.slots)
-                       .astype(np.int64))
+        key = np.where(self.fingerprints == hashing.EMPTY_FP,
+                       np.int64(-2 ** 62),
+                       self.temperature.astype(np.int64))
         order = np.argsort(-key, axis=1, kind="stable")
         for arr in (self.fingerprints, self.temperature, self.heads,
                     self.entity_ids, self.stored_hash):
-            a = arr.reshape(-1, self.slots)
-            a[...] = np.take_along_axis(a, order, axis=1)
+            arr[...] = np.take_along_axis(arr, order, axis=1)
 
 
 # --------------------------------------------------------------- sharding
@@ -270,13 +325,14 @@ class ShardedBank:
     device-side bank-axis sharding in ``repro.core.distributed``.
 
     Shard ``d`` owns global trees ``[tree_starts[d], tree_starts[d+1])`` as
-    a self-contained sub-bank (local tree ids, local CSR arena), so every
-    maintenance operation — insert, delete, compact, *expand* — is
-    shard-local: one hot tree outgrowing its buckets restages only its own
-    shard's tree range at 2xNB while every other shard's tables stay
-    byte-identical.  Per-shard ``num_buckets`` may therefore diverge; the
-    packed device layout pads to the max NB and routes candidate-bucket
-    arithmetic through a per-shard NB table.
+    a self-contained sub-bank (local tree ids, local bucket arena, local
+    CSR arena), so every maintenance operation — insert, delete, compact,
+    *expand* — is tree-local inside its owning shard: one hot tree
+    outgrowing its buckets restages only its own arena segment while every
+    other segment (same shard or not) stays byte-identical.  Per-tree
+    ``tree_nb`` may therefore diverge freely; the packed device layout pads
+    each shard's arena to the largest shard's row count and routes
+    candidate-bucket arithmetic through the per-tree offsets/mask tables.
 
     Row numbering: the *merged* numbering (shard-major, ``shard_row_base``
     offsets) is canonical for a sharded bank — it is what the packed device
@@ -299,14 +355,14 @@ class ShardedBank:
         return self.banks[0].slots
 
     @property
-    def trees_per_shard(self) -> int:
-        """Padded per-shard tree count of the packed device layout."""
-        return max(b.num_trees for b in self.banks)
+    def arena_rows_per_shard(self) -> int:
+        """Padded per-shard arena row count of the packed device layout."""
+        return max(b.total_buckets for b in self.banks)
 
     @property
-    def max_buckets(self) -> int:
-        """Padded per-shard bucket count of the packed device layout."""
-        return max(b.num_buckets for b in self.banks)
+    def total_buckets(self) -> int:
+        """True (unpadded) arena rows across all shards."""
+        return sum(b.total_buckets for b in self.banks)
 
     @property
     def num_items(self) -> np.ndarray:
@@ -326,6 +382,18 @@ class ShardedBank:
         """(T,) int32: local tree index within the owning shard."""
         t = np.arange(self.num_trees, dtype=np.int32)
         return t - self.tree_starts[self.tree_shard_map()]
+
+    def tree_arena_offsets(self) -> np.ndarray:
+        """(T,) int64: each tree's segment start *within its owning
+        shard's block* — the generalization of the old per-shard NB table
+        to a per-tree offsets table (the probe adds ``h & (nb_t - 1)``)."""
+        return np.concatenate(
+            [b.bucket_offsets[:-1].astype(np.int64) for b in self.banks])
+
+    def tree_nb_map(self) -> np.ndarray:
+        """(T,) int32: per-tree bucket count in global tree order."""
+        return np.concatenate([b.tree_nb for b in self.banks]).astype(
+            np.int32)
 
     def owner(self, tree: int) -> Tuple[int, int]:
         """Global tree -> (shard, local tree)."""
@@ -370,37 +438,30 @@ class ShardedBank:
     def packed_tables(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Device-ready packed (fingerprints, temperature, heads).
 
-        Shape ``(D * Tpad, NBmax, S)``: shard d's block occupies rows
-        ``[d*Tpad, d*Tpad + Td)``, buckets ``[0, NB_d)``; padding rows and
-        buckets hold empty fingerprints (never match).  Head payloads are
+        Shape ``(D * Apad, S)`` with ``Apad = arena_rows_per_shard``:
+        shard d's arena occupies rows ``[d*Apad, d*Apad + A_d)``; padding
+        rows hold empty fingerprints (never match).  Head payloads are
         merged row ids (``shard_row_base`` offsets applied).
         """
-        d, tp, nb, s = (self.num_shards, self.trees_per_shard,
-                        self.max_buckets, self.slots)
-        fps = np.full((d * tp, nb, s), hashing.EMPTY_FP, np.uint32)
-        temp = np.zeros((d * tp, nb, s), np.int32)
-        heads = np.full((d * tp, nb, s), NULL, np.int32)
+        d, ap, s = self.num_shards, self.arena_rows_per_shard, self.slots
+        fps = np.full((d * ap, s), hashing.EMPTY_FP, np.uint32)
+        temp = np.zeros((d * ap, s), np.int32)
+        heads = np.full((d * ap, s), NULL, np.int32)
         base = self.shard_row_base()
         for k, b in enumerate(self.banks):
-            blk = slice(k * tp, k * tp + b.num_trees)
-            fps[blk, :b.num_buckets] = b.fingerprints
-            temp[blk, :b.num_buckets] = b.temperature
+            blk = slice(k * ap, k * ap + b.total_buckets)
+            fps[blk] = b.fingerprints
+            temp[blk] = b.temperature
             occ = b.fingerprints != hashing.EMPTY_FP
-            heads[blk, :b.num_buckets] = np.where(
-                occ, b.heads + np.int32(base[k]), NULL)
+            heads[blk] = np.where(occ, b.heads + np.int32(base[k]), NULL)
         return fps, temp, heads
 
     def merged_tables(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Replicated-reference ``(T, NB, S)`` tables in global tree order
-        with merged-row head payloads — the tables ``lookup_batch_bank``
-        probes to produce the sharded path's exact results.  Only defined
-        while all shards share one NB (before any shard-local expansion
-        diverges them); heterogeneous banks answer per shard instead.
-        """
-        nbs = {b.num_buckets for b in self.banks}
-        if len(nbs) != 1:
-            raise ValueError(f"heterogeneous per-shard NB {sorted(nbs)}: "
-                             "no dense merged layout exists")
+        """Replicated-reference arena ``(A, S)`` tables in global tree
+        order with merged-row head payloads — the tables
+        ``lookup_batch_ragged`` probes (with :meth:`merged_layout`) to
+        produce the sharded path's exact results.  Well-defined for any
+        per-tree nb (the dense uniform-NB restriction is gone)."""
         base = self.shard_row_base()
         fps = np.concatenate([b.fingerprints for b in self.banks], axis=0)
         temp = np.concatenate([b.temperature for b in self.banks], axis=0)
@@ -409,6 +470,13 @@ class ShardedBank:
                       b.heads + np.int32(base[k]), NULL)
              for k, b in enumerate(self.banks)], axis=0)
         return fps, temp, heads
+
+    def merged_layout(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(bucket_offsets (T+1,), tree_nb (T,)) of the merged arena."""
+        nb = self.tree_nb_map()
+        off = np.zeros(self.num_trees + 1, np.int64)
+        np.cumsum(nb, out=off[1:])
+        return off, nb
 
     def merged_csr(self) -> Tuple[np.ndarray, np.ndarray]:
         """Concatenated CSR arena in merged-row order (device staging)."""
@@ -424,17 +492,17 @@ class ShardedBank:
 
     # --------------------------------------------- temperature feedback
     def temperature_blocks(self, packed) -> List[np.ndarray]:
-        """Slice a packed ``(D*Tpad, NBmax, S)`` device temperature into
-        per-shard owner blocks ``(Td, NB_d, S)`` — padding rows/buckets are
-        excluded, so each slot's bumps are harvested exactly once, against
-        the owning shard's baseline only."""
+        """Slice a packed ``(D*Apad, S)`` device temperature into per-shard
+        owner blocks ``(A_d, S)`` — padding rows are excluded, so each
+        slot's bumps are harvested exactly once, against the owning shard's
+        baseline only."""
         temp = np.asarray(getattr(packed, "temperature", packed), np.int32)
-        d, tp = self.num_shards, self.trees_per_shard
-        want = (d * tp, self.max_buckets, self.slots)
+        d, ap = self.num_shards, self.arena_rows_per_shard
+        want = (d * ap, self.slots)
         if temp.shape != want:
             raise ValueError(f"packed temperature shape {temp.shape} != "
                              f"{want} (stale sharded layout?)")
-        return [temp[k * tp:k * tp + b.num_trees, :b.num_buckets]
+        return [temp[k * ap:k * ap + b.total_buckets]
                 for k, b in enumerate(self.banks)]
 
     def absorb_temperature(self, device_state) -> int:
@@ -486,14 +554,25 @@ def _pick_num_buckets(max_per_tree: int, slots: int,
     return nb
 
 
+def _pick_tree_buckets(per_tree: np.ndarray, slots: int,
+                       load_target: float) -> np.ndarray:
+    """Vectorized per-tree bucket pick: the smallest power of two (>= 4)
+    keeping that tree under ``load_target``; an *empty* tree gets the
+    minimum ``EMPTY_TREE_NB`` instead of inheriting a shared NB — the
+    ragged layout's fix for empty-tree over-allocation."""
+    need = np.maximum(1, np.ceil(per_tree / (slots * load_target)))
+    nb = np.maximum(4, 2 ** np.ceil(np.log2(need))).astype(np.int64)
+    return np.where(per_tree > 0, nb, EMPTY_TREE_NB).astype(np.int64)
+
+
 def _scalar_insert(fps: np.ndarray, temps: np.ndarray, heads: np.ndarray,
                    eids: np.ndarray, hs: np.ndarray, base: int, nb: int,
                    slots: int, h: int, row: int, eid: int, rng,
                    max_kicks: int, temp: int = 0) -> bool:
     """Scalar cuckoo insert into flat bank tables, confined to one tree's
-    bucket range [base, base + nb).  Temperature rides along the kick chain
-    so displaced hot slots keep their heat (matters for live maintenance;
-    a fresh build passes all-zero temps)."""
+    arena segment [base, base + nb).  Temperature rides along the kick
+    chain so displaced hot slots keep their heat (matters for live
+    maintenance; a fresh build passes all-zero temps)."""
     h = np.uint32(h)
     fp = hashing.fingerprint(h)
     i1 = int(hashing.bucket_i1(h, nb))
@@ -526,7 +605,7 @@ def _scalar_insert(fps: np.ndarray, temps: np.ndarray, heads: np.ndarray,
 def build_bank_from_rows(num_trees: int, row_tree: np.ndarray,
                          row_entity: np.ndarray, row_hash: np.ndarray,
                          csr_offsets: np.ndarray, csr_nodes: np.ndarray,
-                         num_buckets: Optional[int] = None,
+                         num_buckets=None,
                          slots: int = DEFAULT_SLOTS, seed: int = 0x5EED,
                          bulk: bool = True,
                          max_kicks: int = DEFAULT_MAX_KICKS,
@@ -536,10 +615,16 @@ def build_bank_from_rows(num_trees: int, row_tree: np.ndarray,
     """Build a bank directly from explicit (tree, entity) rows.
 
     The shared core of :func:`build_bank` (which derives rows from a
-    forest), the maintenance engine's restage path (which re-homes the live
-    rows of a mutated bank at a larger NB, ``row_temp`` carrying their
-    temperatures), and the churn-equivalence tests (from-scratch reference
-    for an incrementally maintained bank).
+    forest), the maintenance engine's restage paths (which re-home the live
+    rows of a mutated bank, ``row_temp`` carrying their temperatures), and
+    the churn-equivalence tests (from-scratch reference for an
+    incrementally maintained bank).
+
+    ``num_buckets``: ``None`` picks per-tree ragged bucket counts
+    (``_pick_tree_buckets``); an int forces that uniform NB on every tree
+    (the dense-equivalent layout — kick-chain failure then doubles every
+    tree, preserving uniformity); an array pins per-tree counts exactly
+    (failure doubles only the failing tree).
     """
     T = max(1, int(num_trees))
     row_tree = np.asarray(row_tree, np.int32)
@@ -550,32 +635,48 @@ def build_bank_from_rows(num_trees: int, row_tree: np.ndarray,
     item_temp = (np.zeros(m, np.int32) if row_temp is None
                  else np.asarray(row_temp, np.int32))
 
-    per_tree = np.bincount(row_tree, minlength=T) if m else np.zeros(T, int)
-    nb = num_buckets or _pick_num_buckets(int(per_tree.max()) if m else 1,
-                                          slots, load_target)
-    assert nb & (nb - 1) == 0, "power-of-two buckets"
+    per_tree = np.bincount(row_tree, minlength=T) if m else \
+        np.zeros(T, np.int64)
+    uniform = num_buckets is not None and np.ndim(num_buckets) == 0
+    if num_buckets is None:
+        tree_nb = _pick_tree_buckets(per_tree, slots, load_target)
+    elif uniform:
+        tree_nb = np.full(T, int(num_buckets), np.int64)
+    else:
+        tree_nb = np.asarray(num_buckets, np.int64).copy()
+    assert (tree_nb & (tree_nb - 1) == 0).all() and (tree_nb > 0).all(), \
+        "power-of-two buckets per tree"
 
     rebuilds = -1
     while True:
         rebuilds += 1
+        offsets = np.zeros(T + 1, np.int64)
+        np.cumsum(tree_nb, out=offsets[1:])
+        a = int(offsets[-1])
         rng = np.random.default_rng(seed)
-        fps = np.full((T * nb, slots), hashing.EMPTY_FP, dtype=np.uint32)
-        temps = np.zeros((T * nb, slots), dtype=np.int32)
-        heads = np.full((T * nb, slots), NULL, dtype=np.int32)
-        eids = np.full((T * nb, slots), NULL, dtype=np.int32)
-        hs = np.zeros((T * nb, slots), dtype=np.uint32)
+        fps = np.full((a, slots), hashing.EMPTY_FP, dtype=np.uint32)
+        temps = np.zeros((a, slots), dtype=np.int32)
+        heads = np.full((a, slots), NULL, dtype=np.int32)
+        eids = np.full((a, slots), NULL, dtype=np.int32)
+        hs = np.zeros((a, slots), dtype=np.uint32)
         stats = {"items": int(m), "bulk_placed": 0, "evicted": 0,
                  "rebuilds": rebuilds}
 
         if bulk and m:
+            item_mask = (tree_nb[row_tree] - 1).astype(np.uint32)
             fp = hashing.fingerprint(item_hash)
-            i1 = hashing.bucket_i1(item_hash, nb)
-            i2 = hashing.alt_bucket(i1, fp, nb)
-            base = row_tree.astype(np.int64) * nb
+            i1 = hashing.bucket_i1_masked(item_hash, item_mask)
+            i2 = hashing.alt_bucket_masked(i1, fp, item_mask)
+            base = offsets[row_tree]
+            arena_base = np.repeat(offsets[:-1], tree_nb)
+            arena_mask = np.repeat((tree_nb - 1).astype(np.uint32),
+                                   tree_nb)
             r_head, r_eid, r_hash, r_temp = bulk_place(
-                fps, temps, heads, eids, hs, fp, base + i1, base + i2,
-                item_row, row_entity, item_hash, nb=nb, rng=rng,
-                new_temps=item_temp)
+                fps, temps, heads, eids, hs, fp,
+                base + i1.astype(np.int64), base + i2.astype(np.int64),
+                item_row, row_entity, item_hash, nb=0, rng=rng,
+                new_temps=item_temp, row_base=arena_base,
+                row_mask=arena_mask)
             stats["bulk_placed"] = int(m - r_head.size)
             stats["evicted"] = int(r_head.size)
         else:
@@ -586,24 +687,33 @@ def build_bank_from_rows(num_trees: int, row_tree: np.ndarray,
         for j in range(r_head.size):
             # a remainder item's tree is recoverable from its row payload
             tree = int(row_tree[int(r_head[j])])
-            if not _scalar_insert(fps, temps, heads, eids, hs, tree * nb,
-                                  nb, slots, int(r_hash[j]),
+            if not _scalar_insert(fps, temps, heads, eids, hs,
+                                  int(offsets[tree]), int(tree_nb[tree]),
+                                  slots, int(r_hash[j]),
                                   int(r_head[j]), int(r_eid[j]), rng,
                                   max_kicks, temp=int(r_temp[j])):
                 ok = False
+                # tree-local doubling: only the failing tree grows (unless
+                # the caller forced a uniform layout)
+                if uniform:
+                    tree_nb = tree_nb * 2
+                else:
+                    tree_nb[tree] *= 2
                 break
-        if ok and (m == 0 or per_tree.max() / (nb * slots)
-                   < DEFAULT_LOAD_THRESHOLD):
-            break
-        nb *= 2                    # kick chain exhausted -> double + rebuild
+        if ok:
+            over = per_tree >= DEFAULT_LOAD_THRESHOLD * tree_nb * slots
+            if m == 0 or not over.any():
+                break
+            if uniform:
+                tree_nb = tree_nb * 2
+            else:
+                tree_nb[over] *= 2
 
-    shape = (T, nb, slots)
     return FilterBank(
-        num_trees=T, num_buckets=nb, slots=slots,
-        fingerprints=fps.reshape(shape),
-        temperature=temps.reshape(shape),
-        heads=heads.reshape(shape), entity_ids=eids.reshape(shape),
-        stored_hash=hs.reshape(shape),
+        num_trees=T, tree_nb=tree_nb.astype(np.int32),
+        bucket_offsets=offsets, slots=slots,
+        fingerprints=fps, temperature=temps,
+        heads=heads, entity_ids=eids, stored_hash=hs,
         csr_offsets=np.asarray(csr_offsets, np.int32),
         csr_nodes=np.asarray(csr_nodes, np.int32),
         row_tree=row_tree, row_entity=row_entity,
@@ -612,7 +722,7 @@ def build_bank_from_rows(num_trees: int, row_tree: np.ndarray,
     )
 
 
-def build_bank(forest: EntityForest, num_buckets: Optional[int] = None,
+def build_bank(forest: EntityForest, num_buckets=None,
                slots: int = DEFAULT_SLOTS, seed: int = 0x5EED,
                bulk: bool = True, max_kicks: int = DEFAULT_MAX_KICKS,
                load_target: float = DEFAULT_LOAD_TARGET) -> FilterBank:
@@ -622,6 +732,8 @@ def build_bank(forest: EntityForest, num_buckets: Optional[int] = None,
     grouped empty-slot placement across all T trees at once, scalar kicks
     only for the remainder.  ``bulk=False`` inserts every item through the
     scalar path — kept as the equivalence/benchmark reference.
+    ``num_buckets=None`` (default) sizes every tree independently (ragged
+    arena); an int forces the uniform dense-equivalent layout.
     """
     row_tree, row_entity, csr_offsets, csr_nodes, entity_hashes = \
         _bank_rows(forest)

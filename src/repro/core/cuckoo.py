@@ -36,14 +36,20 @@ def bulk_place(fingerprints: np.ndarray, temperature: np.ndarray,
                b2: np.ndarray, new_heads: np.ndarray, new_eids: np.ndarray,
                new_hashes: np.ndarray, nb: int, rng,
                max_rounds: int = 48,
-               new_temps: Optional[np.ndarray] = None
+               new_temps: Optional[np.ndarray] = None,
+               row_base: Optional[np.ndarray] = None,
+               row_mask: Optional[np.ndarray] = None
                ) -> Tuple[np.ndarray, ...]:
     """Vectorized cuckoo placement into flat ``(num_rows, S)`` tables.
 
-    Rows may be a single filter's buckets or a whole filter bank flattened
-    to ``tree * NB + bucket`` — the routine only sees row indices, with
-    ``nb`` (per-filter bucket count) used to compute a victim's alternate
-    bucket within its own filter's row range.
+    Rows may be a single filter's buckets, a whole uniform filter bank
+    flattened to ``tree * NB + bucket``, or a ragged bucket arena — the
+    routine only sees row indices.  A victim's alternate bucket is computed
+    within its own filter's row range: for the uniform layouts ``nb``
+    (per-filter bucket count) locates the range as ``(row // nb) * nb``;
+    for a ragged arena the caller passes ``row_base``/``row_mask`` — per
+    arena-row segment start and bucket mask ``nb_t - 1`` — and ``nb`` is
+    ignored for rehoming.
 
     Each round: items grouped by candidate bucket claim that bucket's free
     slots by within-group rank (one fancy-indexed write for all of them);
@@ -113,9 +119,15 @@ def bulk_place(fingerprints: np.ndarray, temperature: np.ndarray,
         heads[lb, s] = pool_head[lead]
         entity_ids[lb, s] = pool_eid[lead]
         stored_hash[lb, s] = pool_hash[lead]
-        base = (lb // nb) * nb
-        v_other = base + hashing.alt_bucket(
-            (lb - base).astype(np.uint32), v[0], nb).astype(np.int64)
+        if row_base is None:
+            base = (lb // nb) * nb
+            v_other = base + hashing.alt_bucket(
+                (lb - base).astype(np.uint32), v[0], nb).astype(np.int64)
+        else:
+            base = row_base[lb]
+            v_other = base + hashing.alt_bucket_masked(
+                (lb - base).astype(np.uint32), v[0],
+                row_mask[lb]).astype(np.int64)
         waiters = order[~is_lead]
         pool_fp = np.concatenate([pool_fp[waiters], v[0]])
         pool_temp = np.concatenate([pool_temp[waiters], v[1]])

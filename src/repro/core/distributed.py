@@ -2,24 +2,29 @@
 
 The paper's many-tree regime ("hundreds of times faster ... when the number
 of trees is large") only scales past one device if the *tree axis* shards:
-a replicated ``(T, NB, S)`` bank caps T at a single device's memory and
-adding devices buys nothing.  Here the bank partitions into contiguous
-tree ranges over the ``model`` mesh axis (``FilterBank.shard`` /
-``plan_partition`` pick ranges balanced by per-tree row counts) and queries
-travel to their data instead of the data being everywhere:
+a replicated bank caps T at a single device's memory and adding devices
+buys nothing.  Here the bank partitions into contiguous tree ranges over
+the ``model`` mesh axis (``FilterBank.shard`` / ``plan_partition`` pick
+ranges balanced by per-tree row counts) and queries travel to their data
+instead of the data being everywhere:
 
 1. each device holds its slice of the query batch; a query's owning shard
    comes from the replicated ``tree_shard`` routing table;
 2. queries bucket by destination and exchange once with
-   ``jax.lax.all_to_all`` inside ``shard_map`` (no full-bank broadcast);
-3. every shard probes only its own ``(Tpad, NB, S)`` block — the same
-   two-candidate-bucket ``match_rows`` semantics as ``lookup_batch_bank``,
-   with per-shard NB so shard-local expansions can diverge bucket counts;
+   ``jax.lax.all_to_all`` inside ``shard_map`` (no full-bank broadcast) —
+   the receive buffer is worst-case sized by default, or shrunk with a
+   ``capacity_factor`` (explicit eager overflow check);
+3. every shard probes only its own **packed ragged arena block**
+   ``(Apad, S)`` — per-tree routing reads each query's arena segment start
+   and bucket mask from the replicated per-tree offsets table (the
+   generalization of the old per-shard NB table), so tree-local
+   expansions diverge per-tree bucket counts freely and the probe is
+   bit-identical everywhere;
 4. results (and nothing else) route back through the inverse all-to-all —
-   there is no max-reduce over T x NB x S replicas anywhere.
+   there is no max-reduce over replicas anywhere.
 
-Temperature bumps land in the owning shard's block during the probe, so
-the paper's feedback loop stays shard-local too; the host harvests with
+Temperature bumps land in the owning shard's arena block during the probe,
+so the paper's feedback loop stays shard-local too; the host harvests with
 ``ShardedBank.absorb_temperature`` (per-shard baselines, never
 double-counted).
 
@@ -43,7 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import shard_map as _shard_map
 from . import hashing
 from .bank import FilterBank, ShardedBank
-from .lookup import LookupResult, match_rows, sort_buckets_bank
+from .lookup import LookupResult, lookup_arena, sort_buckets_arena
 from .tree import EntityForest
 from .trag import CFTDeviceState, DeviceRetrieval, gather_context
 
@@ -59,16 +64,19 @@ def _exchange(buf: jax.Array, axis: str) -> jax.Array:
     return jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
 
 
-def _bucket_queries(dest: jax.Array, num_shards: int,
+def _bucket_queries(dest: jax.Array, num_shards: int, capacity: int,
                     payloads: Tuple[Tuple[jax.Array, object], ...]
                     ) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
     """Pack per-query payloads into fixed ``(D, C)`` destination buckets.
 
-    ``dest``: (Bl,) destination shard per local query.  Capacity C equals
-    Bl (the degenerate case routes every local query to one shard), so no
-    bucket can overflow and shapes stay static.  Returns each query's slot
-    ``rank`` within its bucket — the return address for ``_route_back`` —
-    plus one ``(D, C)`` buffer per (payload, fill) pair.
+    ``dest``: (Bl,) destination shard per local query.  ``capacity`` C
+    defaults to Bl upstream (the degenerate case routes every local query
+    to one shard, so nothing can overflow); a smaller C (capacity_factor)
+    is guarded by an eager host-side overflow check before dispatch —
+    in-kernel the scatter drops out-of-capacity lanes rather than
+    corrupting memory.  Returns each query's slot ``rank`` within its
+    bucket — the return address for ``_route_back`` — plus one ``(D, C)``
+    buffer per (payload, fill) pair.
     """
     bl = dest.shape[0]
     order = jnp.argsort(dest)                       # stable
@@ -78,7 +86,8 @@ def _bucket_queries(dest: jax.Array, num_shards: int,
     within = (jnp.arange(bl) - starts[dest[order]]).astype(jnp.int32)
     rank = jnp.zeros((bl,), jnp.int32).at[order].set(within)
     bufs = tuple(
-        jnp.full((num_shards, bl), fill, x.dtype).at[dest, rank].set(x)
+        jnp.full((num_shards, capacity), fill, x.dtype)
+        .at[dest, rank].set(x, mode="drop")
         for x, fill in payloads)
     return rank, bufs
 
@@ -97,25 +106,28 @@ def _route_back(x: jax.Array, dest: jax.Array, rank: jax.Array,
 class ShardedBankState:
     """Device-side bank-axis sharded retrieval state.
 
-    Filter tables are *packed*: shard d's trees live in block rows
-    ``[d*Tpad, d*Tpad + Td)`` of a ``(D*Tpad, NBmax, S)`` tensor placed
-    ``P(axis, None, None)`` over the mesh, so each device holds exactly one
-    shard's block (1/D of the replicated table bytes, padding aside).
-    Routing tables, the merged CSR location arena and the forest hierarchy
-    arrays are replicated — they are O(T) / O(rows), not O(T*NB*S).
+    Filter tables are *packed ragged arenas*: shard d's bucket arena lives
+    in rows ``[d*Apad, d*Apad + A_d)`` of a ``(D*Apad, S)`` tensor placed
+    ``P(axis, None)`` over the mesh, so each device holds exactly one
+    shard's arena (true bytes ``sum_t nb_t`` per shard, padding to the
+    largest shard aside) — the old dense ``(D*Tpad, NBmax, S)``
+    pad-to-max-NB blocks are gone.  Routing tables, the merged CSR
+    location arena and the forest hierarchy arrays are replicated — they
+    are O(T) / O(rows), not O(arena).
 
-    ``shard_nb`` carries each shard's true bucket count: after a
-    shard-local expansion the packed layout pads to the max NB, and the
-    probe derives candidate buckets from the owning shard's own NB.
-    ``mesh``/``axis``/``uniform_nb`` are static (pytree aux), so the state
+    ``tree_offset``/``tree_nb`` carry each tree's segment start within its
+    owning shard's block and its own power-of-two bucket count: the probe
+    computes ``tree_offset[t] + (i & (tree_nb[t] - 1))``, so shard- and
+    tree-local expansions diverge bucket counts without any uniform-NB
+    special case.  ``mesh``/``axis`` are static (pytree aux), so the state
     passes through ``jax.jit`` like any other pytree.
     """
-    fingerprints: jax.Array   # (D*Tpad, NBmax, S) uint32, P(axis, None, None)
-    temperature: jax.Array    # (D*Tpad, NBmax, S) int32
-    heads: jax.Array          # (D*Tpad, NBmax, S) int32 — merged CSR row ids
+    fingerprints: jax.Array   # (D*Apad, S) uint32, P(axis, None)
+    temperature: jax.Array    # (D*Apad, S) int32
+    heads: jax.Array          # (D*Apad, S) int32 — merged CSR row ids
     tree_shard: jax.Array     # (T,) int32 — owning shard, replicated
-    tree_local: jax.Array     # (T,) int32 — index within the owner's block
-    shard_nb: jax.Array       # (D,) int32 — per-shard true bucket count
+    tree_offset: jax.Array    # (T,) int32 — segment start in owner's block
+    tree_nb: jax.Array        # (T,) int32 — per-tree bucket count
     csr_offsets: jax.Array    # (R + 1,) int32 — merged arena, replicated
     csr_nodes: jax.Array      # (L,) int32
     parent: jax.Array         # (N,) int32 — forest arrays, replicated
@@ -124,15 +136,14 @@ class ShardedBankState:
     child_index: jax.Array    # (C,) int32
     mesh: Mesh                # static
     axis: str                 # static
-    uniform_nb: Optional[int]  # static; set iff every shard shares one NB
 
     _LEAVES = ("fingerprints", "temperature", "heads", "tree_shard",
-               "tree_local", "shard_nb", "csr_offsets", "csr_nodes",
+               "tree_offset", "tree_nb", "csr_offsets", "csr_nodes",
                "parent", "entity_id", "child_offsets", "child_index")
 
     def tree_flatten(self):
         return (tuple(getattr(self, f) for f in self._LEAVES),
-                (self.mesh, self.axis, self.uniform_nb))
+                (self.mesh, self.axis))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -144,7 +155,7 @@ class ShardedBankState:
         return int(self.mesh.shape[self.axis])
 
     @property
-    def trees_per_shard(self) -> int:
+    def arena_rows_per_shard(self) -> int:
         return int(self.fingerprints.shape[0]) // self.num_shards
 
     @property
@@ -162,13 +173,13 @@ class ShardedBankState:
         return dataclasses.replace(self, temperature=temperature)
 
     def sort_idle(self) -> "ShardedBankState":
-        """Device-only idle-time bucket sort over every shard's block at
+        """Device-only idle-time bucket sort over every shard's arena at
         once (pure per-bucket slot reorder — sharding is preserved).  As
         with ``CFTDeviceState.sort_idle``: only for states with no host
         bank mirror; a host ``ShardedMaintenanceEngine`` sorts + restages
         instead so layouts never diverge."""
-        f, t, h = sort_buckets_bank(self.fingerprints, self.temperature,
-                                    self.heads)
+        f, t, h = sort_buckets_arena(self.fingerprints, self.temperature,
+                                     self.heads)
         return dataclasses.replace(self, fingerprints=f, temperature=t,
                                    heads=h)
 
@@ -176,7 +187,7 @@ class ShardedBankState:
 def stage_sharded_bank(sbank: ShardedBank, forest: EntityForest,
                        mesh: Mesh, axis: str = "model") -> ShardedBankState:
     """Place a host :class:`ShardedBank` on the mesh as a
-    :class:`ShardedBankState` (packed blocks sharded over ``axis``,
+    :class:`ShardedBankState` (packed arena blocks sharded over ``axis``,
     routing/CSR/forest replicated)."""
     d = int(mesh.shape[axis])
     if d != sbank.num_shards:
@@ -184,8 +195,7 @@ def stage_sharded_bank(sbank: ShardedBank, forest: EntityForest,
                          f"axis '{axis}' has {d} devices")
     fps, temp, heads = sbank.packed_tables()
     csr_off, csr_nodes = sbank.merged_csr()
-    nbs = np.asarray([b.num_buckets for b in sbank.banks], np.int32)
-    blk = NamedSharding(mesh, P(axis, None, None))
+    blk = NamedSharding(mesh, P(axis, None))
     rep = NamedSharding(mesh, P())
     put_b = lambda a: jax.device_put(jnp.asarray(a), blk)     # noqa: E731
     put_r = lambda a: jax.device_put(jnp.asarray(a), rep)     # noqa: E731
@@ -194,16 +204,15 @@ def stage_sharded_bank(sbank: ShardedBank, forest: EntityForest,
         fingerprints=put_b(fps), temperature=put_b(temp),
         heads=put_b(heads),
         tree_shard=put_r(sbank.tree_shard_map()),
-        tree_local=put_r(sbank.tree_local_map()),
-        shard_nb=put_r(nbs),
+        tree_offset=put_r(sbank.tree_arena_offsets().astype(np.int32)),
+        tree_nb=put_r(sbank.tree_nb_map()),
         csr_offsets=put_r(csr_off),
         csr_nodes=put_r(csr_nodes if csr_nodes.size
                         else np.zeros(1, np.int32)),
         parent=put_r(fa["parent"]), entity_id=put_r(fa["entity_id"]),
         child_offsets=put_r(fa["child_offsets"]),
         child_index=put_r(fa["child_index"]),
-        mesh=mesh, axis=axis,
-        uniform_nb=int(nbs[0]) if np.all(nbs == nbs[0]) else None)
+        mesh=mesh, axis=axis)
 
 
 def shard_bank(bank: FilterBank, forest: EntityForest, mesh: Mesh,
@@ -219,37 +228,41 @@ def shard_bank(bank: FilterBank, forest: EntityForest, mesh: Mesh,
 # ------------------------------------------------------- bank-axis lookup
 
 def _bank_local_fn(axis: str, num_shards: int, num_trees: int, slots: int,
-                   bump: bool, lookup_fn, uniform_nb: Optional[int]):
-    """Build the shard-local body: route -> probe own block -> route back."""
+                   bump: bool, lookup_fn, capacity: int):
+    """Build the shard-local body: route -> probe own arena -> route back.
 
-    def local(fps_b, temp_b, heads_b, shard_nb, tree_shard, tree_local,
+    ``lookup_fn(fps, heads, row_offsets, masks, h)`` is the arena-probe
+    contract (pure-jnp :func:`repro.core.lookup.lookup_arena` by default,
+    or the Pallas ``cuckoo_lookup_arena_auto``): queries arrive on their
+    owning shard already carrying their segment start and bucket mask, so
+    heterogeneous per-tree bucket counts need no special casing.
+    """
+    probe = lookup_arena if lookup_fn is None else lookup_fn
+
+    def local(fps_b, temp_b, heads_b, tree_shard, tree_off, tree_nb,
               tid, h):
         # ---- destination + local coordinates (replicated routing tables)
         tq = jnp.clip(tid, 0, num_trees - 1)
         valid = (tid >= 0) & (tid < num_trees)
         dest = jnp.where(valid, tree_shard[tq], 0).astype(jnp.int32)
-        lt = jnp.where(valid, tree_local[tq], 0).astype(jnp.int32)
-        rank, (bh, bt, bv) = _bucket_queries(
-            dest, num_shards, ((h.astype(jnp.uint32), jnp.uint32(0)),
-                               (lt, jnp.int32(0)), (valid, False)))
+        aoff = jnp.where(valid, tree_off[tq], 0).astype(jnp.int32)
+        msk = jnp.where(valid, (tree_nb[tq] - 1).astype(jnp.uint32),
+                        jnp.uint32(0))
+        rank, (bh, bo, bm, bv) = _bucket_queries(
+            dest, num_shards, capacity,
+            ((h.astype(jnp.uint32), jnp.uint32(0)),
+             (aoff, jnp.int32(0)), (msk, jnp.uint32(0)), (valid, False)))
         # ---- one exchange: every query lands on its owning shard
         qh = _exchange(bh, axis).reshape(-1)
-        qt = _exchange(bt, axis).reshape(-1)
+        qo = _exchange(bo, axis).reshape(-1)
+        qm = _exchange(bm, axis).reshape(-1)
         qv = _exchange(bv, axis).reshape(-1)
-        # ---- shard-local probe of the owned (Tpad, NBmax, S) block
-        if lookup_fn is not None and uniform_nb is not None:
-            res = lookup_fn(fps_b, heads_b, qt, qh)
-        else:
-            nb = shard_nb[jax.lax.axis_index(axis)]
-            fp = hashing.fingerprint(qh, jnp)
-            i1 = hashing.bucket_i1(qh, nb, jnp)
-            i2 = hashing.alt_bucket(i1, fp, nb, jnp)
-            res = match_rows(fp, i1, i2, fps_b[qt, i1], fps_b[qt, i2],
-                             heads_b[qt, i1], heads_b[qt, i2], slots)
+        # ---- shard-local probe of the owned (Apad, S) arena block
+        res = probe(fps_b, heads_b, qo, qm, qh)
         hit = res.hit & qv
         head = jnp.where(hit, res.head, jnp.int32(NULL))
         if bump:   # owner-local: each tree's temperature has exactly 1 home
-            temp_b = temp_b.at[qt, res.bucket, res.slot].add(
+            temp_b = temp_b.at[qo + res.bucket, res.slot].add(
                 hit.astype(temp_b.dtype))
         # ---- inverse exchange: results home to their source shard
         back = functools.partial(_route_back, dest=dest, rank=rank,
@@ -262,18 +275,21 @@ def _bank_local_fn(axis: str, num_shards: int, num_trees: int, slots: int,
 
 
 def _lookup_core(state: ShardedBankState, tree_ids: jax.Array,
-                 h: jax.Array, bump: bool, lookup_fn
+                 h: jax.Array, bump: bool, lookup_fn,
+                 capacity: Optional[int]
                  ) -> Tuple[LookupResult, jax.Array]:
     mesh, axis = state.mesh, state.axis
     d = state.num_shards
     b = h.shape[0]
     pad = (-b) % d
+    bl = (b + pad) // d
+    cap = bl if capacity is None else min(capacity, bl)
     tid = jnp.pad(tree_ids.astype(jnp.int32), (0, pad),
                   constant_values=NULL)            # pad queries always miss
     hp = jnp.pad(h.astype(jnp.uint32), (0, pad))
     local = _bank_local_fn(axis, d, state.num_trees, state.slots, bump,
-                           lookup_fn, state.uniform_nb)
-    spec_b = P(axis, None, None)
+                           lookup_fn, cap)
+    spec_b = P(axis, None)
     fn = _shard_map(
         local, mesh=mesh,
         in_specs=(spec_b, spec_b, spec_b, P(), P(), P(), P(axis), P(axis)),
@@ -283,51 +299,115 @@ def _lookup_core(state: ShardedBankState, tree_ids: jax.Array,
         # kernel probe path, so switch it off just there
         check_rep=lookup_fn is None)
     res, temp = fn(state.fingerprints, state.temperature, state.heads,
-                   state.shard_nb, state.tree_shard, state.tree_local,
+                   state.tree_shard, state.tree_offset, state.tree_nb,
                    tid, hp)
     return LookupResult(hit=res.hit[:b], head=res.head[:b],
                         bucket=res.bucket[:b], slot=res.slot[:b]), temp
 
 
-@functools.partial(jax.jit, static_argnames=("lookup_fn",))
-def sharded_lookup_bank(state: ShardedBankState, tree_ids: jax.Array,
-                        h: jax.Array, lookup_fn=None) -> LookupResult:
-    """All-to-all routed bank lookup; bit-identical to
-    ``lookup_batch_bank`` over the merged replicated tables.
+def routing_capacity(state: ShardedBankState, tree_ids,
+                     capacity_factor: Optional[float]) -> Optional[int]:
+    """Static per-(source, dest) receive capacity for the routed
+    all-to-all, with an **explicit eager overflow check**.
 
-    ``lookup_fn(fps, heads, tree_ids, h)`` swaps in a different shard-local
-    probe (e.g. the tiled Pallas bank kernel
-    ``repro.kernels.cuckoo_lookup.cuckoo_lookup_bank_auto``); it is used
-    only while every shard shares one NB — after per-shard expansions
-    diverge bucket counts, the probe falls back to the pure-jnp path, which
-    reads each shard's NB from the routing tables.  Pure: temperature is
-    not bumped (use :func:`sharded_retrieve_device` for serving).
+    ``None`` keeps the worst-case buffer (every local query to one shard:
+    C = Bl, can never overflow).  A factor ``f`` shrinks the buffer to
+    ``ceil(f * Bl)`` — cutting exchange bytes ~D-fold for balanced loads
+    at f ~ 1/D — and this helper verifies against the *actual* routing of
+    this batch that no (source shard, dest shard) pair exceeds it, raising
+    before any device dispatch instead of silently dropping queries.
     """
+    if capacity_factor is None:
+        return None
+    d = state.num_shards
+    tid = np.asarray(tree_ids, np.int64).ravel()
+    b = tid.shape[0]
+    bl = -(-b // d)
+    cap = max(1, int(np.ceil(bl * float(capacity_factor))))
+    t = int(state.tree_shard.shape[0])
+    shard_of = np.asarray(state.tree_shard)
+    valid = (tid >= 0) & (tid < t)
+    dest = np.where(valid, shard_of[np.clip(tid, 0, t - 1)], 0)
+    dest_p = np.zeros(bl * d, np.int64)       # pad queries route to shard 0
+    dest_p[:b] = dest
+    worst = max(int(np.bincount(dest_p[s * bl:(s + 1) * bl],
+                                minlength=d).max())
+                for s in range(d))
+    if worst > cap:
+        raise ValueError(
+            f"all-to-all capacity overflow: one (source, dest) shard pair "
+            f"routes {worst} queries but capacity_factor="
+            f"{capacity_factor} sizes the buffer at {cap}; raise the "
+            f"factor (or pass None for worst-case sizing)")
+    return cap
+
+
+@functools.partial(jax.jit, static_argnames=("lookup_fn", "capacity"))
+def _sharded_lookup_jit(state: ShardedBankState, tree_ids: jax.Array,
+                        h: jax.Array, lookup_fn=None,
+                        capacity: Optional[int] = None) -> LookupResult:
     res, _ = _lookup_core(state, tree_ids, h, bump=False,
-                          lookup_fn=lookup_fn)
+                          lookup_fn=lookup_fn, capacity=capacity)
     return res
 
 
+def sharded_lookup_bank(state: ShardedBankState, tree_ids: jax.Array,
+                        h: jax.Array, lookup_fn=None,
+                        capacity_factor: Optional[float] = None
+                        ) -> LookupResult:
+    """All-to-all routed bank lookup; bit-identical to
+    ``lookup_batch_ragged`` over the merged replicated arena.
+
+    ``lookup_fn(fps, heads, row_offsets, masks, h)`` swaps in a different
+    shard-local arena probe (e.g. the row-tiled Pallas kernel
+    ``repro.kernels.cuckoo_lookup.cuckoo_lookup_arena_auto``) — usable
+    regardless of heterogeneous per-tree bucket counts, since routing
+    arrives per query.  ``capacity_factor`` shrinks the all-to-all
+    receive buffer below the worst case (see :func:`routing_capacity`;
+    eager overflow check).  Pure: temperature is not bumped (use
+    :func:`sharded_retrieve_device` for serving).
+    """
+    capacity = routing_capacity(state, tree_ids, capacity_factor)
+    return _sharded_lookup_jit(state, tree_ids, h, lookup_fn=lookup_fn,
+                               capacity=capacity)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("max_locs", "n", "lookup_fn"))
+                   static_argnames=("max_locs", "n", "lookup_fn",
+                                    "capacity"))
+def _sharded_retrieve_jit(state: ShardedBankState,
+                          query_hashes: jax.Array,
+                          query_trees: jax.Array,
+                          max_locs: int = 4, n: int = 3,
+                          lookup_fn=None,
+                          capacity: Optional[int] = None
+                          ) -> DeviceRetrieval:
+    res, temp = _lookup_core(state, query_trees, query_hashes, bump=True,
+                             lookup_fn=lookup_fn, capacity=capacity)
+    return gather_context(state, res, temp, max_locs=max_locs, n=n)
+
+
 def sharded_retrieve_device(state: ShardedBankState,
                             query_hashes: jax.Array,
                             query_trees: Optional[jax.Array] = None,
                             max_locs: int = 4, n: int = 3,
-                            lookup_fn=None) -> DeviceRetrieval:
+                            lookup_fn=None,
+                            capacity_factor: Optional[float] = None
+                            ) -> DeviceRetrieval:
     """Bank-axis sharded analogue of ``repro.core.retrieve_device``.
 
     The lookup routes through the all-to-all; temperature bumps land in
-    the owning shard's packed block during the probe (so the returned
+    the owning shard's packed arena during the probe (so the returned
     ``temperature`` keeps the sharded layout — thread it forward with
     ``state.with_temperature``); the CSR location gather and hierarchy
     windows run on the replicated arrays exactly as the replicated path.
     """
     if query_trees is None:
         query_trees = jnp.zeros(query_hashes.shape, jnp.int32)
-    res, temp = _lookup_core(state, query_trees, query_hashes, bump=True,
-                             lookup_fn=lookup_fn)
-    return gather_context(state, res, temp, max_locs=max_locs, n=n)
+    capacity = routing_capacity(state, query_trees, capacity_factor)
+    return _sharded_retrieve_jit(state, query_hashes, query_trees,
+                                 max_locs=max_locs, n=n,
+                                 lookup_fn=lookup_fn, capacity=capacity)
 
 
 # ------------------------------------------- legacy single-filter wrappers
@@ -348,7 +428,8 @@ def _filter_local_fn(axis: str, num_shards: int, nb_global: int,
         lb = cand % nb_local
         fp2 = jnp.tile(fp, 2)
         rank, (bb, bf) = _bucket_queries(
-            dest, num_shards, ((lb, jnp.int32(0)), (fp2, jnp.uint32(0))))
+            dest, num_shards, 2 * bl,
+            ((lb, jnp.int32(0)), (fp2, jnp.uint32(0))))
         qb = _exchange(bb, axis).reshape(-1)
         qf = _exchange(bf, axis).reshape(-1)
         rows = fps_s[qb]                           # (D*C, S)

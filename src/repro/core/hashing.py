@@ -93,6 +93,32 @@ def candidate_buckets(h, num_buckets: int, xp=np):
     return fp, i1, i2
 
 
+# --- masked (per-element bucket count) variants ------------------------------
+#
+# The ragged bucket arena gives every tree its own power-of-two bucket count,
+# so batched hash arithmetic carries a *vector* of bucket masks (nb_t - 1)
+# instead of one scalar NB.  Bit-identical to the scalar forms when every
+# element's mask equals ``num_buckets - 1``.
+
+def bucket_i1_masked(h, mask, xp=np):
+    """Primary bucket index with a per-element mask ``nb - 1`` (uint32)."""
+    return (_mix(h, xp) & mask.astype(xp.uint32)).astype(xp.uint32)
+
+
+def alt_bucket_masked(i, fp, mask, xp=np):
+    """Per-element-mask form of :func:`alt_bucket` (same involution)."""
+    return ((i.astype(xp.uint32) ^ _mix(fp.astype(xp.uint32), xp))
+            & mask.astype(xp.uint32)).astype(xp.uint32)
+
+
+def candidate_buckets_masked(h, mask, xp=np):
+    """(fp, i1, i2) with a per-element bucket mask ``nb - 1``."""
+    fp = fingerprint(h, xp)
+    i1 = bucket_i1_masked(h, mask, xp)
+    i2 = alt_bucket_masked(i1, fp, mask, xp)
+    return fp, i1, i2
+
+
 # --- Bloom-filter hashing (baselines) ---------------------------------------
 
 def bloom_bit_positions(h, m_bits: int, k: int, xp=np):

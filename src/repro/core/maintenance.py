@@ -8,24 +8,26 @@ rebuild.  ``MaintenanceEngine`` mutates the live bank in place instead:
 
 * **insert** — queued ``(tree, entity, nodes)`` rows append to the bank CSR
   arena and batch-place through ``bulk_place`` confined to each tree's
-  bucket range, with the scalar kick chain as eviction fallback;
+  arena segment, with the scalar kick chain as eviction fallback;
 * **delete** — exact stored-hash slot removal (the host keeps the original
   32-bit hash per slot, so maintenance never deletes a fingerprint-colliding
   neighbour) with CSR row tombstoning; tombstones are reclaimed by a
   threshold-triggered **compaction** that rebuilds the CSR arena and remaps
   the slot payloads;
-* **expand** — when one tree outgrows the shared per-tree bucket count the
-  whole bank restages at double NB (*restage policy*: all trees share one
-  NB so the ``(T, NB, S)`` device layout and the Pallas kernels stay
-  unchanged; a per-tree ragged layout is the documented alternative and a
-  ROADMAP follow-on).  Restage preserves slot temperatures.
+* **expand** — when one tree outgrows its bucket count, **only that tree's
+  arena segment restages** at double ``nb_t`` (``_restage_tree``): the
+  ragged layout gives every tree an independent power-of-two bucket count,
+  so the segment splice shifts ``bucket_offsets`` after the hot tree and
+  leaves every other segment byte-identical — no bank-wide (or, sharded,
+  shard-wide) doubling, and no CSR renumbering.  Restage preserves slot
+  temperatures.
 
 Closing the paper's temperature feedback loop: the engine *harvests* device
 temperature after each query batch (``absorb`` →
 ``FilterBank.absorb_temperature``), integrates the bump count, and a trigger
 policy (``sort_threshold`` new bumps) schedules the idle-time adaptive sort
-— host-side here, ``sort_buckets_bank`` on device — so hot entities migrate
-to slot 0 and resolve on the first probe.
+— host-side here, ``sort_buckets_arena`` on device — so hot entities
+migrate to slot 0 and resolve on the first probe.
 
 ``maintain()`` is the serving engine's idle-time hook: absorb → apply
 pending delta → compact if worthwhile → sort if hot enough, returning a
@@ -94,6 +96,10 @@ class MaintenanceReport:
                     or self.expansions or self.compacted or self.sorted)
 
 
+_TABLES = ("fingerprints", "temperature", "heads", "entity_ids",
+           "stored_hash")
+
+
 class MaintenanceEngine:
     """Incremental insert/delete/expand + temperature-driven sort policy
     over a live :class:`FilterBank`.
@@ -102,8 +108,11 @@ class MaintenanceEngine:
     CSR rows still referenced by a filter slot, ``row_hash`` keeps each
     row's original entity hash (recovered from the built slots) so a
     restage or compaction can re-home every live row without the forest.
-    Compaction and expansion renumber CSR rows — previously returned row
-    ids are invalidated, node lists (``walk_row``) are preserved exactly.
+    Compaction renumbers CSR rows — previously returned row ids are
+    invalidated, node lists (``walk_row``) are preserved exactly.
+    Tree-local expansion (``expand_tree`` / automatic overflow handling)
+    never renumbers rows: it splices a doubled segment into the arena and
+    leaves every other tree's slots byte-identical.
     """
 
     def __init__(self, bank: FilterBank, seed: int = 0x5EED,
@@ -129,20 +138,14 @@ class MaintenanceEngine:
         r = bank.num_rows
         self.row_alive = np.ones(r, dtype=bool)
         self.row_hash = np.zeros(r, dtype=np.uint32)
-        fps, _, heads, _, hs = self._flat()
-        occ = fps != hashing.EMPTY_FP
-        self.row_hash[heads[occ]] = hs[occ]
+        occ = bank.fingerprints != hashing.EMPTY_FP
+        self.row_hash[bank.heads[occ]] = bank.stored_hash[occ]
 
     # ------------------------------------------------------------ plumbing
-    def _flat(self):
-        """Flat (T*NB, S) in-place views of the bank tables."""
+    def _tables(self):
+        """The five (A, S) arena tables, in splice order."""
         b = self.bank
-        n = b.num_trees * b.num_buckets
-        return (b.fingerprints.reshape(n, b.slots),
-                b.temperature.reshape(n, b.slots),
-                b.heads.reshape(n, b.slots),
-                b.entity_ids.reshape(n, b.slots),
-                b.stored_hash.reshape(n, b.slots))
+        return tuple(getattr(b, n) for n in _TABLES)
 
     @property
     def num_dead_rows(self) -> int:
@@ -196,7 +199,7 @@ class MaintenanceEngine:
         found = rows >= 0
         if not found.any():
             return 0
-        fps, temps, heads, eids, hs = self._flat()
+        fps, temps, heads, eids, hs = self._tables()
         r, s = rows[found], slots[found]
         rids = heads[r, s].astype(np.int64)
         fps[r, s] = hashing.EMPTY_FP
@@ -246,39 +249,52 @@ class MaintenanceEngine:
         rows, slots = self._find_slots(trees, hs_q)
         replaced = self._clear_slots(rows, slots, trees)
 
-        # pre-expand so every tree stays under the load threshold
+        # per-tree pre-expansion so every receiving tree stays under the
+        # load threshold — tree-local: only the overflowing trees restage
         adds = np.bincount(trees, minlength=b.num_trees)
-        cap = b.num_buckets * b.slots
-        while ((b.num_items + adds).max() >= self.load_threshold * cap):
-            self._rebuild(b.num_buckets * 2)
+        over = (b.num_items + adds) >= \
+            self.load_threshold * b.tree_nb.astype(np.int64) * b.slots
+        for t in np.flatnonzero(over):
+            nb = int(b.tree_nb[t])
+            target = int(b.num_items[t]) + int(adds[t])
+            while target >= self.load_threshold * nb * b.slots:
+                nb *= 2
+            self._restage_tree(int(t), nb)
             self.stats["expansions"] += 1
-            cap = b.num_buckets * b.slots
 
         new_rows = self._append_rows(trees, hs_q, eids, nodes)
-        fps, temps, heads, eids_t, hs_t = self._flat()
         fp = hashing.fingerprint(hs_q)
-        i1 = hashing.bucket_i1(hs_q, b.num_buckets)
-        i2 = hashing.alt_bucket(i1, fp, b.num_buckets)
-        base = trees.astype(np.int64) * b.num_buckets
+        mask = (b.tree_nb[trees] - 1).astype(np.uint32)
+        i1 = hashing.bucket_i1_masked(hs_q, mask)
+        i2 = hashing.alt_bucket_masked(i1, fp, mask)
+        base = b.bucket_offsets[trees].astype(np.int64)
+        arena_base, arena_mask = b.arena_base_mask()
         r_head, r_eid, r_hash, r_temp = bulk_place(
-            fps, temps, heads, eids_t, hs_t, fp, base + i1, base + i2,
-            new_rows, eids.astype(np.int32), hs_q, nb=b.num_buckets,
-            rng=self._rng)
+            *self._tables(), fp, base + i1.astype(np.int64),
+            base + i2.astype(np.int64), new_rows, eids.astype(np.int32),
+            hs_q, nb=0, rng=self._rng, row_base=arena_base,
+            row_mask=arena_mask)
         b.num_items += np.bincount(trees,
                                    minlength=b.num_trees).astype(np.int32)
-        # scalar eviction fallback; a dead kick chain restages at double NB
-        # (the rebuild re-homes every live row incl. the still-homeless
-        # remainder, so the loop simply stops)
+        # scalar eviction fallback; a dead kick chain restages ONLY the
+        # failing tree's segment at double nb (the tree-local restage
+        # re-homes every live row of that tree, including the still-
+        # homeless remainder, so later remainder items of a restaged tree
+        # are already placed and must be skipped)
+        restaged = set()
         for j in range(r_head.size):
             rid = int(r_head[j])
             tree = int(b.row_tree[rid])
+            if tree in restaged:
+                continue
+            lo, _ = b.segment(tree)
             if not _scalar_insert(
-                    *self._flat(), tree * b.num_buckets, b.num_buckets,
+                    *self._tables(), lo, int(b.tree_nb[tree]),
                     b.slots, int(r_hash[j]), rid, int(r_eid[j]),
                     self._rng, self.max_kicks, temp=int(r_temp[j])):
-                self._rebuild(b.num_buckets * 2)
+                self._restage_tree(tree, 2 * int(b.tree_nb[tree]))
                 self.stats["expansions"] += 1
-                break
+                restaged.add(tree)
         return int(trees.shape[0]), replaced
 
     # ------------------------------------------------------------- apply
@@ -318,16 +334,70 @@ class MaintenanceEngine:
         return out
 
     # --------------------------------------------------- expand / compact
-    def _rebuild(self, num_buckets: int) -> None:
-        """Restage the whole bank at ``num_buckets`` per tree: compact the
-        CSR arena to live rows, re-place every live row (temperatures
-        preserved), and adopt the new tables into the existing bank object
-        so external references stay valid."""
+    def _restage_tree(self, tree: int, new_nb: int) -> None:
+        """Tree-local restage: re-place only ``tree``'s live rows into a
+        fresh ``(new_nb, S)`` segment and splice it into the arena.
+
+        Everything outside the segment is untouched byte-for-byte — only
+        ``bucket_offsets`` after the tree shift by the size delta.  CSR
+        rows are *not* renumbered (no compaction), so previously returned
+        row ids and every other tree's head payloads stay valid.  Slot
+        temperatures are preserved; rows that are alive but currently
+        homeless (a mid-insert remainder) are placed too.
+        """
         b = self.bank
-        fps, temps, heads, _, _ = self._flat()
-        occ = fps != hashing.EMPTY_FP
-        temp_r = np.zeros(b.num_rows, np.int32)
-        temp_r[heads[occ]] = temps[occ]
+        lo, hi = b.segment(tree)
+        s = b.slots
+        temp_r = np.zeros(max(b.num_rows, 1), np.int32)
+        occ = b.fingerprints[lo:hi] != hashing.EMPTY_FP
+        temp_r[b.heads[lo:hi][occ]] = b.temperature[lo:hi][occ]
+        rows = np.flatnonzero(self.row_alive
+                              & (b.row_tree == tree)).astype(np.int64)
+        hs_q = self.row_hash[rows]
+        eids = b.row_entity[rows].astype(np.int32)
+        nb = int(new_nb)
+        while True:
+            self._seed += 1
+            rng = np.random.default_rng(self._seed)
+            seg = (np.full((nb, s), hashing.EMPTY_FP, np.uint32),
+                   np.zeros((nb, s), np.int32),
+                   np.full((nb, s), NULL, np.int32),
+                   np.full((nb, s), NULL, np.int32),
+                   np.zeros((nb, s), np.uint32))
+            fp = hashing.fingerprint(hs_q)
+            i1 = hashing.bucket_i1(hs_q, nb)
+            i2 = hashing.alt_bucket(i1, fp, nb)
+            r_head, r_eid, r_hash, r_temp = bulk_place(
+                *seg, fp, i1.astype(np.int64), i2.astype(np.int64),
+                rows.astype(np.int32), eids, hs_q, nb=nb, rng=rng,
+                new_temps=temp_r[rows])
+            ok = True
+            for j in range(r_head.size):
+                if not _scalar_insert(*seg, 0, nb, s, int(r_hash[j]),
+                                      int(r_head[j]), int(r_eid[j]), rng,
+                                      self.max_kicks, temp=int(r_temp[j])):
+                    ok = False
+                    break
+            if ok and rows.size < self.load_threshold * nb * s:
+                break
+            nb *= 2
+        for name, new_seg in zip(_TABLES, seg):
+            old = getattr(b, name)
+            setattr(b, name, np.concatenate([old[:lo], new_seg, old[hi:]]))
+        delta = nb - int(b.tree_nb[tree])
+        b.tree_nb[tree] = nb
+        b.bucket_offsets[tree + 1:] += delta
+        b.num_items[tree] = rows.size
+
+    def _rebuild(self, tree_nb: np.ndarray) -> None:
+        """Restage the whole bank at the given per-tree bucket counts:
+        compact the CSR arena to live rows, re-place every live row
+        (temperatures preserved), and adopt the new tables into the
+        existing bank object so external references stay valid."""
+        b = self.bank
+        occ = b.fingerprints != hashing.EMPTY_FP
+        temp_r = np.zeros(max(b.num_rows, 1), np.int32)
+        temp_r[b.heads[occ]] = b.temperature[occ]
 
         live = np.flatnonzero(self.row_alive)
         starts = b.csr_offsets[live].astype(np.int64)
@@ -343,36 +413,46 @@ class MaintenanceEngine:
         fresh = build_bank_from_rows(
             b.num_trees, b.row_tree[live], b.row_entity[live],
             self.row_hash[live], new_off, new_nodes,
-            num_buckets=num_buckets, slots=b.slots, seed=self._seed,
-            max_kicks=self.max_kicks, row_temp=temp_r[live])
+            num_buckets=np.asarray(tree_nb, np.int64), slots=b.slots,
+            seed=self._seed, max_kicks=self.max_kicks,
+            row_temp=temp_r[live])
         for f in dataclasses.fields(FilterBank):
             setattr(b, f.name, getattr(fresh, f.name))
         self.row_hash = self.row_hash[live].copy()
         self.row_alive = np.ones(live.size, dtype=bool)
 
     def expand(self) -> None:
-        """Bank-wide restage at double NB (temperatures preserved)."""
-        self._rebuild(self.bank.num_buckets * 2)
+        """Bank-wide restage with every tree at double nb (temperatures
+        preserved).  Rarely what you want with the ragged arena — prefer
+        :meth:`expand_tree`, which grows only the hot tree."""
+        self._rebuild(self.bank.tree_nb.astype(np.int64) * 2)
         self.stats["expansions"] += 1
 
     def expand_tree(self, tree: int, force: bool = False) -> bool:
-        """Single-tree expansion request.  Policy: all trees share one NB
-        (keeps the dense ``(T, NB, S)`` device layout and kernels), so a
-        tree outgrowing its range restages the whole bank at double NB.
-        No-op unless that tree is actually past the load threshold, or
-        ``force``."""
+        """Single-tree expansion: restage only ``tree``'s arena segment at
+        double ``nb_t``.  Every other segment stays byte-identical and CSR
+        rows keep their ids — O(hot tree), not O(bank).  No-op unless that
+        tree is actually past the load threshold, or ``force``.
+
+        Direct calls change the arena geometry, so any device state staged
+        from this bank must be restaged before its temperature is absorbed
+        (a stale absorb raises loudly).  Overflow expansion inside
+        ``maintain()`` needs no care: it runs after the absorb, and the
+        caller restages on ``report.changed``."""
         b = self.bank
-        load = float(b.num_items[tree]) / (b.num_buckets * b.slots)
+        load = float(b.num_items[tree]) / (int(b.tree_nb[tree]) * b.slots)
         if not force and load < self.load_threshold:
             return False
-        self.expand()
+        self._restage_tree(int(tree), 2 * int(b.tree_nb[tree]))
+        self.stats["expansions"] += 1
         return True
 
     def compact(self) -> bool:
-        """Reclaim tombstoned CSR rows (same NB); returns True if ran."""
+        """Reclaim tombstoned CSR rows (per-tree nb preserved); returns
+        True if ran."""
         if self.num_dead_rows == 0:
             return False
-        self._rebuild(self.bank.num_buckets)
+        self._rebuild(self.bank.tree_nb.astype(np.int64).copy())
         self.stats["compactions"] += 1
         return True
 
@@ -433,15 +513,16 @@ class ShardedMaintenanceEngine:
     One :class:`MaintenanceEngine` per shard, each owning only its shard's
     sub-bank: global-tree operations route to the owning shard's engine
     (``tree_starts`` range search), so an insert, delete, compaction or
-    *expansion* mutates exactly one shard's tables — every other shard's
-    tables stay byte-identical, and a restage after maintenance ships only
+    *expansion* mutates exactly one shard's tables.  With the ragged arena
+    an expansion is narrower still: only the hot tree's segment within the
+    owning shard restages — every other tree's segment (same shard or not)
+    stays byte-identical, and a restage after maintenance ships only
     changed blocks' worth of new content.
 
-    Temperature harvesting slices the packed ``(D*Tpad, NBmax, S)`` device
-    table into per-shard owner blocks first (``ShardedBank.
-    temperature_blocks``), so each slot's bumps are counted once against
-    the owning shard's own baseline — the padding rows/buckets of the
-    packed layout never enter the delta.
+    Temperature harvesting slices the packed ``(D*Apad, S)`` device arena
+    into per-shard owner blocks first (``ShardedBank.temperature_blocks``),
+    so each slot's bumps are counted once against the owning shard's own
+    baseline — the padding rows of the packed layout never enter the delta.
     """
 
     def __init__(self, sbank: ShardedBank, seed: int = 0x5EED, **policy):
@@ -484,8 +565,9 @@ class ShardedMaintenanceEngine:
 
     # --------------------------------------------------- expand / compact
     def expand_tree(self, tree: int, force: bool = False) -> bool:
-        """Shard-local expansion: restages only the owning shard's tree
-        range at 2xNB — the other shards' tables are untouched."""
+        """Tree-local expansion: restages only the hot tree's arena
+        segment within its owning shard — the other trees' segments (and
+        every other shard) are untouched."""
         d, lt = self._owner(tree)
         return self.engines[d].expand_tree(lt, force=force)
 

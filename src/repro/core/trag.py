@@ -22,8 +22,8 @@ from .bank import FilterBank
 from .context import (EntityContext, context_from_arena, context_from_csr,
                       gather_descendants, gather_hierarchy, render_context)
 from .cuckoo import CFTIndex, build_index
-from .lookup import (LookupResult, bump_temperature_bank, lookup_batch_bank,
-                     sort_buckets_bank)
+from .lookup import (LookupResult, bump_temperature_arena, lookup_arena,
+                     sort_buckets_arena)
 from .tree import EntityForest
 
 NULL = -1
@@ -83,7 +83,7 @@ class DeviceRetrieval(NamedTuple):
     locations: jax.Array    # (B, max_locs) int32 node ids (NULL-padded)
     up: jax.Array           # (B, max_locs, n) ancestor entity ids
     down: jax.Array         # (B, max_locs, n) descendant entity ids
-    temperature: jax.Array  # updated (T, NB, S) table — thread into state
+    temperature: jax.Array  # updated (A, S) arena table — thread into state
 
 
 @jax.tree_util.register_pytree_node_class
@@ -91,26 +91,30 @@ class DeviceRetrieval(NamedTuple):
 class CFTDeviceState:
     """All retrieval tensors living on device, usable inside jit.
 
-    Filter tables carry a leading bank axis ``T`` (number of trees): the
-    single-index state from :meth:`from_index` is simply a bank with
-    ``T == 1``, while :meth:`from_bank` stacks one filter per tree.  Slot
+    Filter tables are a flat **ragged bucket arena** ``(A, S)``: tree
+    ``t`` owns arena rows ``[bucket_offsets[t], bucket_offsets[t+1])``
+    with its own power-of-two ``tree_nb[t]`` bucket count.  The
+    single-index state from :meth:`from_index` is simply an arena with one
+    tree, while :meth:`from_bank` adopts the bank's arena directly.  Slot
     payloads index rows of ``csr_offsets`` — per-entity rows in the T == 1
     case, per-(tree, entity) rows in the bank case — so the retrieval
     arithmetic downstream of the lookup is identical for both.
     """
-    fingerprints: jax.Array   # (T, NB, S) uint32
-    temperature: jax.Array    # (T, NB, S) int32
-    heads: jax.Array          # (T, NB, S) int32 — CSR row id payloads
-    csr_offsets: jax.Array    # (R + 1,) int32
-    csr_nodes: jax.Array      # (L,) int32 — node id per location
-    parent: jax.Array         # (N,) int32
-    entity_id: jax.Array      # (N,) int32
-    child_offsets: jax.Array  # (N + 1,) int32
-    child_index: jax.Array    # (C,) int32
+    fingerprints: jax.Array    # (A, S) uint32 — ragged arena
+    temperature: jax.Array     # (A, S) int32
+    heads: jax.Array           # (A, S) int32 — CSR row id payloads
+    bucket_offsets: jax.Array  # (T + 1,) int32 — per-tree segment starts
+    tree_nb: jax.Array         # (T,) int32 — per-tree bucket counts
+    csr_offsets: jax.Array     # (R + 1,) int32
+    csr_nodes: jax.Array       # (L,) int32 — node id per location
+    parent: jax.Array          # (N,) int32
+    entity_id: jax.Array       # (N,) int32
+    child_offsets: jax.Array   # (N + 1,) int32
+    child_index: jax.Array     # (C,) int32
 
     @property
     def num_trees(self) -> int:
-        return int(self.fingerprints.shape[0])
+        return int(self.bucket_offsets.shape[0]) - 1
 
     def tree_flatten(self):
         fields = dataclasses.fields(self)
@@ -135,11 +139,14 @@ class CFTDeviceState:
     @classmethod
     def from_index(cls, index: CFTIndex) -> "CFTDeviceState":
         t = index.filter.tables()
+        nb = index.filter.num_buckets
         return cls(
-            fingerprints=jnp.asarray(t.fingerprints)[None],
-            temperature=jnp.asarray(t.temperature)[None],
+            fingerprints=jnp.asarray(t.fingerprints),
+            temperature=jnp.asarray(t.temperature),
             # the device path uses CSR: slot payload = entity id (= row)
-            heads=jnp.asarray(t.entity_ids)[None],
+            heads=jnp.asarray(t.entity_ids),
+            bucket_offsets=jnp.asarray(np.asarray([0, nb], np.int32)),
+            tree_nb=jnp.asarray(np.asarray([nb], np.int32)),
             csr_offsets=jnp.asarray(index.csr.offsets),
             csr_nodes=jnp.asarray(index.csr.addrs[:, 1]
                                   if index.csr.addrs.size else
@@ -155,12 +162,13 @@ class CFTDeviceState:
 
     def sort_idle(self) -> "CFTDeviceState":
         """Device-side idle-time maintenance: resort every bucket of every
-        tree hot-fingerprints-first (``sort_buckets_bank``).  Pure-device
-        path for states with no host bank mirror; when a host
-        ``MaintenanceEngine`` owns the tables, sort on the host and restage
-        instead so the two layouts never diverge."""
-        f, t, h = sort_buckets_bank(self.fingerprints, self.temperature,
-                                    self.heads)
+        tree hot-fingerprints-first (``sort_buckets_arena`` — one flat
+        per-bucket reorder over the ragged arena).  Pure-device path for
+        states with no host bank mirror; when a host ``MaintenanceEngine``
+        owns the tables, sort on the host and restage instead so the two
+        layouts never diverge."""
+        f, t, h = sort_buckets_arena(self.fingerprints, self.temperature,
+                                     self.heads)
         return dataclasses.replace(self, fingerprints=f, temperature=t,
                                    heads=h)
 
@@ -171,6 +179,9 @@ class CFTDeviceState:
             fingerprints=jnp.asarray(bank.fingerprints),
             temperature=jnp.asarray(bank.temperature),
             heads=jnp.asarray(bank.heads),
+            bucket_offsets=jnp.asarray(
+                bank.bucket_offsets.astype(np.int32)),
+            tree_nb=jnp.asarray(bank.tree_nb.astype(np.int32)),
             csr_offsets=jnp.asarray(bank.csr_offsets),
             csr_nodes=jnp.asarray(bank.csr_nodes if bank.csr_nodes.size
                                   else np.zeros((1,), np.int32)),
@@ -186,22 +197,27 @@ def retrieve_device(state: CFTDeviceState, query_hashes: jax.Array,
 
     Queries are ``(tree_id, hash)`` pairs; ``query_trees`` defaults to all
     zeros, which on a ``T == 1`` state reproduces the single-filter
-    behaviour.  ``lookup_fn(fingerprints, heads, tree_ids, h)`` defaults to
-    the pure-jnp bank reference; the serving engine passes the Pallas bank
-    kernel wrapper (identical signature/semantics).
+    behaviour.  The per-tree routing (arena segment start + bucket mask)
+    is gathered from the state's offsets table here; ``lookup_fn(
+    fingerprints, heads, row_offsets, masks, h)`` then probes the flat
+    arena — defaults to the pure-jnp :func:`repro.core.lookup.
+    lookup_arena`; the serving engine passes the Pallas arena kernel
+    wrapper (identical signature/semantics).
     """
     if lookup_fn is None:
-        lookup_fn = lookup_batch_bank
+        lookup_fn = lookup_arena
     if query_trees is None:
         query_trees = jnp.zeros(query_hashes.shape, jnp.int32)
+    num_trees = state.bucket_offsets.shape[0] - 1
     # out-of-range tree ids must miss, not alias to a clamped gather row
-    in_range = ((query_trees >= 0)
-                & (query_trees < state.fingerprints.shape[0]))
+    in_range = (query_trees >= 0) & (query_trees < num_trees)
     query_trees = jnp.where(in_range, query_trees, 0).astype(jnp.int32)
+    row_off = state.bucket_offsets[query_trees]
+    masks = (state.tree_nb[query_trees] - 1).astype(jnp.uint32)
     res: LookupResult = lookup_fn(state.fingerprints, state.heads,
-                                  query_trees, query_hashes)
+                                  row_off, masks, query_hashes)
     res = res._replace(hit=res.hit & in_range)
-    temp = bump_temperature_bank(state.temperature, query_trees, res)
+    temp = bump_temperature_arena(state.temperature, row_off, res)
     return gather_context(state, res, temp, max_locs=max_locs, n=n)
 
 

@@ -191,6 +191,120 @@ def _bank_kernel_tiled(h_ref, tid_ref, fp_tab_ref, head_tab_ref, hit_ref,
                               slot_ref[...])
 
 
+def _arena_kernel(h_ref, off_ref, mask_ref, fp_tab_ref, head_tab_ref,
+                  hit_ref, head_ref, bucket_ref, slot_ref, prio_ref, *,
+                  slots: int, row_tile: int):
+    """Ragged-arena routing: the table is a flat ``(A, S)`` bucket arena
+    where each tree owns a contiguous segment of an independent power-of-
+    two length.  Each query arrives pre-routed as (hash, segment start,
+    bucket mask ``nb_t - 1``) — the offset/mask pair the wrapper gathers
+    from the per-tree SMEM-sized offsets table — and probes arena rows
+    ``off + (i1, i2)`` with ``i1 = mix(h) & mask``.
+
+    Grid axis 1 walks tiles of ``row_tile`` arena rows, so VMEM only ever
+    holds a slice of the arena.  Unlike the dense tree-tiled kernel, a
+    query's two candidate rows may fall in *different* tiles (segments are
+    not tile-aligned), so each tile contributes its local best match and a
+    running priority (position in the [i1 slots | i2 slots] concat) picks
+    the global first match — ``prio_ref`` is the cross-tile accumulator,
+    discarded by the wrapper.  Step 0 writes the same miss defaults as the
+    dense kernels (head -1, bucket i2, slot S-1); since every candidate
+    row lives in exactly one tile, the min-priority merge reproduces the
+    single-block match order exactly.
+    """
+    ti = pl.program_id(1)
+    h = h_ref[...].astype(jnp.uint32)                       # (TILE,)
+    qoff = off_ref[...].astype(jnp.int32)
+    qmask = mask_ref[...].astype(jnp.uint32)
+    fp, i1u, i2u = hashing.candidate_buckets_masked(h, qmask, jnp)
+    i1 = i1u.astype(jnp.int32)
+    i2 = i2u.astype(jnp.int32)
+    r1 = qoff + i1
+    r2 = qoff + i2
+
+    @pl.when(ti == 0)
+    def _init():
+        hit_ref[...] = jnp.zeros((TILE,), jnp.int32)
+        head_ref[...] = jnp.full((TILE,), -1, jnp.int32)
+        bucket_ref[...] = i2
+        slot_ref[...] = jnp.full((TILE,), slots - 1, jnp.int32)
+        prio_ref[...] = jnp.full((TILE,), 2 * slots, jnp.int32)
+
+    base = ti * row_tile
+    l1, l2 = r1 - base, r2 - base
+    in1 = (l1 >= 0) & (l1 < row_tile)
+    in2 = (l2 >= 0) & (l2 < row_tile)
+
+    fp_tab = fp_tab_ref[...]                          # (row_tile, S) f32
+    head_tab = head_tab_ref[...]
+    tab = jnp.concatenate([fp_tab, head_tab], axis=1)
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, row_tile), 1)
+    # out-of-tile candidates produce all-zero one-hots -> zero rows -> no
+    # match (query fingerprints are never the empty sentinel 0)
+    oh1 = ((row_iota == l1[:, None]) & in1[:, None]).astype(jnp.float32)
+    oh2 = ((row_iota == l2[:, None]) & in2[:, None]).astype(jnp.float32)
+    rows1 = jax.lax.dot(oh1, tab, precision=jax.lax.Precision.HIGHEST)
+    rows2 = jax.lax.dot(oh2, tab, precision=jax.lax.Precision.HIGHEST)
+
+    fps = jnp.concatenate([rows1[:, :slots], rows2[:, :slots]], axis=1)
+    heads = jnp.concatenate([rows1[:, slots:], rows2[:, slots:]], axis=1)
+
+    match = fps == fp.astype(jnp.float32)[:, None]          # (TILE, 2S)
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, 2 * slots), 1)
+    first = jnp.min(jnp.where(match, pos_iota, 2 * slots), axis=1)
+    better = first < prio_ref[...]
+    firstc = jnp.minimum(first, 2 * slots - 1)
+
+    sel = (pos_iota == firstc[:, None]).astype(jnp.float32)
+    head = jnp.sum(heads * sel, axis=1)                     # exact gather
+
+    hit_ref[...] = jnp.where(better, 1, hit_ref[...])
+    head_ref[...] = jnp.where(better, head.astype(jnp.int32), head_ref[...])
+    bucket_ref[...] = jnp.where(better,
+                                jnp.where(first < slots, i1, i2),
+                                bucket_ref[...])
+    slot_ref[...] = jnp.where(better,
+                              jnp.where(first < slots, firstc,
+                                        firstc - slots),
+                              slot_ref[...])
+    prio_ref[...] = jnp.where(better, first, prio_ref[...])
+
+
+def cuckoo_lookup_arena_pallas(h: jax.Array, row_offsets: jax.Array,
+                               masks: jax.Array, fp_table_f32: jax.Array,
+                               head_table_f32: jax.Array,
+                               interpret: bool = True,
+                               row_tile: int = 0):
+    """h/row_offsets/masks: (B,) with B % TILE == 0; tables: (A, S) f32.
+
+    ``row_tile == 0`` keeps the whole arena as one VMEM block (right for
+    the many-small-trees regime); ``row_tile > 0`` tiles the arena rows
+    over a second grid dimension — the caller must pad A to a multiple of
+    ``row_tile`` (zero rows = empty fingerprints, so padding never
+    matches).  Arenas larger than a device should shard over the mesh
+    first (core.distributed) and route within each shard.
+    """
+    rows_total, slots = fp_table_f32.shape
+    b = h.shape[0]
+    rt = rows_total if row_tile <= 0 else row_tile
+    assert rows_total % rt == 0, \
+        "pad the arena to a multiple of row_tile before calling"
+    grid = (b // TILE, rows_total // rt)       # arena axis innermost
+    qspec = pl.BlockSpec((TILE,), lambda qi, ti: (qi,))
+    tabspec = pl.BlockSpec((rt, slots), lambda qi, ti: (ti, 0))
+    out_shapes = [jax.ShapeDtypeStruct((b,), jnp.int32) for _ in range(5)]
+    outs = pl.pallas_call(
+        functools.partial(_arena_kernel, slots=slots, row_tile=rt),
+        grid=grid,
+        in_specs=[qspec, qspec, qspec, tabspec, tabspec],
+        out_specs=[qspec] * 5,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(h, row_offsets, masks, fp_table_f32, head_table_f32)
+    return outs[:4]                            # drop the priority scratch
+
+
 def cuckoo_lookup_bank_pallas(h: jax.Array, tree_ids: jax.Array,
                               fp_table_f32: jax.Array,
                               head_table_f32: jax.Array, num_buckets: int,

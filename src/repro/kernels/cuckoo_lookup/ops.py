@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.lookup import LookupResult
-from .kernel import TILE, cuckoo_lookup_bank_pallas, cuckoo_lookup_pallas
+from .kernel import (TILE, cuckoo_lookup_arena_pallas,
+                     cuckoo_lookup_bank_pallas, cuckoo_lookup_pallas)
 
 
 def on_tpu() -> bool:
@@ -97,6 +98,81 @@ def cuckoo_lookup_bank_auto(fingerprints, heads, tree_ids, h
     """Kernel on TPU, interpret elsewhere — serving's bank-routing entry."""
     return cuckoo_lookup_bank(fingerprints, heads, tree_ids, h,
                               interpret=not on_tpu())
+
+
+def _pick_row_tile(a: int) -> int:
+    """0 = single-block; else arena rows per grid step."""
+    return 0 if a <= SINGLE_BLOCK_MAX_ROWS else SINGLE_BLOCK_MAX_ROWS
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_tile"))
+def cuckoo_lookup_arena(fingerprints: jax.Array, heads: jax.Array,
+                        row_offsets: jax.Array, masks: jax.Array,
+                        h: jax.Array, interpret: bool = True,
+                        row_tile: int = -1) -> LookupResult:
+    """Ragged-arena lookup with pre-routed queries — same signature and
+    semantics as ``core.lookup.lookup_arena``.  Tables: flat ``(A, S)``;
+    ``row_offsets``/``masks``: per-query segment start and ``nb_t - 1``.
+
+    ``row_tile``: -1 auto-selects (single VMEM block for small arenas,
+    arena-row grid tiling past ``SINGLE_BLOCK_MAX_ROWS``); 0 forces the
+    single-block path; > 0 forces that many arena rows per grid step.  The
+    arena is padded here to a tile multiple with empty-fingerprint rows
+    (which can never match), so callers never pre-pad.
+    """
+    a, s = fingerprints.shape
+    if row_tile < 0:
+        row_tile = _pick_row_tile(a)
+    b = h.shape[0]
+    pad = (-b) % TILE
+    hp = jnp.pad(h.astype(jnp.uint32), (0, pad))
+    op = jnp.pad(row_offsets.astype(jnp.int32), (0, pad))
+    mp = jnp.pad(masks.astype(jnp.uint32), (0, pad))
+    fps2, hds2 = fingerprints, heads
+    if row_tile > 0:
+        row_pad = (-a) % row_tile
+        fps2 = jnp.pad(fps2, ((0, row_pad), (0, 0)))
+        hds2 = jnp.pad(hds2, ((0, row_pad), (0, 0)))
+    fp32, hd32 = stage_tables(fps2, hds2)
+    hit, head, bucket, slot = cuckoo_lookup_arena_pallas(
+        hp, op, mp, fp32, hd32, interpret=interpret, row_tile=row_tile)
+    return LookupResult(hit=hit[:b].astype(jnp.bool_), head=head[:b],
+                        bucket=bucket[:b], slot=slot[:b])
+
+
+def cuckoo_lookup_arena_auto(fingerprints, heads, row_offsets, masks, h
+                             ) -> LookupResult:
+    """Kernel on TPU, interpret elsewhere — serving's ragged-arena entry
+    (the ``lookup_fn`` shape ``retrieve_device`` and the sharded probe
+    consume)."""
+    return cuckoo_lookup_arena(fingerprints, heads, row_offsets, masks, h,
+                               interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "row_tile"))
+def cuckoo_lookup_ragged(fingerprints: jax.Array, heads: jax.Array,
+                         bucket_offsets: jax.Array, tree_nb: jax.Array,
+                         tree_ids: jax.Array, h: jax.Array,
+                         interpret: bool = True,
+                         row_tile: int = -1) -> LookupResult:
+    """Tree-routed ragged lookup — same signature/semantics as
+    ``core.lookup.lookup_batch_ragged``.  The per-tree offsets/mask table
+    is small (O(T), SMEM-sized); the routing gather happens here in the
+    jitted wrapper and the kernel probes ``offset[t] + (h & (nb_t - 1))``
+    from the per-query values."""
+    t = tree_ids.astype(jnp.int32)
+    return cuckoo_lookup_arena(
+        fingerprints, heads, bucket_offsets[t],
+        (tree_nb[t] - 1).astype(jnp.uint32), h,
+        interpret=interpret, row_tile=row_tile)
+
+
+def cuckoo_lookup_ragged_auto(fingerprints, heads, bucket_offsets, tree_nb,
+                              tree_ids, h) -> LookupResult:
+    """Kernel on TPU, interpret elsewhere — tree-routed ragged entry."""
+    return cuckoo_lookup_ragged(fingerprints, heads, bucket_offsets,
+                                tree_nb, tree_ids, h,
+                                interpret=not on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

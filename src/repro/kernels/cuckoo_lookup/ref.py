@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import jax
 
-from ...core.lookup import LookupResult, lookup_batch, lookup_batch_bank
+from ...core.lookup import (LookupResult, lookup_arena, lookup_batch,
+                            lookup_batch_bank, lookup_batch_ragged)
 
 
 def cuckoo_lookup_ref(fingerprints: jax.Array, heads: jax.Array,
@@ -16,3 +17,17 @@ def cuckoo_lookup_bank_ref(fingerprints: jax.Array, heads: jax.Array,
                            tree_ids: jax.Array, h: jax.Array
                            ) -> LookupResult:
     return lookup_batch_bank(fingerprints, heads, tree_ids, h)
+
+
+def cuckoo_lookup_arena_ref(fingerprints: jax.Array, heads: jax.Array,
+                            row_offsets: jax.Array, masks: jax.Array,
+                            h: jax.Array) -> LookupResult:
+    return lookup_arena(fingerprints, heads, row_offsets, masks, h)
+
+
+def cuckoo_lookup_ragged_ref(fingerprints: jax.Array, heads: jax.Array,
+                             bucket_offsets: jax.Array, tree_nb: jax.Array,
+                             tree_ids: jax.Array, h: jax.Array
+                             ) -> LookupResult:
+    return lookup_batch_ragged(fingerprints, heads, bucket_offsets,
+                               tree_nb, tree_ids, h)

@@ -121,7 +121,7 @@ class ServeEngine:
         With a maintenance engine attached: one ``maintain`` pass on the
         host bank, then restage the device tables iff anything changed
         (host stays the source of truth so slot layouts never diverge).
-        Without one: a pure device-side idle sort (``sort_buckets_bank``)
+        Without one: a pure device-side idle sort (``sort_buckets_arena``)
         — hot fingerprints bubble to slot 0 using temperature alone."""
         if self._maint is not None:
             report = self._maint.maintain(self._ret_state)

@@ -27,7 +27,7 @@ from ..data.datasets import SyntheticCorpus
 from ..data.ner import (add_to_gazetteer, build_gazetteer,
                         recognize_entities)
 from ..data.tokenizer import HashTokenizer
-from ..kernels.cuckoo_lookup.ops import cuckoo_lookup_bank_auto
+from ..kernels.cuckoo_lookup.ops import cuckoo_lookup_arena_auto
 from .engine import Request, ServeEngine
 
 SYSTEM_PROMPT = ("You are an assistant answering questions about an "
@@ -108,16 +108,15 @@ class RAGPipeline:
             else:
                 trees = jnp.zeros((b,), jnp.int32)
             if isinstance(self._dev_state, ShardedBankState):
-                # kernel probe while NB is uniform; once shard-local
-                # expansions diverge bucket counts the probe falls back to
-                # the jnp path, which reads per-shard NB from the routing
-                # tables
+                # the Pallas arena probe routes per query (segment start +
+                # bucket mask), so it works unchanged after tree-local
+                # expansions diverge per-tree bucket counts
                 out = sharded_retrieve_device(
                     self._dev_state, hashes, trees,
-                    lookup_fn=cuckoo_lookup_bank_auto)
+                    lookup_fn=cuckoo_lookup_arena_auto)
             else:
                 out = retrieve_device(self._dev_state, hashes, trees,
-                                      lookup_fn=cuckoo_lookup_bank_auto)
+                                      lookup_fn=cuckoo_lookup_arena_auto)
             self._dev_state = self._dev_state.with_temperature(
                 out.temperature)
             if self.maintenance is not None:

@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (CFTDeviceState, build_bank, build_forest,
-                        lookup_batch, lookup_batch_bank, lookup_batch_trees,
+                        lookup_batch, lookup_batch_bank,
+                        lookup_batch_ragged, lookup_batch_trees,
                         retrieve_device)
 from repro.core import hashing
 from repro.data import hospital_corpus
@@ -67,7 +68,8 @@ def test_bulk_build_equals_sequential_insert():
     forest = build_forest(corpus.trees)
     bulk = build_bank(forest, bulk=True)
     seq = build_bank(forest, bulk=False)
-    assert bulk.num_buckets == seq.num_buckets
+    assert np.array_equal(bulk.tree_nb, seq.tree_nb)
+    assert np.array_equal(bulk.bucket_offsets, seq.bucket_offsets)
     assert np.array_equal(bulk.num_items, seq.num_items)
     assert bulk.build_stats["evicted"] <= bulk.build_stats["items"] // 10
     hashes = hashing.hash_entities(forest.entity_names)
@@ -75,8 +77,12 @@ def test_bulk_build_equals_sequential_insert():
         t = int(bulk.row_tree[r])
         h = int(hashes[int(bulk.row_entity[r])])
         assert bulk.lookup(t, h) == seq.lookup(t, h)
-    occ_b = (bulk.fingerprints != hashing.EMPTY_FP).sum(axis=(1, 2))
-    occ_s = (seq.fingerprints != hashing.EMPTY_FP).sum(axis=(1, 2))
+    occ_b = np.add.reduceat((bulk.fingerprints
+                             != hashing.EMPTY_FP).sum(axis=1),
+                            bulk.bucket_offsets[:-1])
+    occ_s = np.add.reduceat((seq.fingerprints
+                             != hashing.EMPTY_FP).sum(axis=1),
+                            seq.bucket_offsets[:-1])
     assert np.array_equal(occ_b, occ_s)
 
 
@@ -89,9 +95,12 @@ def test_routed_lookup_matches_host():
     hh = np.concatenate([hashes[bank.row_entity],
                          hashing.hash_entities([f"missing {i}"
                                                 for i in range(16)])])
-    res = lookup_batch_bank(jnp.asarray(bank.fingerprints),
-                            jnp.asarray(bank.heads),
-                            jnp.asarray(tid), jnp.asarray(hh))
+    res = lookup_batch_ragged(jnp.asarray(bank.fingerprints),
+                              jnp.asarray(bank.heads),
+                              jnp.asarray(
+                                  bank.bucket_offsets.astype(np.int32)),
+                              jnp.asarray(bank.tree_nb),
+                              jnp.asarray(tid), jnp.asarray(hh))
     for i in range(tid.shape[0]):
         hit, row, _ = bank.lookup(int(tid[i]), int(hh[i]))
         assert bool(res.hit[i]) == hit
@@ -106,7 +115,8 @@ def test_vmapped_lookup_matches_per_tree_reference():
     names = [[f"entity {t}_{i}" for i in range(12)] + ["missing x", "shared entity"]
              for t in range(bank.num_trees)]
     hb = jnp.stack([jnp.asarray(hashing.hash_entities(ns)) for ns in names])
-    fps, heads = jnp.asarray(bank.fingerprints), jnp.asarray(bank.heads)
+    df, _, dh = bank.dense_tables()         # uniform forest -> dense view
+    fps, heads = jnp.asarray(df), jnp.asarray(dh)
     got = lookup_batch_trees(fps, heads, hb)
     ker = cuckoo_lookup_trees(fps, heads, hb, interpret=True)
     for t in range(bank.num_trees):
@@ -132,7 +142,8 @@ def test_pallas_bank_kernel_matches_reference():
     hashes = hashing.hash_entities(forest.entity_names)
     tid = jnp.asarray(bank.row_tree.astype(np.int32))
     hh = jnp.asarray(hashes[bank.row_entity])
-    fps, heads = jnp.asarray(bank.fingerprints), jnp.asarray(bank.heads)
+    df, _, dh = bank.dense_tables()
+    fps, heads = jnp.asarray(df), jnp.asarray(dh)
     ref = lookup_batch_bank(fps, heads, tid, hh)
     ker = cuckoo_lookup_bank(fps, heads, tid, hh, interpret=True)
     for field in ("hit", "head", "bucket", "slot"):
@@ -152,7 +163,8 @@ def test_pallas_bank_kernel_tree_tiled_matches_single_block():
     hh = np.concatenate([hashes[bank.row_entity],
                          hashing.hash_entities([f"missing {i}"
                                                 for i in range(24)])])
-    fps, heads = jnp.asarray(bank.fingerprints), jnp.asarray(bank.heads)
+    df, _, dh = bank.dense_tables()
+    fps, heads = jnp.asarray(df), jnp.asarray(dh)
     tid_j, hh_j = jnp.asarray(tid), jnp.asarray(hh)
     ref = lookup_batch_bank(fps, heads, tid_j, hh_j)
     m = np.asarray(ref.hit)

@@ -56,11 +56,11 @@ def test_sharded_filter_lookup():
 
 def test_bank_axis_sharded_lookup_equivalence():
     """Bank-axis sharding: all-to-all routed lookup is bit-identical to
-    lookup_batch_bank on the merged replicated tables — queries hitting
+    lookup_batch_ragged on the merged replicated arena — queries hitting
     trees on every shard, a ragged batch size, and an all-miss batch."""
     _run("""
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import (build_forest, build_bank, lookup_batch_bank,
+    from repro.core import (build_forest, build_bank, lookup_batch_ragged,
                             sharded_lookup_bank, stage_sharded_bank)
     from repro.core import hashing
 
@@ -73,10 +73,14 @@ def test_bank_axis_sharded_lookup_equivalence():
     mesh = jax.make_mesh((D,), ("model",))
     state = stage_sharded_bank(sbank, forest, mesh, "model")
     mf, _, mh = sbank.merged_tables()
+    moff, mnb = sbank.merged_layout()
+    moff_j = jnp.asarray(moff.astype(np.int32))
+    mnb_j = jnp.asarray(mnb)
 
     def check(qt, qh):
-        ref = lookup_batch_bank(jnp.asarray(mf), jnp.asarray(mh),
-                                jnp.asarray(qt), jnp.asarray(qh))
+        ref = lookup_batch_ragged(jnp.asarray(mf), jnp.asarray(mh),
+                                  moff_j, mnb_j,
+                                  jnp.asarray(qt), jnp.asarray(qh))
         got = sharded_lookup_bank(state, jnp.asarray(qt), jnp.asarray(qh))
         for f in ("hit", "head", "bucket", "slot"):
             np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
@@ -100,9 +104,10 @@ def test_bank_axis_sharded_lookup_equivalence():
 
     # semantic equivalence vs the original unsharded bank: same hits,
     # identical node lists through the merged row numbering
-    ref0 = lookup_batch_bank(jnp.asarray(bank.fingerprints),
-                             jnp.asarray(bank.heads),
-                             jnp.asarray(qt), jnp.asarray(qh))
+    ref0 = lookup_batch_ragged(
+        jnp.asarray(bank.fingerprints), jnp.asarray(bank.heads),
+        jnp.asarray(bank.bucket_offsets.astype(np.int32)),
+        jnp.asarray(bank.tree_nb), jnp.asarray(qt), jnp.asarray(qh))
     np.testing.assert_array_equal(np.asarray(ref0.hit), hit)
     gh, rh = np.asarray(got.head), np.asarray(ref0.head)
     for j in np.flatnonzero(hit):
@@ -115,13 +120,13 @@ def test_bank_axis_sharded_lookup_equivalence():
     _, got_m = check(qt_m, qh_m)
     assert not np.asarray(got_m.hit).any()
 
-    # the tiled Pallas bank kernel as the shard-local probe (uniform NB);
+    # the row-tiled Pallas arena kernel as the shard-local probe;
     # bucket/slot compare on hits only — on a miss the kernel reports the
     # last probed position, the jnp reference reports (i1, 0) (both are
     # dont-cares: head is NULL and the hit-masked temperature add is 0)
-    from repro.kernels.cuckoo_lookup.ops import cuckoo_lookup_bank_auto
+    from repro.kernels.cuckoo_lookup.ops import cuckoo_lookup_arena_auto
     got_k = sharded_lookup_bank(state, jnp.asarray(qt), jnp.asarray(qh),
-                                lookup_fn=cuckoo_lookup_bank_auto)
+                                lookup_fn=cuckoo_lookup_arena_auto)
     np.testing.assert_array_equal(hit, np.asarray(got_k.hit))
     np.testing.assert_array_equal(gh, np.asarray(got_k.head))
     for f in ("bucket", "slot"):
@@ -150,7 +155,7 @@ def test_bank_sharded_memory_fraction():
     mesh = jax.make_mesh((D,), ("model",))
     state = stage_sharded_bank(sbank, forest, mesh, "model")
     for arr in (state.fingerprints, state.temperature, state.heads):
-        replicated = T * bank.num_buckets * bank.slots * arr.dtype.itemsize
+        replicated = bank.total_buckets * bank.slots * arr.dtype.itemsize
         shards = list(arr.addressable_shards)
         assert len(shards) == D
         per_dev = {s.data.nbytes for s in shards}
@@ -168,14 +173,15 @@ def test_bank_sharded_memory_fraction():
 
 def test_sharded_maintenance_shard_local_churn():
     """Insert/delete/expand on one hot tree: non-owning shards'
-    tables stay byte-identical, expand restages only the owner's tree
-    range, and the maintained sharded bank answers identically to a
-    from-scratch sharded build — including the heterogeneous-NB device
-    lookup after the owner's expansion."""
+    tables stay byte-identical, expand restages only the hot tree's
+    arena segment (even the owner's other trees keep their bytes), and
+    the maintained sharded bank answers identically to a from-scratch
+    sharded build — including the heterogeneous per-tree-nb device
+    lookup after the expansion."""
     _run("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.core import (build_forest, build_bank, build_bank_from_rows,
-                            lookup_batch_bank, ShardedMaintenanceEngine,
+                            lookup_batch_ragged, ShardedMaintenanceEngine,
                             sharded_lookup_bank, stage_sharded_bank)
     from repro.core import hashing
 
@@ -190,11 +196,11 @@ def test_sharded_maintenance_shard_local_churn():
               "stored_hash")
 
     hot = 9
-    owner, _ = sbank.owner(hot)
+    owner, hot_lt = sbank.owner(hot)
     others = [d for d in range(D) if d != owner]
     snap = {d: tuple(getattr(sbank.banks[d], f).tobytes() for f in TABLES)
             for d in others}
-    nb_before = [b.num_buckets for b in sbank.banks]
+    nb_before = [b.tree_nb.copy() for b in sbank.banks]
 
     node_pool = sorted(sbank.banks[owner].walk_row(0))
     eng.queue_delete(hot, f"e{hot}_0")
@@ -203,15 +209,29 @@ def test_sharded_maintenance_shard_local_churn():
         eng.queue_insert(hot, f"new {hot}_{k}", node_pool[:2])
     rep = eng.maintain()
     assert rep.inserted == 3 and rep.deleted == 2, rep
-    nb_mid = sbank.banks[owner].num_buckets
+    ob = sbank.banks[owner]
+    cold_snap = {lt: tuple(
+        arr[int(ob.bucket_offsets[lt]):int(ob.bucket_offsets[lt + 1])]
+        .tobytes() for arr in (ob.fingerprints, ob.heads, ob.stored_hash))
+        for lt in range(ob.num_trees) if lt != hot_lt}
+    nb_mid = int(ob.tree_nb[hot_lt])
     assert eng.expand_tree(hot, force=True)
-    assert sbank.banks[owner].num_buckets == 2 * nb_mid
+    assert int(ob.tree_nb[hot_lt]) == 2 * nb_mid
+    # ... and within the owner, only the hot tree's segment changed
+    assert (np.delete(ob.tree_nb, hot_lt)
+            == np.delete(nb_before[owner], hot_lt)).all()
+    for lt, s in cold_snap.items():
+        cur = tuple(
+            arr[int(ob.bucket_offsets[lt]):int(ob.bucket_offsets[lt + 1])]
+            .tobytes() for arr in (ob.fingerprints, ob.heads,
+                                   ob.stored_hash))
+        assert cur == s, f"cold tree {lt} of the owner mutated"
 
     # expand + churn touched ONLY the owner: everyone else byte-equal
     for d in others:
         cur = tuple(getattr(sbank.banks[d], f).tobytes() for f in TABLES)
         assert cur == snap[d], f"non-owning shard {d} mutated"
-        assert sbank.banks[d].num_buckets == nb_before[d]
+        assert np.array_equal(sbank.banks[d].tree_nb, nb_before[d])
 
     # maintained sharded bank == from-scratch sharded build (answers)
     live = {}
@@ -238,10 +258,11 @@ def test_sharded_maintenance_shard_local_churn():
             sorted(fresh.locate(t, name)) == sorted(nl), (t, name)
     assert not sbank.contains(hot, int(hashing.entity_hash(f"e{hot}_0")))
 
-    # device lookup on the heterogeneous-NB sharded bank: per-shard
-    # reference (each shard probed at its own NB) matches bit-identically
+    # device lookup on the heterogeneous per-tree-nb sharded bank:
+    # per-shard ragged reference (each shard's own arena + offsets table)
+    # matches bit-identically
     state = stage_sharded_bank(sbank, forest, mesh, "model")
-    assert state.uniform_nb is None
+    assert len(set(sbank.tree_nb_map().tolist())) > 1  # really ragged now
     qt = np.asarray([t for t, _ in ks], np.int32)
     qh = rh
     got = sharded_lookup_bank(state, jnp.asarray(qt), jnp.asarray(qh))
@@ -255,10 +276,11 @@ def test_sharded_maintenance_shard_local_churn():
         b = sbank.banks[d]
         occ = b.fingerprints != hashing.EMPTY_FP
         heads_m = np.where(occ, b.heads + np.int32(base[d]), -1)
-        ref = lookup_batch_bank(jnp.asarray(b.fingerprints),
-                                jnp.asarray(heads_m),
-                                jnp.asarray(local_of[qt[sel]]),
-                                jnp.asarray(qh[sel]))
+        ref = lookup_batch_ragged(
+            jnp.asarray(b.fingerprints), jnp.asarray(heads_m),
+            jnp.asarray(b.bucket_offsets.astype(np.int32)),
+            jnp.asarray(b.tree_nb),
+            jnp.asarray(local_of[qt[sel]]), jnp.asarray(qh[sel]))
         for f in ("hit", "head", "bucket", "slot"):
             np.testing.assert_array_equal(
                 np.asarray(getattr(ref, f)),
@@ -288,7 +310,8 @@ def test_sharded_temperature_absorb_no_double_count():
     forest = build_forest(trees)
     bank = build_bank(forest)
     sbank = bank.shard(D)
-    assert sbank.trees_per_shard * D > T, "need padding for this test"
+    assert sbank.arena_rows_per_shard * D > sbank.total_buckets, \
+        "need packed-arena padding for this test"
     eng = ShardedMaintenanceEngine(sbank)
     mesh = jax.make_mesh((D,), ("model",))
     state = stage_sharded_bank(sbank, forest, mesh, "model")
@@ -320,12 +343,66 @@ def test_sharded_temperature_absorb_no_double_count():
         if rep.changed:           # sort may have fired: restage
             state = stage_sharded_bank(sbank, forest, mesh, "model")
     # per-tree pinning: each tree absorbed exactly 2 * its query hits
-    items = sbank.num_items
     for t in range(T):
         d, lt = sbank.owner(t)
-        tree_total = int(sbank.banks[d].temperature[lt].sum())
+        b = sbank.banks[d]
+        lo, hi = int(b.bucket_offsets[lt]), int(b.bucket_offsets[lt + 1])
+        tree_total = int(b.temperature[lo:hi].sum())
         assert tree_total == 2 * 8, (t, tree_total)
     print("sharded temperature absorb OK")
+    """)
+
+
+def test_all_to_all_capacity_factor():
+    """capacity_factor < 1.0 shrinks the routed exchange buffer: balanced
+    loads answer bit-identically through the smaller buffer, and an
+    adversarial batch (every query to one shard) raises the explicit
+    overflow check instead of silently dropping queries."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import (build_forest, build_bank, routing_capacity,
+                            sharded_lookup_bank, sharded_retrieve_device,
+                            stage_sharded_bank)
+    from repro.core import hashing
+
+    T, D = 32, 8
+    trees = [[(f"r{t}", f"e{t}_{i}") for i in range(6)] for t in range(T)]
+    forest = build_forest(trees)
+    bank = build_bank(forest)
+    sbank = bank.shard(D)
+    mesh = jax.make_mesh((D,), ("model",))
+    state = stage_sharded_bank(sbank, forest, mesh, "model")
+
+    # balanced: round-robin trees -> per-(src, dst) load is B/(D*D)
+    qt = (np.arange(128) % T).astype(np.int32)
+    qh = np.asarray([int(hashing.entity_hash(f"e{t}_0")) for t in qt],
+                    np.uint32)
+    full = sharded_lookup_bank(state, jnp.asarray(qt), jnp.asarray(qh))
+    half = sharded_lookup_bank(state, jnp.asarray(qt), jnp.asarray(qh),
+                               capacity_factor=0.5)
+    for f in ("hit", "head", "bucket", "slot"):
+        np.testing.assert_array_equal(np.asarray(getattr(full, f)),
+                                      np.asarray(getattr(half, f)),
+                                      err_msg=f"capacity_factor {f}")
+    assert bool(np.asarray(half.hit).all())
+    # the shrunken buffer is real: capacity < worst-case local batch
+    cap = routing_capacity(state, qt, 0.5)
+    assert cap < 128 // D, cap
+
+    # retrieve path threads the factor too
+    out = sharded_retrieve_device(state, jnp.asarray(qh), jnp.asarray(qt),
+                                  capacity_factor=0.5)
+    assert bool(np.asarray(out.hit).all())
+
+    # adversarial: every query to shard 0's trees -> loud overflow
+    qt_bad = np.zeros(64, np.int32)
+    try:
+        sharded_lookup_bank(state, jnp.asarray(qt_bad),
+                            jnp.asarray(qh[:64]), capacity_factor=0.25)
+        raise SystemExit("overflow must raise")
+    except ValueError as e:
+        assert "capacity overflow" in str(e)
+    print("all-to-all capacity factor OK")
     """)
 
 

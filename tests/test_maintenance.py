@@ -10,7 +10,7 @@ except ImportError:                                  # offline container
 
 from repro.core import (CFTDeviceState, MaintenanceEngine, build_bank,
                         build_bank_from_rows, build_forest, retrieve_device,
-                        sort_buckets_bank)
+                        sort_buckets_arena)
 from repro.core import hashing
 
 
@@ -75,17 +75,18 @@ def test_replace_semantics():
     eng.insert(t, h, [1, 2], entity_id=e)
     hit, row, eid = bank.lookup(t, h)
     assert hit and bank.walk_row(row) == [1, 2]
-    occ = bank.stored_hash[t] == np.uint32(h)
-    occ &= bank.fingerprints[t] != hashing.EMPTY_FP
+    lo, hi = bank.segment(t)
+    occ = bank.stored_hash[lo:hi] == np.uint32(h)
+    occ &= bank.fingerprints[lo:hi] != hashing.EMPTY_FP
     assert int(occ.sum()) == 1                 # exactly one slot holds it
 
 
 def test_expand_preserves_memberships_and_temperature():
     forest, bank, eng, hashes = _setup(num_trees=4, entities_per_tree=12)
     bank.temperature[bank.fingerprints != hashing.EMPTY_FP] = 7
-    nb0 = bank.num_buckets
+    nb0 = bank.tree_nb.copy()
     eng.expand()
-    assert bank.num_buckets == 2 * nb0
+    assert np.array_equal(bank.tree_nb, 2 * nb0)
     for r in range(bank.num_rows):
         t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
         hit, row, eid = bank.lookup(t, int(hashes[e]))
@@ -95,17 +96,28 @@ def test_expand_preserves_memberships_and_temperature():
 
 
 def test_overload_triggers_expand():
-    """Inserts past the load threshold restage the bank at a bigger NB
-    (the single-tree expand policy: shared NB doubles bank-wide)."""
+    """Inserts past the load threshold restage ONLY the overflowing tree's
+    arena segment at a bigger nb — every other tree's bucket count (and
+    segment bytes) stay untouched (the ragged tree-local expand policy)."""
     forest, bank, eng, hashes = _setup(num_trees=4, entities_per_tree=12)
-    nb0 = bank.num_buckets
-    cap = nb0 * bank.slots
+    nb0 = bank.tree_nb.copy()
+    cap = int(nb0[1]) * bank.slots
     extra = int(cap - bank.num_items[1] + 4)   # push tree 1 over
+    snaps = {t: tuple(arr[slice(*bank.segment(t))].tobytes()
+                      for arr in (bank.fingerprints, bank.heads,
+                                  bank.stored_hash))
+             for t in (0, 2, 3)}
     for i in range(extra):
         eng.queue_insert(1, int(hashing.entity_hash(f"stuffing {i}")), [i])
     eng.apply()
-    assert bank.num_buckets > nb0
+    assert bank.tree_nb[1] > nb0[1]
+    assert (np.delete(bank.tree_nb, 1) == np.delete(nb0, 1)).all()
     assert eng.stats["expansions"] >= 1
+    for t, snap in snaps.items():              # other segments byte-equal
+        cur = tuple(arr[slice(*bank.segment(t))].tobytes()
+                    for arr in (bank.fingerprints, bank.heads,
+                                bank.stored_hash))
+        assert cur == snap, t
     for i in range(extra):
         h = int(hashing.entity_hash(f"stuffing {i}"))
         hit, row, _ = bank.lookup(1, h)
@@ -151,21 +163,21 @@ def test_sort_trigger_policy_and_host_device_agreement():
     forest, bank, eng, hashes = _setup(sort_threshold=8)
     # heat a few slots, below threshold: no sort
     occ = np.argwhere(bank.fingerprints != hashing.EMPTY_FP)
-    t0, b0, s0 = occ[len(occ) // 2]
-    bank.temperature[t0, b0, s0] = 50
+    r0, s0 = occ[len(occ) // 2]
+    bank.temperature[r0, s0] = 50
     eng.bumps_since_sort = 4
     assert not eng.maybe_sort()
     eng.bumps_since_sort = 9                   # past threshold: sorts
-    # device sort of the same tables must agree with the host sort
-    f, tt, hd = sort_buckets_bank(jnp.asarray(bank.fingerprints),
-                                  jnp.asarray(bank.temperature),
-                                  jnp.asarray(bank.heads))
+    # device sort of the same arena must agree with the host sort
+    f, tt, hd = sort_buckets_arena(jnp.asarray(bank.fingerprints),
+                                   jnp.asarray(bank.temperature),
+                                   jnp.asarray(bank.heads))
     assert eng.maybe_sort()
     assert eng.bumps_since_sort == 0
     np.testing.assert_array_equal(np.asarray(f), bank.fingerprints)
     np.testing.assert_array_equal(np.asarray(tt), bank.temperature)
     np.testing.assert_array_equal(np.asarray(hd), bank.heads)
-    assert bank.temperature[t0, b0, 0] == 50   # hot slot floated to 0
+    assert bank.temperature[r0, 0] == 50       # hot slot floated to 0
     # membership survives the reorder
     for r in range(bank.num_rows):
         t, e = int(bank.row_tree[r]), int(bank.row_entity[r])

@@ -67,12 +67,15 @@ def test_shard_merged_tables_match_original():
     # fingerprint/temperature slot layout is sliced, never rebuilt
     np.testing.assert_array_equal(mf, bank.fingerprints)
     np.testing.assert_array_equal(mt, bank.temperature)
+    moff, mnb = sbank.merged_layout()
+    np.testing.assert_array_equal(moff, bank.bucket_offsets)
+    np.testing.assert_array_equal(mnb, bank.tree_nb)
     # heads are renumbered (merged rows) but walk to identical node lists
     occ = mf != hashing.EMPTY_FP
     assert (mh[occ] >= 0).all()
-    for t, b, s in zip(*np.nonzero(occ)):
-        assert sbank.walk_row(int(mh[t, b, s])) == \
-            bank.walk_row(int(bank.heads[t, b, s]))
+    for r, s in zip(*np.nonzero(occ)):
+        assert sbank.walk_row(int(mh[r, s])) == \
+            bank.walk_row(int(bank.heads[r, s]))
     assert (mh[~occ] == NULL).all()
 
 
@@ -99,18 +102,19 @@ def test_shard_bad_partitions_rejected():
 
 
 def test_packed_tables_geometry_and_padding():
-    _, bank = _bank(num_trees=10)                  # ragged over 4 shards
+    _, bank = _bank(num_trees=10)                  # uneven over 4 shards
     sbank = bank.shard(4)
-    tp = sbank.trees_per_shard
+    ap = sbank.arena_rows_per_shard
+    assert 4 * ap > sbank.total_buckets            # padding really exists
     fps, temp, heads = sbank.packed_tables()
-    assert fps.shape == (4 * tp, sbank.max_buckets, sbank.slots)
+    assert fps.shape == (4 * ap, sbank.slots)
     for d, b in enumerate(sbank.banks):
-        blk = fps[d * tp:(d + 1) * tp]
-        np.testing.assert_array_equal(blk[:b.num_trees, :b.num_buckets],
+        blk = fps[d * ap:(d + 1) * ap]
+        np.testing.assert_array_equal(blk[:b.total_buckets],
                                       b.fingerprints)
-        # padding trees/buckets hold only empty fingerprints
-        assert (blk[b.num_trees:] == hashing.EMPTY_FP).all()
-        assert (heads[d * tp + b.num_trees:(d + 1) * tp] == NULL).all()
+        # padding rows hold only empty fingerprints / NULL heads
+        assert (blk[b.total_buckets:] == hashing.EMPTY_FP).all()
+        assert (heads[d * ap + b.total_buckets:(d + 1) * ap] == NULL).all()
 
 
 # ----------------------------------------------------------- maintenance
@@ -143,12 +147,18 @@ def test_sharded_expand_tree_owner_only():
     sbank = bank.shard(4)
     eng = ShardedMaintenanceEngine(sbank)
     hot = 2
-    owner, _ = sbank.owner(hot)
-    nb0 = [b.num_buckets for b in sbank.banks]
+    owner, lt = sbank.owner(hot)
+    nb0 = [b.tree_nb.copy() for b in sbank.banks]
     assert eng.expand_tree(hot, force=True)
     for d, b in enumerate(sbank.banks):
-        assert b.num_buckets == nb0[d] * (2 if d == owner else 1)
-    # answers survive the owner-local restage
+        if d == owner:
+            # only the hot TREE grew — even within the owning shard
+            assert b.tree_nb[lt] == 2 * nb0[d][lt]
+            assert (np.delete(b.tree_nb, lt)
+                    == np.delete(nb0[d], lt)).all()
+        else:
+            assert np.array_equal(b.tree_nb, nb0[d])
+    # answers survive the tree-local restage
     for i in range(10):
         assert sbank.locate(hot, f"e{hot}_{i}") == bank.locate(
             hot, f"e{hot}_{i}")
@@ -163,16 +173,17 @@ def test_absorb_temperature_per_shard_baselines():
     fps, temp, heads = sbank.packed_tables()
     # bump two slots on different shards + poison every padding slot: the
     # harvest must count only owner-block deltas
-    tp = sbank.trees_per_shard
+    ap = sbank.arena_rows_per_shard
     occ = fps != hashing.EMPTY_FP
-    t0, b0, s0 = map(int, next(zip(*np.nonzero(occ))))
-    temp[t0, b0, s0] += 3
-    hi = np.nonzero(occ)
-    t1, b1, s1 = (int(hi[0][-1]), int(hi[1][-1]), int(hi[2][-1]))
-    temp[t1, b1, s1] += 2
+    rows, slots = np.nonzero(occ)
+    r0, s0 = int(rows[0]), int(slots[0])           # first shard's block
+    temp[r0, s0] += 3
+    r1, s1 = int(rows[-1]), int(slots[-1])         # last shard's block
+    assert r0 // ap != r1 // ap                    # really two shards
+    temp[r1, s1] += 2
     in_block = np.zeros(fps.shape, bool)
     for d, b in enumerate(sbank.banks):
-        in_block[d * tp:d * tp + b.num_trees, :b.num_buckets] = True
+        in_block[d * ap:d * ap + b.total_buckets] = True
     temp[~in_block] += 100                         # must be ignored
     assert eng.absorb(temp) == 5
     assert sum(int(b.temperature.sum()) for b in sbank.banks) == 5
