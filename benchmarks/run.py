@@ -9,8 +9,8 @@ from __future__ import annotations
 import sys
 
 from . import (bench_bank, bench_churn, bench_fig5, bench_filter,
-               bench_kernels, bench_ragged, bench_serving, bench_table1,
-               bench_table2)
+               bench_kernels, bench_pause, bench_ragged, bench_serving,
+               bench_table1, bench_table2)
 
 
 def main() -> None:
@@ -122,6 +122,21 @@ def main() -> None:
                     0.0, r["bytes_fraction"]))
         csv.append((f"ragged/trees{r['trees']}/expand",
                     r["expand_tree_ms"] * 1e3, r["expand_speedup"]))
+
+    rows = bench_pause.run(
+        num_trees=96 if smoke else 192,
+        entities_per_tree=24 if smoke else 48,
+        cycles=3 if smoke else 5, batches_per_cycle=4,
+        batch=96 if smoke else 160, use_mesh=False)
+    print("\n== Zero-pause maintenance: sync vs double-buffered "
+          "restage ==")
+    bench_pause.print_rows(rows)
+    for r in rows:
+        assert r["equal"], "splice commit diverged from full restage"
+        csv.append((f"pause/{r['layout']}/sync", r["sync_max_pause_ms"]
+                    * 1e3, 1.0))
+        csv.append((f"pause/{r['layout']}/double_buffered",
+                    r["db_max_pause_ms"] * 1e3, r["pause_reduction"]))
 
     print("\n== Kernel microbenchmarks (vs jnp oracle) ==")
     for name, work, derived in bench_kernels.run():

@@ -1,6 +1,7 @@
 """CFT-RAG core: improved cuckoo filter + entity-tree retrieval."""
 from .bank import (FilterBank, ShardedBank, build_bank,
-                   build_bank_from_rows, plan_partition)
+                   build_bank_from_rows, plan_partition, splice_arena_rows,
+                   splice_arena_segment)
 from .baselines import BloomTRAG, BloomTRAG2, NaiveTRAG
 from .blocklist import BlockListArena, BlockListBuilder, CSRArena, build_csr
 from .context import (EntityContext, context_from_arena, context_from_csr,
@@ -13,22 +14,27 @@ from .lookup import (LookupResult, bump_temperature, bump_temperature_arena,
                      lookup_batch_trees, sort_buckets, sort_buckets_arena,
                      sort_buckets_bank)
 from .maintenance import (BankDelta, MaintenanceEngine, MaintenanceReport,
-                          ShardedMaintenanceEngine)
+                          PendingRestage, PendingShardedRestage,
+                          ShardedMaintenanceEngine, commit_restage,
+                          warm_restage)
 from .trag import (CFTRAG, CFTDeviceState, DeviceRetrieval, build_retriever,
                    gather_context, retrieve_device)
-from .distributed import (ShardedBankState, routing_capacity, shard_bank,
-                          sharded_lookup, sharded_lookup_bank,
-                          sharded_retrieve_device, shard_filter_tables,
+from .distributed import (ShardedBankState, routing_counts, shard_bank,
+                          sharded_apply_delta, sharded_lookup,
+                          sharded_lookup_bank, sharded_retrieve_device,
+                          sharded_splice_segment, shard_filter_tables,
                           stage_sharded_bank)
 from .tree import EntityForest, build_forest
 
 __all__ = [
     "FilterBank", "ShardedBank", "build_bank", "build_bank_from_rows",
-    "plan_partition",
+    "plan_partition", "splice_arena_rows", "splice_arena_segment",
     "BankDelta", "MaintenanceEngine", "MaintenanceReport",
-    "ShardedMaintenanceEngine",
-    "ShardedBankState", "routing_capacity", "shard_bank", "sharded_lookup",
-    "sharded_lookup_bank", "sharded_retrieve_device",
+    "PendingRestage", "PendingShardedRestage", "ShardedMaintenanceEngine",
+    "commit_restage", "warm_restage",
+    "ShardedBankState", "routing_counts", "shard_bank",
+    "sharded_apply_delta", "sharded_lookup", "sharded_lookup_bank",
+    "sharded_retrieve_device", "sharded_splice_segment",
     "shard_filter_tables", "stage_sharded_bank", "gather_context",
     "BloomTRAG", "BloomTRAG2", "NaiveTRAG",
     "BlockListArena", "BlockListBuilder", "CSRArena", "build_csr",

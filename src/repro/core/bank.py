@@ -31,8 +31,11 @@ locations inside the queried tree — no cross-tree leakage by construction.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import hashing
@@ -435,15 +438,21 @@ class ShardedBank:
         return self.banks[d].walk_row(int(row - base[d]))
 
     # -------------------------------------------------------------- device
-    def packed_tables(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def packed_tables(self, arena_rows: Optional[int] = None
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Device-ready packed (fingerprints, temperature, heads).
 
         Shape ``(D * Apad, S)`` with ``Apad = arena_rows_per_shard``:
         shard d's arena occupies rows ``[d*Apad, d*Apad + A_d)``; padding
         rows hold empty fingerprints (never match).  Head payloads are
         merged row ids (``shard_row_base`` offsets applied).
+
+        ``arena_rows`` raises ``Apad`` above the tight minimum — the
+        in-place splice commit cannot shrink a live state's padding, so
+        equivalence checks against such a state repack at its block size.
         """
         d, ap, s = self.num_shards, self.arena_rows_per_shard, self.slots
+        ap = max(ap, int(arena_rows or 0))
         fps = np.full((d * ap, s), hashing.EMPTY_FP, np.uint32)
         temp = np.zeros((d * ap, s), np.int32)
         heads = np.full((d * ap, s), NULL, np.int32)
@@ -495,13 +504,19 @@ class ShardedBank:
         """Slice a packed ``(D*Apad, S)`` device temperature into per-shard
         owner blocks ``(A_d, S)`` — padding rows are excluded, so each
         slot's bumps are harvested exactly once, against the owning shard's
-        baseline only."""
+        baseline only.  The device ``Apad`` may exceed the host's tight
+        minimum (the in-place splice commit never shrinks a live state's
+        padding after a tree shrink); any block size that still fits every
+        shard's arena slices identically."""
         temp = np.asarray(getattr(packed, "temperature", packed), np.int32)
         d, ap = self.num_shards, self.arena_rows_per_shard
-        want = (d * ap, self.slots)
-        if temp.shape != want:
-            raise ValueError(f"packed temperature shape {temp.shape} != "
-                             f"{want} (stale sharded layout?)")
+        ok = (temp.ndim == 2 and temp.shape[1] == self.slots
+              and temp.shape[0] % d == 0 and temp.shape[0] // d >= ap)
+        if not ok:
+            raise ValueError(f"packed temperature shape {temp.shape} "
+                             f"incompatible with {d} shards of >= {ap} "
+                             f"arena rows (stale sharded layout?)")
+        ap = temp.shape[0] // d
         return [temp[k * ap:k * ap + b.total_buckets]
                 for k, b in enumerate(self.banks)]
 
@@ -516,6 +531,42 @@ class ShardedBank:
     def sort_buckets(self) -> None:
         for b in self.banks:
             b.sort_buckets()
+
+
+# ------------------------------------------------- device-side splice ops
+#
+# The donated-buffer update ops of the double-buffered restage: a
+# maintenance cycle that touched K arena rows commits as one in-place
+# scatter of K staged rows (plus, after a tree resize, one segment splice)
+# instead of re-staging the whole arena.  Donation makes the scatter
+# in-place on backends that support it (TPU/GPU); elsewhere XLA falls back
+# to a copy — semantics are identical either way, but the *old* buffers
+# are invalidated, so callers must drop the pre-commit state.
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def splice_arena_rows(fps, temp, heads, rows, vf, vt, vh):
+    """In-place donated scatter of staged rows into the live ``(A, S)``
+    arena tables: ``rows`` is sentinel-padded (sentinel = A, out of
+    bounds, dropped), the value tables carry the new row contents.  O(K)
+    device work, O(K) host→device bytes."""
+    return (fps.at[rows].set(vf, mode="drop"),
+            temp.at[rows].set(vt, mode="drop"),
+            heads.at[rows].set(vh, mode="drop"))
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi"))
+def splice_arena_segment(fps, temp, heads, seg_f, seg_t, seg_h,
+                         lo: int, hi: int):
+    """Device-side segment splice: replace arena rows ``[lo, hi)`` with
+    the staged segment (possibly of a different length — ``expand_tree``
+    doubles it, ``shrink_tree`` halves it), leaving every other row's
+    bytes untouched.  Only the new segment crosses the host→device link;
+    the surrounding rows move at device bandwidth.  ``lo``/``hi`` are
+    static (a resize changes the output shape — which is also why these
+    buffers are not donated), so commits recompile per geometry — tree
+    resizes are rare by design."""
+    cat = lambda a, s: jnp.concatenate([a[:lo], s, a[hi:]])   # noqa: E731
+    return cat(fps, seg_f), cat(temp, seg_t), cat(heads, seg_h)
 
 
 # ------------------------------------------------------------------- build

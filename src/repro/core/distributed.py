@@ -13,7 +13,8 @@ instead of the data being everywhere:
 2. queries bucket by destination and exchange once with
    ``jax.lax.all_to_all`` inside ``shard_map`` (no full-bank broadcast) —
    the receive buffer is worst-case sized by default, or shrunk with a
-   ``capacity_factor`` (explicit eager overflow check);
+   ``capacity_factor`` (two-pass: a tiny count exchange first, the factor
+   as fast path when the measured counts fit, adaptive growth when not);
 3. every shard probes only its own **packed ragged arena block**
    ``(Apad, S)`` — per-tree routing reads each query's arena segment start
    and bucket mask from the replicated per-tree offsets table (the
@@ -71,12 +72,12 @@ def _bucket_queries(dest: jax.Array, num_shards: int, capacity: int,
 
     ``dest``: (Bl,) destination shard per local query.  ``capacity`` C
     defaults to Bl upstream (the degenerate case routes every local query
-    to one shard, so nothing can overflow); a smaller C (capacity_factor)
-    is guarded by an eager host-side overflow check before dispatch —
-    in-kernel the scatter drops out-of-capacity lanes rather than
-    corrupting memory.  Returns each query's slot ``rank`` within its
-    bucket — the return address for ``_route_back`` — plus one ``(D, C)``
-    buffer per (payload, fill) pair.
+    to one shard, so nothing can overflow); a smaller C comes from the
+    two-pass count exchange (``_pick_capacity``), which sizes it from the
+    batch's actual per-pair maximum — in-kernel the scatter still drops
+    out-of-capacity lanes rather than corrupting memory.  Returns each
+    query's slot ``rank`` within its bucket — the return address for
+    ``_route_back`` — plus one ``(D, C)`` buffer per (payload, fill) pair.
     """
     bl = dest.shape[0]
     order = jnp.argsort(dest)                       # stable
@@ -185,15 +186,19 @@ class ShardedBankState:
 
 
 def stage_sharded_bank(sbank: ShardedBank, forest: EntityForest,
-                       mesh: Mesh, axis: str = "model") -> ShardedBankState:
+                       mesh: Mesh, axis: str = "model",
+                       arena_rows: Optional[int] = None
+                       ) -> ShardedBankState:
     """Place a host :class:`ShardedBank` on the mesh as a
     :class:`ShardedBankState` (packed arena blocks sharded over ``axis``,
-    routing/CSR/forest replicated)."""
+    routing/CSR/forest replicated).  ``arena_rows`` forces a larger
+    per-shard block than the tight minimum — used to compare against a
+    live state whose padding an in-place commit could not shrink."""
     d = int(mesh.shape[axis])
     if d != sbank.num_shards:
         raise ValueError(f"bank has {sbank.num_shards} shards but mesh "
                          f"axis '{axis}' has {d} devices")
-    fps, temp, heads = sbank.packed_tables()
+    fps, temp, heads = sbank.packed_tables(arena_rows=arena_rows)
     csr_off, csr_nodes = sbank.merged_csr()
     blk = NamedSharding(mesh, P(axis, None))
     rep = NamedSharding(mesh, P())
@@ -223,6 +228,78 @@ def shard_bank(bank: FilterBank, forest: EntityForest, mesh: Mesh,
     sbank = bank.shard(num_shards=int(mesh.shape[axis]),
                        tree_starts=tree_starts)
     return sbank, stage_sharded_bank(sbank, forest, mesh, axis)
+
+
+# ----------------------------------------------- incremental arena update
+#
+# The donated-buffer commit ops of the double-buffered restage
+# (``repro.core.maintenance.commit_restage``): a maintenance cycle writes
+# its delta straight into the live packed arena — only the owning shard's
+# rows are touched, every non-owner block comes out byte-identical, and
+# the whole update moves O(changed rows) host→device bytes instead of a
+# shard repack.  Donation keeps the scatter in-place where the backend
+# supports it; the pre-commit arrays are invalid either way.
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis"),
+                   donate_argnums=(0, 1, 2))
+def sharded_apply_delta(fps: jax.Array, temp: jax.Array, heads: jax.Array,
+                        rows: jax.Array, vf: jax.Array, vt: jax.Array,
+                        vh: jax.Array, shift: jax.Array,
+                        mesh: Mesh, axis: str):
+    """Per-shard in-place row scatter + merged-head-numbering shift.
+
+    ``rows``/``v*`` are stacked per-shard payloads ``(D, Kpad[, S])`` in
+    *local block* coordinates (sentinel rows land out of bounds and are
+    dropped — a shard with no changes gets an all-sentinel lane);
+    ``shift`` is the per-shard merged CSR row-id delta (an insert into
+    shard d renumbers every later shard's merged rows — applied here as
+    an elementwise add over occupied slots, zero host→device bytes).
+    """
+    def local(f, t, h, r, lf, lt, lh, s):
+        h = jnp.where(h != NULL, h + s[0], h)
+        r0 = r[0]
+        return (f.at[r0].set(lf[0], mode="drop"),
+                t.at[r0].set(lt[0], mode="drop"),
+                h.at[r0].set(lh[0], mode="drop"))
+
+    blk = P(axis, None)
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(blk, blk, blk, blk, P(axis, None, None),
+                              P(axis, None, None), P(axis, None, None),
+                              P(axis)),
+                    out_specs=(blk, blk, blk), check_rep=False)
+    return fn(fps, temp, heads, rows, vf, vt, vh, shift)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis"),
+                   donate_argnums=(0, 1, 2))
+def sharded_splice_segment(fps: jax.Array, temp: jax.Array,
+                           heads: jax.Array, seg_f: jax.Array,
+                           seg_t: jax.Array, seg_h: jax.Array,
+                           owner: jax.Array, start: jax.Array,
+                           mesh: Mesh, axis: str):
+    """Owner-local segment splice via ``dynamic_update_slice`` inside
+    ``shard_map``: the staged segment (the resized tree plus the shifted
+    later trees of the same shard, padded with empty rows when a shrink
+    leaves a stale tail) lands at ``start`` of the owning shard's packed
+    block; every other shard returns its block untouched.  ``owner`` and
+    ``start`` are traced scalars, so repeated splices at different
+    positions reuse one compilation per segment length."""
+    def local(f, t, h, sf, st, sh, ow, st0):
+        me = jax.lax.axis_index(axis)
+
+        def splice(_):
+            dus = lambda a, s: jax.lax.dynamic_update_slice(  # noqa: E731
+                a, s, (st0, jnp.int32(0)))
+            return dus(f, sf), dus(t, st), dus(h, sh)
+
+        return jax.lax.cond(me == ow, splice, lambda _: (f, t, h), None)
+
+    blk = P(axis, None)
+    fn = _shard_map(local, mesh=mesh,
+                    in_specs=(blk, blk, blk, P(), P(), P(), P(), P()),
+                    out_specs=(blk, blk, blk), check_rep=False)
+    return fn(fps, temp, heads, seg_f, seg_t, seg_h, owner, start)
 
 
 # ------------------------------------------------------- bank-axis lookup
@@ -305,41 +382,66 @@ def _lookup_core(state: ShardedBankState, tree_ids: jax.Array,
                         bucket=res.bucket[:b], slot=res.slot[:b]), temp
 
 
-def routing_capacity(state: ShardedBankState, tree_ids,
-                     capacity_factor: Optional[float]) -> Optional[int]:
-    """Static per-(source, dest) receive capacity for the routed
-    all-to-all, with an **explicit eager overflow check**.
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "num_shards",
+                                             "num_trees"))
+def _routing_counts_jit(tree_shard: jax.Array, tid: jax.Array, mesh: Mesh,
+                        axis: str, num_shards: int, num_trees: int):
+    """First pass of the two-pass capacity protocol: each shard counts
+    its outgoing queries per destination and one tiny ``all_to_all``
+    exchanges the per-pair counts — O(D²) ints instead of the payload."""
+    pad = (-tid.shape[0]) % num_shards
+    tid = jnp.pad(tid.astype(jnp.int32), (0, pad), constant_values=NULL)
 
-    ``None`` keeps the worst-case buffer (every local query to one shard:
-    C = Bl, can never overflow).  A factor ``f`` shrinks the buffer to
-    ``ceil(f * Bl)`` — cutting exchange bytes ~D-fold for balanced loads
-    at f ~ 1/D — and this helper verifies against the *actual* routing of
-    this batch that no (source shard, dest shard) pair exceeds it, raising
-    before any device dispatch instead of silently dropping queries.
+    def local(ts, tl):
+        tq = jnp.clip(tl, 0, num_trees - 1)
+        valid = (tl >= 0) & (tl < num_trees)
+        # invalid/pad queries route to shard 0 and occupy buffer slots,
+        # exactly as in the payload exchange — count them too
+        dest = jnp.where(valid, ts[tq], 0).astype(jnp.int32)
+        counts = jnp.zeros((num_shards,), jnp.int32).at[dest].add(1)
+        recv = _exchange(counts.reshape(num_shards, 1), axis)
+        return recv.reshape(1, num_shards)
+
+    fn = _shard_map(local, mesh=mesh, in_specs=(P(), P(axis)),
+                    out_specs=P(axis, None), check_rep=False)
+    return fn(tree_shard, tid)
+
+
+def routing_counts(state: ShardedBankState, tree_ids) -> np.ndarray:
+    """(D, D) routed-query counts of this batch — entry ``[dst, src]`` is
+    how many of source shard ``src``'s local queries (pad slots included)
+    land on shard ``dst``.  Padding and counting both run device-side;
+    the only host transfer is the O(D²) count readback that sizes the
+    payload buffer."""
+    tid = jnp.asarray(tree_ids).reshape(-1)
+    return np.asarray(_routing_counts_jit(
+        state.tree_shard, tid, state.mesh, state.axis, state.num_shards,
+        state.num_trees))
+
+
+def _pick_capacity(state: ShardedBankState, tree_ids,
+                   capacity_factor: Optional[float]) -> Optional[int]:
+    """Two-pass adaptive receive capacity for the routed all-to-all.
+
+    ``None`` keeps the worst-case buffer (C = Bl: every local query to
+    one shard — no count pass, can never overflow).  With a factor ``f``,
+    the count exchange measures the batch's actual per-pair maximum:
+    when it fits ``ceil(f·Bl)`` the factor-derived capacity is used (the
+    fast path — a batch-independent static shape, so steady traffic
+    never recompiles); when it would overflow, the buffer grows to the
+    measured maximum instead (rounded up to a power of two to bound
+    recompiles), replacing the old eager host-side pre-check that raised.
     """
     if capacity_factor is None:
         return None
     d = state.num_shards
-    tid = np.asarray(tree_ids, np.int64).ravel()
-    b = tid.shape[0]
+    b = int(jnp.asarray(tree_ids).size)    # shape metadata, no transfer
     bl = -(-b // d)
-    cap = max(1, int(np.ceil(bl * float(capacity_factor))))
-    t = int(state.tree_shard.shape[0])
-    shard_of = np.asarray(state.tree_shard)
-    valid = (tid >= 0) & (tid < t)
-    dest = np.where(valid, shard_of[np.clip(tid, 0, t - 1)], 0)
-    dest_p = np.zeros(bl * d, np.int64)       # pad queries route to shard 0
-    dest_p[:b] = dest
-    worst = max(int(np.bincount(dest_p[s * bl:(s + 1) * bl],
-                                minlength=d).max())
-                for s in range(d))
-    if worst > cap:
-        raise ValueError(
-            f"all-to-all capacity overflow: one (source, dest) shard pair "
-            f"routes {worst} queries but capacity_factor="
-            f"{capacity_factor} sizes the buffer at {cap}; raise the "
-            f"factor (or pass None for worst-case sizing)")
-    return cap
+    fast = min(bl, max(1, int(np.ceil(bl * float(capacity_factor)))))
+    worst = int(routing_counts(state, tree_ids).max())
+    if worst <= fast:
+        return fast
+    return min(bl, 1 << int(np.ceil(np.log2(max(1, worst)))))
 
 
 @functools.partial(jax.jit, static_argnames=("lookup_fn", "capacity"))
@@ -363,11 +465,14 @@ def sharded_lookup_bank(state: ShardedBankState, tree_ids: jax.Array,
     ``repro.kernels.cuckoo_lookup.cuckoo_lookup_arena_auto``) — usable
     regardless of heterogeneous per-tree bucket counts, since routing
     arrives per query.  ``capacity_factor`` shrinks the all-to-all
-    receive buffer below the worst case (see :func:`routing_capacity`;
-    eager overflow check).  Pure: temperature is not bumped (use
+    receive buffer below the worst case via the two-pass count exchange
+    (see :func:`_pick_capacity`: the factor is the fast path when the
+    batch's measured per-pair counts fit, and the buffer adapts to the
+    actual maximum when they don't — no overflow, no eager host
+    pre-check).  Pure: temperature is not bumped (use
     :func:`sharded_retrieve_device` for serving).
     """
-    capacity = routing_capacity(state, tree_ids, capacity_factor)
+    capacity = _pick_capacity(state, tree_ids, capacity_factor)
     return _sharded_lookup_jit(state, tree_ids, h, lookup_fn=lookup_fn,
                                capacity=capacity)
 
@@ -404,7 +509,7 @@ def sharded_retrieve_device(state: ShardedBankState,
     """
     if query_trees is None:
         query_trees = jnp.zeros(query_hashes.shape, jnp.int32)
-    capacity = routing_capacity(state, query_trees, capacity_factor)
+    capacity = _pick_capacity(state, query_trees, capacity_factor)
     return _sharded_retrieve_jit(state, query_hashes, query_trees,
                                  max_locs=max_locs, n=n,
                                  lookup_fn=lookup_fn, capacity=capacity)

@@ -30,20 +30,42 @@ policy (``sort_threshold`` new bumps) schedules the idle-time adaptive sort
 migrate to slot 0 and resolve on the first probe.
 
 ``maintain()`` is the serving engine's idle-time hook: absorb → apply
-pending delta → compact if worthwhile → sort if hot enough, returning a
-``MaintenanceReport`` whose ``changed`` flag tells the caller to restage
-its ``CFTDeviceState`` from the mutated bank.
+pending delta → compact if worthwhile → shrink a cold tree → sort if hot
+enough, returning a ``MaintenanceReport`` whose ``changed`` flag tells the
+caller to restage its ``CFTDeviceState`` from the mutated bank.
+
+**Zero-pause restage.**  The synchronous restage (``from_bank`` /
+``stage_sharded_bank`` after every changed cycle) re-ships the whole arena
+even when one delta touched a handful of slots.  The engine therefore
+keeps a *shadow* — a host copy of the content last staged to device — and
+``plan_restage()`` diffs the mutated bank against it, classifying the
+cycle as
+
+* **delta** (splice-only): geometry unchanged — stage only the changed
+  arena rows (plus any appended CSR rows) for an in-place donated scatter;
+* **segment**: exactly one tree's ``nb_t`` changed (``expand_tree`` /
+  ``shrink_tree``) — stage that tree's new segment for a device-side
+  splice, every other segment's bytes ride along untouched;
+* **full**: compaction (CSR renumbered) or multi-tree geometry change —
+  fall back to a from-scratch restage.
+
+``commit_restage(state, plan, engine, forest)`` applies the plan to a live
+``CFTDeviceState`` / ``ShardedBankState`` — the serving layer splits this
+into ``prepare_maintenance()`` (host planning + payload staging,
+overlappable with in-flight batches) and ``commit_maintenance()`` (the
+O(changed-bytes) splice + atomic state swap).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from . import hashing
-from .bank import FilterBank, ShardedBank, _scalar_insert, \
-    build_bank_from_rows
+from .bank import (DEFAULT_LOAD_TARGET, EMPTY_TREE_NB, FilterBank,
+                   ShardedBank, _pick_tree_buckets, _scalar_insert,
+                   build_bank_from_rows)
 from .cuckoo import (DEFAULT_LOAD_THRESHOLD, DEFAULT_MAX_KICKS, NULL,
                      bulk_place)
 
@@ -86,6 +108,7 @@ class MaintenanceReport:
     replaced: int = 0
     missed_deletes: int = 0
     expansions: int = 0
+    shrinks: int = 0
     compacted: bool = False
     sorted: bool = False
 
@@ -93,7 +116,95 @@ class MaintenanceReport:
     def changed(self) -> bool:
         """True when bank tables/CSR mutated — device state needs restage."""
         return bool(self.inserted or self.deleted or self.replaced
-                    or self.expansions or self.compacted or self.sorted)
+                    or self.expansions or self.shrinks or self.compacted
+                    or self.sorted)
+
+
+# ------------------------------------------------ double-buffered restage
+
+_SCATTER_PAD = 256      # scatter payloads round up to this (shape-stable jit)
+
+
+@dataclasses.dataclass
+class _Shadow:
+    """Host copy of the content last staged to device (the three staged
+    arena tables plus the geometry/CSR markers the planner diffs against).
+    ``compactions`` snapshots the engine's counter: a compaction renumbers
+    CSR rows, which no incremental splice can express."""
+    fingerprints: np.ndarray
+    temperature: np.ndarray
+    heads: np.ndarray
+    tree_nb: np.ndarray
+    bucket_offsets: np.ndarray
+    num_rows: int
+    compactions: int
+
+
+@dataclasses.dataclass
+class _HostPlan:
+    """Planner classification before payload staging (numpy only)."""
+    kind: str                                   # none | delta | segment | full
+    rows: Optional[np.ndarray] = None           # changed arena rows, new coords
+    seg: Optional[Tuple[int, int, int, int]] = None   # (tree, lo, hi_old, hi_new)
+    csr_appended: bool = False                  # CSR rows grew since staging
+
+
+@dataclasses.dataclass
+class PendingRestage:
+    """A staged incremental restage for a replicated ``CFTDeviceState``.
+
+    Produced by :meth:`MaintenanceEngine.plan_restage` (host diff against
+    the shadow + async payload staging via ``jnp.asarray``), consumed by
+    :func:`commit_restage`.  ``rows`` is sentinel-padded to a
+    ``_SCATTER_PAD`` multiple (sentinel = arena rows → dropped by the
+    scatter) so commit jit-compiles per payload *bucket*, not per cycle.
+    """
+    kind: str = "none"                  # none | delta | segment | full
+    rows: Optional[object] = None       # (Kpad,) int32 — changed arena rows
+    val_fps: Optional[object] = None    # (Kpad, S) staged row contents
+    val_temp: Optional[object] = None
+    val_heads: Optional[object] = None
+    changed_rows: int = 0               # true (unpadded) count
+    seg_tree: int = -1                  # segment splice: which tree resized
+    seg_lo: int = 0                     # arena rows [seg_lo, seg_hi_old) out,
+    seg_hi_old: int = 0                 # the staged segment in
+    seg_fps: Optional[object] = None    # (nb_new, S)
+    seg_temp: Optional[object] = None
+    seg_heads: Optional[object] = None
+    tree_nb: Optional[np.ndarray] = None          # new geometry (host)
+    bucket_offsets: Optional[np.ndarray] = None
+    csr_offsets: Optional[object] = None   # staged full CSR (replicated,
+    csr_nodes: Optional[object] = None     # O(rows) — None when unchanged)
+
+
+@dataclasses.dataclass
+class PendingShardedRestage:
+    """A staged incremental restage for a packed ``ShardedBankState``.
+
+    Per-shard scatter payloads are stacked ``(D, Kpad[, S])`` so one
+    ``shard_map`` applies every shard's delta at once (row sentinel is out
+    of every block's bounds → dropped); ``head_shift`` carries the merged
+    row-numbering shift per shard (an insert into shard d renumbers every
+    later shard's merged CSR rows — applied as an in-place elementwise
+    add, zero host→device bytes); ``segments`` lists owner-local
+    ``dynamic_update_slice`` splices for resized tree segments.  The
+    replicated routing tables / merged CSR restage wholesale when they
+    changed — they are O(T) / O(rows), not O(arena).
+    """
+    kind: str = "none"                  # none | splice | full
+    rows: Optional[object] = None       # (D, Kpad) int32 local block rows
+    val_fps: Optional[object] = None    # (D, Kpad, S)
+    val_temp: Optional[object] = None
+    val_heads: Optional[object] = None  # merged numbering (new bases)
+    head_shift: Optional[object] = None  # (D,) int32 or None when all-zero
+    segments: List[Tuple[int, int, object, object, object]] = \
+        dataclasses.field(default_factory=list)  # (owner, start, f, t, h)
+    new_arena_rows: Optional[List[int]] = None   # per-shard A_d after
+    tree_offset: Optional[object] = None   # replicated routing tables when
+    tree_nb: Optional[object] = None       # geometry changed (host arrays
+    csr_offsets: Optional[object] = None   # until warm places them on the
+    csr_nodes: Optional[object] = None     # mesh; merged CSR when rows grew)
+    changed_rows: int = 0
 
 
 _TABLES = ("fingerprints", "temperature", "heads", "entity_ids",
@@ -120,7 +231,8 @@ class MaintenanceEngine:
                  load_threshold: float = DEFAULT_LOAD_THRESHOLD,
                  compact_min_dead: int = 32,
                  compact_dead_frac: float = 0.25,
-                 max_kicks: int = DEFAULT_MAX_KICKS):
+                 max_kicks: int = DEFAULT_MAX_KICKS,
+                 shrink_load: Optional[float] = None):
         self.bank = bank
         self.delta = BankDelta()
         self.sort_threshold = sort_threshold
@@ -128,18 +240,22 @@ class MaintenanceEngine:
         self.compact_min_dead = compact_min_dead
         self.compact_dead_frac = compact_dead_frac
         self.max_kicks = max_kicks
+        # load factor below which maintain() halves a cold tree's nb
+        # (None = auto-shrink off; shrink_tree(force=True) always works)
+        self.shrink_load = shrink_load
         self._seed = seed
         self._rng = np.random.default_rng(seed)
         self.bumps_since_sort = 0
         self.stats: Dict[str, int] = {
             "inserted": 0, "deleted": 0, "replaced": 0,
-            "missed_deletes": 0, "expansions": 0, "compactions": 0,
-            "sorts": 0, "absorbed_bumps": 0}
+            "missed_deletes": 0, "expansions": 0, "shrinks": 0,
+            "compactions": 0, "sorts": 0, "absorbed_bumps": 0}
         r = bank.num_rows
         self.row_alive = np.ones(r, dtype=bool)
         self.row_hash = np.zeros(r, dtype=np.uint32)
         occ = bank.fingerprints != hashing.EMPTY_FP
         self.row_hash[bank.heads[occ]] = bank.stored_hash[occ]
+        self._shadow: Optional[_Shadow] = None
 
     # ------------------------------------------------------------ plumbing
     def _tables(self):
@@ -447,6 +563,57 @@ class MaintenanceEngine:
         self.stats["expansions"] += 1
         return True
 
+    def shrink_tree(self, tree: int, force: bool = False) -> bool:
+        """Single-tree arena shrink — ``expand_tree`` in reverse.
+
+        Restages only ``tree``'s segment at the smallest power-of-two nb
+        that keeps it under ``DEFAULT_LOAD_TARGET`` (an empty tree drops to
+        ``EMPTY_TREE_NB``), through the same splice machinery: every other
+        segment stays byte-identical, CSR rows keep their ids,
+        temperatures are preserved.  Without ``force`` it only fires when
+        the tree's load factor sits below ``shrink_load`` (hysteresis: a
+        briefly cold tree should not flap between sizes)."""
+        b = self.bank
+        nb = int(b.tree_nb[tree])
+        items = int(b.num_items[tree])
+        target = int(_pick_tree_buckets(np.asarray([items]), b.slots,
+                                        DEFAULT_LOAD_TARGET)[0])
+        if target >= nb:
+            return False                       # nothing to reclaim
+        if not force:
+            if self.shrink_load is None:
+                return False
+            if items / (nb * b.slots) >= self.shrink_load:
+                return False
+        self._restage_tree(int(tree), target)
+        self.stats["shrinks"] += 1
+        return True
+
+    def maybe_shrink(self) -> int:
+        """Shrink the coldest overprovisioned tree, at most one per idle
+        window — a single-segment splice keeps the restage incremental
+        (``plan_restage`` stays off the full-restage path)."""
+        if self.shrink_load is None:
+            return 0
+        for t in np.argsort(self.bank.load_factors):
+            if self.shrink_tree(int(t)):
+                return 1
+        return 0
+
+    def packing_stats(self) -> Dict[str, object]:
+        """Per-tree load / overprovision report for the shrink policy:
+        ``ideal_nb`` is what a fresh build would allocate each tree today,
+        ``overprovision`` the ratio of live arena rows to that ideal."""
+        b = self.bank
+        ideal = _pick_tree_buckets(b.num_items, b.slots,
+                                   DEFAULT_LOAD_TARGET)
+        ideal_rows = int(ideal.sum())
+        return dict(load=b.load_factors, tree_nb=b.tree_nb.copy(),
+                    ideal_nb=ideal.astype(np.int64),
+                    arena_rows=b.total_buckets, ideal_rows=ideal_rows,
+                    overprovision=b.total_buckets / max(1, ideal_rows),
+                    dead_rows=self.num_dead_rows)
+
     def compact(self) -> bool:
         """Reclaim tombstoned CSR rows (per-tree nb preserved); returns
         True if ran."""
@@ -467,8 +634,13 @@ class MaintenanceEngine:
     # --------------------------------------------- temperature feedback
     def absorb(self, device_state) -> int:
         """Harvest device temperature into the host bank; accumulate the
-        bump count the sort trigger integrates."""
+        bump count the sort trigger integrates.  The restage shadow tracks
+        the absorbed values too: after a successful absorb the device
+        already holds these temperatures, so they are never re-staged."""
         bumps = self.bank.absorb_temperature(device_state)
+        if self._shadow is not None and \
+                self._shadow.temperature.shape == self.bank.temperature.shape:
+            self._shadow.temperature[...] = self.bank.temperature
         self.bumps_since_sort += bumps
         self.stats["absorbed_bumps"] += bumps
         return bumps
@@ -489,8 +661,10 @@ class MaintenanceEngine:
     def maintain(self, device_state=None) -> MaintenanceReport:
         """One idle-window pass: absorb device temperature (must run before
         any slot moves so layouts agree), apply the pending delta, compact
-        if enough rows died, sort if enough heat accumulated.  The caller
-        restages its device state iff ``report.changed``."""
+        if enough rows died, shrink a cold tree, sort if enough heat
+        accumulated.  The caller restages its device state iff
+        ``report.changed`` — synchronously, or through
+        :meth:`plan_restage` + :func:`commit_restage`."""
         rep = MaintenanceReport()
         if device_state is not None:
             rep.absorbed_bumps = self.absorb(device_state)
@@ -502,9 +676,123 @@ class MaintenanceEngine:
             rep.replaced = out["replaced"]
             rep.missed_deletes = out["missed_deletes"]
         rep.compacted = self.maybe_compact()
-        rep.sorted = self.maybe_sort()
         rep.expansions = self.stats["expansions"] - exp0
+        # auto-shrink only in cycles that did not already resize a tree:
+        # a second resized segment (or a compaction) would push the
+        # restage plan onto the full path — the shrink waits a window
+        if not rep.expansions and not rep.compacted:
+            rep.shrinks = self.maybe_shrink()
+        rep.sorted = self.maybe_sort()
         return rep
+
+    # ------------------------------------------- double-buffered restage
+    def mark_staged(self) -> None:
+        """Record the bank's current content as what lives on device —
+        call whenever a device state is (re)staged from this bank.  The
+        next :meth:`plan_restage` diffs against this shadow."""
+        b = self.bank
+        self._shadow = _Shadow(
+            fingerprints=b.fingerprints.copy(),
+            temperature=b.temperature.copy(),
+            heads=b.heads.copy(),
+            tree_nb=b.tree_nb.copy(),
+            bucket_offsets=b.bucket_offsets.copy(),
+            num_rows=b.num_rows,
+            compactions=self.stats["compactions"])
+
+    def _diff_region(self, lo_new: int, hi_new: int,
+                     lo_old: int) -> np.ndarray:
+        """Arena rows in [lo_new, hi_new) whose staged-table content
+        differs from the shadow region of the same length at lo_old
+        (new-coordinate indices)."""
+        sh, b = self._shadow, self.bank
+        n = hi_new - lo_new
+        if n <= 0:
+            return np.zeros(0, np.int64)
+        d = (b.fingerprints[lo_new:hi_new]
+             != sh.fingerprints[lo_old:lo_old + n]).any(axis=1)
+        d |= (b.temperature[lo_new:hi_new]
+              != sh.temperature[lo_old:lo_old + n]).any(axis=1)
+        d |= (b.heads[lo_new:hi_new]
+              != sh.heads[lo_old:lo_old + n]).any(axis=1)
+        return np.flatnonzero(d) + lo_new
+
+    def _classify(self) -> _HostPlan:
+        """Diff the bank against the shadow and classify the cheapest
+        restage that reproduces it; re-marks the shadow (the caller is
+        expected to commit the plan before mutating the bank again)."""
+        b, sh = self.bank, self._shadow
+        try:
+            if sh is None or self.stats["compactions"] != sh.compactions \
+                    or b.num_rows < sh.num_rows:
+                return _HostPlan(kind="full")
+            plan = _HostPlan(kind="delta",
+                             csr_appended=b.num_rows > sh.num_rows)
+            changed = np.flatnonzero(b.tree_nb != sh.tree_nb)
+            if changed.size > 1:
+                return _HostPlan(kind="full")
+            if changed.size == 1:
+                t = int(changed[0])
+                lo = int(sh.bucket_offsets[t])
+                hi_old = int(sh.bucket_offsets[t + 1])
+                hi_new = int(b.bucket_offsets[t + 1])
+                plan.kind = "segment"
+                plan.seg = (t, lo, hi_old, hi_new)
+                plan.rows = np.concatenate([
+                    self._diff_region(0, lo, 0),
+                    self._diff_region(hi_new, b.total_buckets, hi_old)])
+            else:
+                plan.rows = self._diff_region(0, b.total_buckets, 0)
+                if plan.rows.size == 0 and not plan.csr_appended:
+                    plan.kind = "none"
+            return plan
+        finally:
+            self.mark_staged()
+
+    def plan_restage(self) -> PendingRestage:
+        """Diff against the shadow and stage only the changed bytes for
+        :func:`commit_restage` — host planning plus async payload
+        dispatch, safe to run while the pre-plan device state keeps
+        serving.  The bank must not mutate again before commit."""
+        import jax.numpy as jnp
+        host = self._classify()
+        if host.kind in ("none", "full"):
+            return PendingRestage(kind=host.kind)
+        b = self.bank
+        plan = PendingRestage(kind=host.kind)
+        rows = host.rows
+        if rows is not None and rows.size:
+            k = rows.size
+            kp = -(-k // _SCATTER_PAD) * _SCATTER_PAD
+            # sentinel = arena rows: out of bounds, dropped by the scatter
+            idx = np.full(kp, b.total_buckets, np.int32)
+            idx[:k] = rows
+            pad = np.zeros((kp - k, b.slots), np.int32)
+            plan.rows = jnp.asarray(idx)
+            plan.val_fps = jnp.asarray(np.concatenate(
+                [b.fingerprints[rows], pad.astype(np.uint32)]))
+            plan.val_temp = jnp.asarray(np.concatenate(
+                [b.temperature[rows], pad]))
+            plan.val_heads = jnp.asarray(np.concatenate(
+                [b.heads[rows], pad]))
+            plan.changed_rows = k
+        if host.seg is not None:
+            t, lo, hi_old, hi_new = host.seg
+            plan.seg_tree, plan.seg_lo, plan.seg_hi_old = t, lo, hi_old
+            plan.seg_fps = jnp.asarray(b.fingerprints[lo:hi_new])
+            plan.seg_temp = jnp.asarray(b.temperature[lo:hi_new])
+            plan.seg_heads = jnp.asarray(b.heads[lo:hi_new])
+            plan.tree_nb = b.tree_nb.copy()
+            plan.bucket_offsets = b.bucket_offsets.copy()
+            plan.changed_rows += hi_new - lo
+        if host.csr_appended:
+            # the CSR arena is replicated and O(rows) — staging it whole
+            # at plan time (async device_put, off the commit path) beats
+            # an on-device append that recompiles per grown shape
+            plan.csr_offsets = jnp.asarray(b.csr_offsets)
+            plan.csr_nodes = jnp.asarray(b.csr_nodes if b.csr_nodes.size
+                                         else np.zeros(1, np.int32))
+        return plan
 
 
 class ShardedMaintenanceEngine:
@@ -571,6 +859,29 @@ class ShardedMaintenanceEngine:
         d, lt = self._owner(tree)
         return self.engines[d].expand_tree(lt, force=force)
 
+    def shrink_tree(self, tree: int, force: bool = False) -> bool:
+        """Tree-local shrink within the owning shard (``expand_tree`` in
+        reverse — every other segment and shard byte-identical)."""
+        d, lt = self._owner(tree)
+        return self.engines[d].shrink_tree(lt, force=force)
+
+    def maybe_shrink(self) -> int:
+        return sum(e.maybe_shrink() for e in self.engines)
+
+    def packing_stats(self) -> Dict[str, object]:
+        """Global packing report: per-tree arrays concatenate in global
+        tree order; scalars aggregate across shards."""
+        per = [e.packing_stats() for e in self.engines]
+        arena = sum(p["arena_rows"] for p in per)
+        ideal = sum(p["ideal_rows"] for p in per)
+        return dict(
+            load=np.concatenate([p["load"] for p in per]),
+            tree_nb=np.concatenate([p["tree_nb"] for p in per]),
+            ideal_nb=np.concatenate([p["ideal_nb"] for p in per]),
+            arena_rows=arena, ideal_rows=ideal,
+            overprovision=arena / max(1, ideal),
+            dead_rows=sum(p["dead_rows"] for p in per))
+
     def maybe_compact(self) -> bool:
         return any([e.maybe_compact() for e in self.engines])
 
@@ -601,9 +912,106 @@ class ShardedMaintenanceEngine:
             rep.replaced += r.replaced
             rep.missed_deletes += r.missed_deletes
             rep.expansions += r.expansions
+            rep.shrinks += r.shrinks
             rep.compacted = rep.compacted or r.compacted
             rep.sorted = rep.sorted or r.sorted
         return rep
+
+    # ------------------------------------------- double-buffered restage
+    def mark_staged(self) -> None:
+        """Record every shard's current content as staged — call whenever
+        a packed device state is built from this sharded bank."""
+        for e in self.engines:
+            e.mark_staged()
+
+    def plan_restage(self) -> PendingShardedRestage:
+        """Classify every shard's diff and stage a packed splice plan.
+
+        Only shards whose sub-bank actually mutated contribute payload
+        rows — a non-owner shard's block is never written (its scatter
+        lane is all-sentinel and its head shift zero), so its packed
+        arena bytes stay identical through commit.  An insert into shard
+        d renumbers merged CSR rows of shards > d; that is expressed as
+        the per-shard ``head_shift`` (an in-place elementwise add on
+        device — no host bytes) plus a wholesale restage of the
+        replicated merged CSR.
+        """
+        import jax.numpy as jnp
+        sb = self.sbank
+        d = sb.num_shards
+        old_rows = [(e._shadow.num_rows if e._shadow is not None else -1)
+                    for e in self.engines]
+        old_arena = [(int(e._shadow.bucket_offsets[-1])
+                      if e._shadow is not None else -1)
+                     for e in self.engines]
+        host = [e._classify() for e in self.engines]   # re-marks shadows
+        if any(p.kind == "full" for p in host):
+            return PendingShardedRestage(kind="full")
+        if all(p.kind == "none" for p in host):
+            return PendingShardedRestage(kind="none")
+        base_new = sb.shard_row_base()
+        base_old = np.zeros(d + 1, np.int64)
+        np.cumsum(old_rows, out=base_old[1:])
+        shift = (base_new[:d] - base_old[:d]).astype(np.int32)
+
+        plan = PendingShardedRestage(kind="splice")
+        kmax = max(p.rows.size if p.rows is not None else 0 for p in host)
+        kp = -(-max(kmax, 1) // _SCATTER_PAD) * _SCATTER_PAD
+        sentinel = 2 ** 30                 # past any block: always dropped
+        rows = np.full((d, kp), sentinel, np.int32)
+        s = sb.slots
+        vf = np.zeros((d, kp, s), np.uint32)
+        vt = np.zeros((d, kp, s), np.int32)
+        vh = np.full((d, kp, s), NULL, np.int32)
+        any_rows = False
+        for k, (p, b) in enumerate(zip(host, sb.banks)):
+            r = p.rows if p.rows is not None else np.zeros(0, np.int64)
+            if r.size:
+                any_rows = True
+                rows[k, :r.size] = r
+                vf[k, :r.size] = b.fingerprints[r]
+                vt[k, :r.size] = b.temperature[r]
+                heads = b.heads[r]
+                vh[k, :r.size] = np.where(heads != NULL,
+                                          heads + np.int32(base_new[k]),
+                                          NULL)
+            plan.changed_rows += int(r.size)
+            if p.seg is not None:
+                _, lo, _, _ = p.seg
+                # the splice payload spans [lo, A_d_new) — the resized
+                # segment plus the shifted later trees — extended with
+                # empty rows up to the old A_d so a shrink clears its tail
+                a_new = b.total_buckets
+                end = max(a_new, old_arena[k])
+                segf = np.full((end - lo, s), hashing.EMPTY_FP, np.uint32)
+                segt = np.zeros((end - lo, s), np.int32)
+                segh = np.full((end - lo, s), NULL, np.int32)
+                segf[:a_new - lo] = b.fingerprints[lo:]
+                segt[:a_new - lo] = b.temperature[lo:]
+                hh = b.heads[lo:]
+                segh[:a_new - lo] = np.where(hh != NULL,
+                                             hh + np.int32(base_new[k]),
+                                             NULL)
+                plan.segments.append((k, lo, jnp.asarray(segf),
+                                      jnp.asarray(segt), jnp.asarray(segh)))
+                plan.changed_rows += end - lo
+        if any_rows or np.any(shift != 0):
+            # one fused op applies the head shift + the row scatter; a
+            # shard with nothing to do gets a zero shift and all-sentinel
+            # rows — its block bytes come out identical
+            plan.rows = jnp.asarray(rows)
+            plan.val_fps = jnp.asarray(vf)
+            plan.val_temp = jnp.asarray(vt)
+            plan.val_heads = jnp.asarray(vh)
+            plan.head_shift = jnp.asarray(shift)
+        plan.new_arena_rows = [b.total_buckets for b in sb.banks]
+        if plan.segments:
+            plan.tree_offset = sb.tree_arena_offsets().astype(np.int32)
+            plan.tree_nb = sb.tree_nb_map()
+        if any(p.csr_appended for p in host):
+            off, nodes = sb.merged_csr()
+            plan.csr_offsets, plan.csr_nodes = off, nodes
+        return plan
 
     # ------------------------------------------------------------- stats
     @property
@@ -621,3 +1029,207 @@ class ShardedMaintenanceEngine:
     @property
     def num_dead_rows(self) -> int:
         return sum(e.num_dead_rows for e in self.engines)
+
+
+# --------------------------------------------------------------- commit
+
+def _commit_replicated(state, plan: PendingRestage, bank: FilterBank,
+                       forest):
+    import jax.numpy as jnp
+
+    from .bank import splice_arena_rows, splice_arena_segment
+    from .trag import CFTDeviceState
+    if plan.kind == "none":
+        return state
+    if plan.kind == "full":
+        return CFTDeviceState.from_bank(bank, forest)
+    fps, temp, heads = state.fingerprints, state.temperature, state.heads
+    kw = {}
+    if plan.kind == "segment":
+        fps, temp, heads = splice_arena_segment(
+            fps, temp, heads, plan.seg_fps, plan.seg_temp, plan.seg_heads,
+            lo=plan.seg_lo, hi=plan.seg_hi_old)
+        kw["bucket_offsets"] = jnp.asarray(
+            plan.bucket_offsets.astype(np.int32))
+        kw["tree_nb"] = jnp.asarray(plan.tree_nb.astype(np.int32))
+    if plan.rows is not None:
+        fps, temp, heads = splice_arena_rows(
+            fps, temp, heads, plan.rows, plan.val_fps, plan.val_temp,
+            plan.val_heads)
+    kw.update(fingerprints=fps, temperature=temp, heads=heads)
+    if plan.csr_offsets is not None:
+        kw["csr_offsets"] = plan.csr_offsets
+        kw["csr_nodes"] = plan.csr_nodes
+    return dataclasses.replace(state, **kw)
+
+
+def _commit_sharded(state, plan: PendingShardedRestage, sbank: ShardedBank,
+                    forest):
+    import jax.numpy as jnp
+
+    from .distributed import (sharded_apply_delta, sharded_splice_segment,
+                              stage_sharded_bank)
+    if plan.kind == "none":
+        return state
+    apad = state.arena_rows_per_shard
+    if plan.kind == "full" or (plan.new_arena_rows is not None
+                               and max(plan.new_arena_rows) > apad):
+        # a segment outgrew the packed padding — only a repack can grow
+        # every shard's block, so fall back to the from-scratch stage
+        return stage_sharded_bank(sbank, forest, state.mesh, state.axis)
+    fps, temp, heads = state.fingerprints, state.temperature, state.heads
+    if plan.rows is not None:
+        fps, temp, heads = sharded_apply_delta(
+            fps, temp, heads, plan.rows, plan.val_fps, plan.val_temp,
+            plan.val_heads, plan.head_shift, state.mesh, state.axis)
+    for owner, start, sf, st, sh in plan.segments:
+        fps, temp, heads = sharded_splice_segment(
+            fps, temp, heads, sf, st, sh,
+            jnp.int32(owner), jnp.int32(start), state.mesh, state.axis)
+    kw = dict(fingerprints=fps, temperature=temp, heads=heads)
+    _place_sharded_replicated(state, plan)   # no-op if warm already did
+    if plan.tree_offset is not None:
+        kw["tree_offset"] = plan.tree_offset
+        kw["tree_nb"] = plan.tree_nb
+    if plan.csr_offsets is not None:
+        kw["csr_offsets"] = plan.csr_offsets
+        kw["csr_nodes"] = plan.csr_nodes
+    return dataclasses.replace(state, **kw)
+
+
+def _place_sharded_replicated(state, plan: PendingShardedRestage) -> None:
+    """Stage the plan's replicated tables (merged CSR, per-tree routing)
+    onto the mesh in place — idempotent, so ``warm_restage`` runs it in
+    the prepare phase and commit finds them already resident."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    first = (plan.csr_offsets if plan.csr_offsets is not None
+             else plan.tree_offset)
+    if first is None or isinstance(first, jax.Array):
+        return
+    rep = NamedSharding(state.mesh, P())
+    put_r = lambda a: jax.device_put(jnp.asarray(a), rep)    # noqa: E731
+    if plan.tree_offset is not None:
+        plan.tree_offset = put_r(plan.tree_offset)
+        plan.tree_nb = put_r(plan.tree_nb)
+    if plan.csr_offsets is not None:
+        plan.csr_offsets = put_r(plan.csr_offsets)
+        plan.csr_nodes = put_r(plan.csr_nodes if plan.csr_nodes.size
+                               else np.zeros(1, np.int32))
+
+
+def commit_restage(state, plan, engine, forest):
+    """Apply a staged restage plan to the live device state — the
+    O(changed-bytes) second phase of the double-buffered restage.
+
+    ``state`` is the ``CFTDeviceState`` / ``ShardedBankState`` the plan
+    was computed against (plus any temperature bumps it accumulated since
+    — overwritten only on rows the plan stages, exactly as a from-scratch
+    restage would); ``engine`` the maintenance engine that produced the
+    plan.  Returns the post-commit state; the splice ops donate the old
+    state's arena buffers, so the caller must drop every reference to
+    ``state`` and use the returned value (on backends without donation
+    support this degrades to a copy, never to corruption).
+    """
+    if isinstance(plan, PendingShardedRestage):
+        return _commit_sharded(state, plan, engine.sbank, forest)
+    return _commit_replicated(state, plan, engine.bank, forest)
+
+
+def warm_restage(state, plan) -> None:
+    """Pre-compile the commit's splice executables during the prepare
+    phase, so :func:`commit_restage` pays pure execution.
+
+    A segment splice changes the arena shape, so its executable cannot
+    have been cached by earlier cycles; compiling it lazily at commit
+    would put tens of milliseconds of XLA work on the serve-critical
+    path — exactly the pause this machinery exists to remove.  Runs the
+    commit computation on ``zeros_like`` dummies of the live state's
+    arrays (the plan's payloads are read-only and reused), populating the
+    jit caches the real commit hits.  No-op for ``none``/``full`` plans
+    (a full restage is staging work, not compilation).
+    """
+    import jax.numpy as jnp
+
+    from .bank import splice_arena_rows, splice_arena_segment
+    from .distributed import sharded_apply_delta, sharded_splice_segment
+    z = lambda a: jnp.zeros_like(a)                       # noqa: E731
+    if isinstance(plan, PendingShardedRestage):
+        if plan.kind != "splice":
+            return
+        if plan.new_arena_rows is not None and \
+                max(plan.new_arena_rows) > state.arena_rows_per_shard:
+            return                                  # commit will repack
+        _place_sharded_replicated(state, plan)   # CSR/routing staging off
+        f, t, h = z(state.fingerprints), z(state.temperature), \
+            z(state.heads)                       # the commit path too
+        if plan.rows is not None:
+            f, t, h = sharded_apply_delta(
+                f, t, h, plan.rows, plan.val_fps, plan.val_temp,
+                plan.val_heads, plan.head_shift, state.mesh, state.axis)
+        for owner, start, sf, st, sh in plan.segments:
+            f, t, h = sharded_splice_segment(
+                f, t, h, sf, st, sh, jnp.int32(owner), jnp.int32(start),
+                state.mesh, state.axis)
+        return
+    if plan.kind not in ("delta", "segment"):
+        return
+    f, t, h = z(state.fingerprints), z(state.temperature), z(state.heads)
+    if plan.kind == "segment":
+        f, t, h = splice_arena_segment(
+            f, t, h, plan.seg_fps, plan.seg_temp, plan.seg_heads,
+            lo=plan.seg_lo, hi=plan.seg_hi_old)
+    if plan.rows is not None:
+        splice_arena_rows(f, t, h, plan.rows, plan.val_fps, plan.val_temp,
+                          plan.val_heads)
+
+
+class RestageCoordinator:
+    """The serving-side two-phase restage lifecycle, shared by
+    ``ServeEngine`` and ``RAGPipeline`` so its invariants live once:
+
+    * plans never stack — a caller must commit (or drop) the pending plan
+      before preparing another;
+    * temperature harvesting must defer while a plan is pending
+      (``deferring``) — the bank may already carry the next geometry, and
+      bumps absorbed mid-flight would desync the staged payload;
+    * the splice executables compile during prepare (``warm_restage``),
+      never on the commit path.
+
+    The caller owns the device state: ``prepare(state)`` runs the host
+    maintenance pass and stages the plan; ``commit(state)`` returns the
+    post-splice state (the old one is donated — drop it).
+    """
+
+    def __init__(self, engine, forest):
+        self.engine = engine            # Maintenance- or Sharded- engine
+        self.forest = forest
+        self.pending = None
+        engine.mark_staged()            # caller attaches a freshly staged
+        #                                 state over this engine's bank
+
+    @property
+    def deferring(self) -> bool:
+        """True while a staged plan awaits commit — skip absorbs."""
+        return self.pending is not None
+
+    def prepare(self, state) -> MaintenanceReport:
+        """Host maintenance pass + plan + payload staging + splice
+        compilation — all overlappable with in-flight serving on the
+        (still untouched) ``state``."""
+        assert self.pending is None, "commit the pending plan first"
+        report = self.engine.maintain(state)
+        if report.changed and state is not None:
+            self.pending = self.engine.plan_restage()
+            warm_restage(state, self.pending)
+        return report
+
+    def commit(self, state) -> Tuple[object, bool]:
+        """O(changed-bytes) splice + swap; returns (new state, applied)."""
+        if self.pending is None:
+            return state, False
+        state = commit_restage(state, self.pending, self.engine,
+                               self.forest)
+        self.pending = None
+        return state, True

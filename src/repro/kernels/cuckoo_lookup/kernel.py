@@ -21,6 +21,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+try:                      # TPU grid specs (scalar prefetch); optional on
+    from jax.experimental.pallas import tpu as pltpu   # CPU-only installs
+except ImportError:       # pragma: no cover - depends on the jax build
+    pltpu = None
+
 from ...core import hashing
 
 TILE = 128          # queries per grid step (one vector lane row)
@@ -216,6 +221,17 @@ def _arena_kernel(h_ref, off_ref, mask_ref, fp_tab_ref, head_tab_ref,
     h = h_ref[...].astype(jnp.uint32)                       # (TILE,)
     qoff = off_ref[...].astype(jnp.int32)
     qmask = mask_ref[...].astype(jnp.uint32)
+    _arena_probe(h, qoff, qmask, ti, fp_tab_ref, head_tab_ref, hit_ref,
+                 head_ref, bucket_ref, slot_ref, prio_ref, slots=slots,
+                 row_tile=row_tile)
+
+
+def _arena_probe(h, qoff, qmask, ti, fp_tab_ref, head_tab_ref, hit_ref,
+                 head_ref, bucket_ref, slot_ref, prio_ref, *, slots: int,
+                 row_tile: int):
+    """Shared probe body of the arena kernels: candidates from a
+    per-query (segment start, bucket mask) pair, one-hot MXU row gather
+    within the resident tile, running slot-priority merge across tiles."""
     fp, i1u, i2u = hashing.candidate_buckets_masked(h, qmask, jnp)
     i1 = i1u.astype(jnp.int32)
     i2 = i2u.astype(jnp.int32)
@@ -271,6 +287,37 @@ def _arena_kernel(h_ref, off_ref, mask_ref, fp_tab_ref, head_tab_ref,
     prio_ref[...] = jnp.where(better, first, prio_ref[...])
 
 
+def _arena_kernel_sp(off_ref, nb_ref, tid_ref, h_ref, fp_tab_ref,
+                     head_tab_ref, hit_ref, head_ref, bucket_ref, slot_ref,
+                     prio_ref, *, slots: int, row_tile: int,
+                     num_trees: int):
+    """Tree-routed arena kernel with the per-tree routing tables in SMEM.
+
+    ``bucket_offsets``/``tree_nb`` are **scalar-prefetch operands**
+    (``pltpu.PrefetchScalarGridSpec``): O(T) ints resident in SMEM for
+    the whole launch instead of per-query-expanded (B,) VMEM operands —
+    the wrapper no longer materializes a gathered offset/mask pair per
+    query.  The per-lane gather happens here: an iota-compare one-hot sum
+    over the SMEM tables (VPU work; T is small by construction — the
+    tables are the same O(T) arrays the sharded router replicates).
+    Everything downstream is the shared :func:`_arena_probe`, so results
+    stay bit-identical to the pre-routed kernel and the jnp reference.
+    """
+    ti = pl.program_id(1)
+    h = h_ref[...].astype(jnp.uint32)                       # (TILE,)
+    tid = tid_ref[...].astype(jnp.int32)                    # clamped valid
+    offs = off_ref[...].astype(jnp.int32)                   # (T + 1,) SMEM
+    nbs = nb_ref[...].astype(jnp.int32)                     # (T,) SMEM
+    t_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, num_trees), 1)
+    sel = t_iota == tid[:, None]
+    qoff = jnp.sum(jnp.where(sel, offs[None, :num_trees], 0), axis=1)
+    qnb = jnp.sum(jnp.where(sel, nbs[None, :], 0), axis=1)
+    qmask = (qnb - 1).astype(jnp.uint32)
+    _arena_probe(h, qoff, qmask, ti, fp_tab_ref, head_tab_ref, hit_ref,
+                 head_ref, bucket_ref, slot_ref, prio_ref, slots=slots,
+                 row_tile=row_tile)
+
+
 def cuckoo_lookup_arena_pallas(h: jax.Array, row_offsets: jax.Array,
                                masks: jax.Array, fp_table_f32: jax.Array,
                                head_table_f32: jax.Array,
@@ -302,6 +349,57 @@ def cuckoo_lookup_arena_pallas(h: jax.Array, row_offsets: jax.Array,
         out_shape=out_shapes,
         interpret=interpret,
     )(h, row_offsets, masks, fp_table_f32, head_table_f32)
+    return outs[:4]                            # drop the priority scratch
+
+
+def cuckoo_lookup_ragged_pallas(h: jax.Array, tree_ids: jax.Array,
+                                bucket_offsets: jax.Array,
+                                tree_nb: jax.Array,
+                                fp_table_f32: jax.Array,
+                                head_table_f32: jax.Array,
+                                interpret: bool = True,
+                                row_tile: int = 0):
+    """Tree-routed ragged lookup with SMEM scalar-prefetched routing.
+
+    h/tree_ids: (B,) with B % TILE == 0 (tree_ids pre-clamped to
+    [0, T-1]); bucket_offsets: (T + 1,); tree_nb: (T,); tables: (A, S)
+    f32.  The two per-tree tables ride as scalar-prefetch args (SMEM)
+    rather than per-query VMEM operands; ``row_tile`` tiles the arena
+    rows exactly as :func:`cuckoo_lookup_arena_pallas`.  Falls back to
+    the pre-gathered arena kernel when the jax build exposes no TPU
+    grid-spec module.
+    """
+    if pltpu is None:                      # pragma: no cover - build-dep
+        off = bucket_offsets[tree_ids]
+        mask = (tree_nb[tree_ids] - 1).astype(jnp.uint32)
+        return cuckoo_lookup_arena_pallas(
+            h, off, mask, fp_table_f32, head_table_f32,
+            interpret=interpret, row_tile=row_tile)
+    rows_total, slots = fp_table_f32.shape
+    b = h.shape[0]
+    rt = rows_total if row_tile <= 0 else row_tile
+    assert rows_total % rt == 0, \
+        "pad the arena to a multiple of row_tile before calling"
+    num_trees = tree_nb.shape[0]
+    grid = (b // TILE, rows_total // rt)       # arena axis innermost
+    # index maps receive the scalar-prefetch refs after the grid indices
+    qspec = pl.BlockSpec((TILE,), lambda qi, ti, off, nb: (qi,))
+    tabspec = pl.BlockSpec((rt, slots), lambda qi, ti, off, nb: (ti, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[qspec, qspec, tabspec, tabspec],
+        out_specs=[qspec] * 5,
+    )
+    out_shapes = [jax.ShapeDtypeStruct((b,), jnp.int32) for _ in range(5)]
+    outs = pl.pallas_call(
+        functools.partial(_arena_kernel_sp, slots=slots, row_tile=rt,
+                          num_trees=num_trees),
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(bucket_offsets.astype(jnp.int32), tree_nb.astype(jnp.int32),
+      tree_ids, h, fp_table_f32, head_table_f32)
     return outs[:4]                            # drop the priority scratch
 
 

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from ...core.lookup import LookupResult
 from .kernel import (TILE, cuckoo_lookup_arena_pallas,
-                     cuckoo_lookup_bank_pallas, cuckoo_lookup_pallas)
+                     cuckoo_lookup_bank_pallas, cuckoo_lookup_pallas,
+                     cuckoo_lookup_ragged_pallas)
 
 
 def on_tpu() -> bool:
@@ -46,10 +47,31 @@ def cuckoo_lookup_auto(fingerprints, heads, h) -> LookupResult:
     return cuckoo_lookup(fingerprints, heads, h, interpret=not on_tpu())
 
 
-# Past this many flat bucket rows the bank kernel tiles the tree axis so
-# a VMEM-resident block (and the one-hot gather operand, TILE x rows f32)
-# stays bounded instead of growing with T.
-SINGLE_BLOCK_MAX_ROWS = 2048
+# Past SINGLE_BLOCK_MAX_ROWS flat bucket rows the bank/arena kernels tile
+# the row axis so the VMEM-resident working set stays bounded instead of
+# growing with the bank.  The bound is derived from an explicit VMEM
+# budget rather than guessed: per grid step the kernel keeps
+#
+#   fp + head table blocks          2 * rows * S * 4   bytes (f32)
+#   their (rows, 2S) concat             rows * 2S * 4
+#   two one-hot gather operands     2 * TILE * rows * 4
+#
+# i.e. 4 * (4*S + 2*TILE) bytes per row; query/output vectors are O(TILE)
+# and ignored.  The budget is half of a conservative 16 MiB per-core
+# VMEM, leaving headroom for Pallas double-buffering of the streamed
+# table blocks.
+LOOKUP_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def max_rows_for_vmem(slots: int = 4, tile: int = TILE,
+                      budget: int = LOOKUP_VMEM_BUDGET) -> int:
+    """Largest per-step row-tile (a TILE multiple) fitting the documented
+    VMEM budget for the one-hot-matmul lookup working set."""
+    per_row = 4 * (4 * slots + 2 * tile)
+    return max(tile, budget // per_row // tile * tile)
+
+
+SINGLE_BLOCK_MAX_ROWS = max_rows_for_vmem()
 
 
 def _pick_tree_tile(t: int, nb: int) -> int:
@@ -156,15 +178,33 @@ def cuckoo_lookup_ragged(fingerprints: jax.Array, heads: jax.Array,
                          interpret: bool = True,
                          row_tile: int = -1) -> LookupResult:
     """Tree-routed ragged lookup — same signature/semantics as
-    ``core.lookup.lookup_batch_ragged``.  The per-tree offsets/mask table
-    is small (O(T), SMEM-sized); the routing gather happens here in the
-    jitted wrapper and the kernel probes ``offset[t] + (h & (nb_t - 1))``
-    from the per-query values."""
-    t = tree_ids.astype(jnp.int32)
-    return cuckoo_lookup_arena(
-        fingerprints, heads, bucket_offsets[t],
-        (tree_nb[t] - 1).astype(jnp.uint32), h,
-        interpret=interpret, row_tile=row_tile)
+    ``core.lookup.lookup_batch_ragged``.  The per-tree offsets/nb tables
+    are O(T) and SMEM-sized: they ride into the kernel as scalar-prefetch
+    operands (``PrefetchScalarGridSpec``) and the per-query routing
+    gather happens in-kernel from SMEM — no (B,)-expanded offset/mask
+    VMEM operands.  Out-of-range tree ids are clamped (matching the jnp
+    reference's clipped gather); the pre-routed
+    :func:`cuckoo_lookup_arena` remains the sharded router's contract.
+    """
+    a, s = fingerprints.shape
+    if row_tile < 0:
+        row_tile = _pick_row_tile(a)
+    b = h.shape[0]
+    pad = (-b) % TILE
+    hp = jnp.pad(h.astype(jnp.uint32), (0, pad))
+    tp = jnp.clip(jnp.pad(tree_ids.astype(jnp.int32), (0, pad)),
+                  0, tree_nb.shape[0] - 1)
+    fps2, hds2 = fingerprints, heads
+    if row_tile > 0:
+        row_pad = (-a) % row_tile
+        fps2 = jnp.pad(fps2, ((0, row_pad), (0, 0)))
+        hds2 = jnp.pad(hds2, ((0, row_pad), (0, 0)))
+    fp32, hd32 = stage_tables(fps2, hds2)
+    hit, head, bucket, slot = cuckoo_lookup_ragged_pallas(
+        hp, tp, bucket_offsets, tree_nb, fp32, hd32, interpret=interpret,
+        row_tile=row_tile)
+    return LookupResult(hit=hit[:b].astype(jnp.bool_), head=head[:b],
+                        bucket=bucket[:b], slot=slot[:b])
 
 
 def cuckoo_lookup_ragged_auto(fingerprints, heads, bucket_offsets, tree_nb,

@@ -19,9 +19,9 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import (CFTDeviceState, DeviceRetrieval, MaintenanceEngine,
-                    MaintenanceReport, ShardedBankState,
-                    ShardedMaintenanceEngine, retrieve_device,
-                    sharded_retrieve_device, stage_sharded_bank)
+                    MaintenanceReport, ShardedBankState, retrieve_device,
+                    sharded_retrieve_device)
+from ..core.maintenance import RestageCoordinator
 from ..data.tokenizer import HashTokenizer
 from ..models import lm
 
@@ -47,7 +47,7 @@ class ServeEngine:
             functools.partial(lm.decode_step, cfg), donate_argnums=(2,))
         self._ret_state: Optional[CFTDeviceState] = None
         self._maint: Optional[MaintenanceEngine] = None
-        self._maint_forest = None
+        self._coord: Optional[RestageCoordinator] = None
 
     # ---------------------------------------------------------- retrieval
     def attach_retrieval(self, state, lookup_fn=None,
@@ -95,9 +95,12 @@ class ServeEngine:
         out = self._ret_step(self._ret_state, jnp.asarray(hh),
                              jnp.asarray(tid))
         self._ret_state = self._ret_state.with_temperature(out.temperature)
-        if self._maint is not None:
+        if self._maint is not None and not self._coord.deferring:
             # close the paper's feedback loop: harvest this batch's bumps
-            # into the host bank (drives the idle-sort trigger policy)
+            # into the host bank (drives the idle-sort trigger policy).
+            # While a restage is staged-but-uncommitted the harvest is
+            # deferred — bumps stay on device and the first post-commit
+            # batch harvests them.
             self._maint.absorb(self._ret_state)
         return DeviceRetrieval(hit=out.hit[:b], locations=out.locations[:b],
                                up=out.up[:b], down=out.down[:b],
@@ -107,34 +110,57 @@ class ServeEngine:
     def attach_maintenance(self, maint, forest) -> None:
         """Attach a host-side maintenance engine (``MaintenanceEngine`` or
         ``ShardedMaintenanceEngine``) over the bank backing the attached
-        retrieval state.  ``retrieve`` then harvests temperature
-        after every query batch, and :meth:`maintain` (called between
-        batches, or by ``serve`` automatically) applies queued
-        insert/delete deltas, compacts, resorts, and restages the device
-        state whenever the bank mutated."""
+        retrieval state — which must have just been staged from that bank
+        (the engine's restage shadow is initialized to its content).
+        ``retrieve`` then harvests temperature after every query batch,
+        and :meth:`maintain` (called between batches, or by ``serve``
+        automatically) applies queued insert/delete deltas, compacts,
+        resorts, and splice-commits the device state whenever the bank
+        mutated."""
         self._maint = maint
-        self._maint_forest = forest
+        self._coord = RestageCoordinator(maint, forest)
+
+    def prepare_maintenance(self) -> Optional[MaintenanceReport]:
+        """Phase one of the zero-pause restage: run the host-side
+        maintenance pass (absorb → delta → compact → shrink → sort) and
+        stage the restage plan's payload — only the changed bytes.
+
+        Everything here is host work plus async device_put dispatch, so
+        it overlaps with an in-flight serve batch: issue the next batch,
+        call this, then :meth:`commit_maintenance` once the batch is
+        consumed.  The old state keeps serving untouched until commit.
+        An uncommitted previous plan is committed first (plans do not
+        stack)."""
+        if self._maint is None:
+            return None
+        self.commit_maintenance()
+        return self._coord.prepare(self._ret_state)
+
+    def commit_maintenance(self) -> bool:
+        """Phase two: the O(changed-bytes) device splice + atomic state
+        swap.  Returns True when a staged plan was applied.  The splice
+        donates the old state's arena buffers — the swapped-out state must
+        not be probed again (on backends without donation this is merely
+        a copy)."""
+        if self._coord is None:
+            return False
+        self._ret_state, applied = self._coord.commit(self._ret_state)
+        return applied
 
     def maintain(self) -> Optional[MaintenanceReport]:
-        """Idle-time maintenance hook (between serving batches).
+        """Idle-time maintenance hook (between serving batches) — the
+        single-call wrapper over :meth:`prepare_maintenance` +
+        :meth:`commit_maintenance`.
 
         With a maintenance engine attached: one ``maintain`` pass on the
-        host bank, then restage the device tables iff anything changed
-        (host stays the source of truth so slot layouts never diverge).
-        Without one: a pure device-side idle sort (``sort_buckets_arena``)
-        — hot fingerprints bubble to slot 0 using temperature alone."""
+        host bank, then splice-commit the changed bytes into the device
+        state (host stays the source of truth so slot layouts never
+        diverge; a compaction falls back to the full restage).  Without
+        one: a pure device-side idle sort (``sort_buckets_arena``) — hot
+        fingerprints bubble to slot 0 using temperature alone."""
         if self._maint is not None:
-            report = self._maint.maintain(self._ret_state)
-            if report.changed and self._ret_state is not None:
-                if isinstance(self._maint, ShardedMaintenanceEngine):
-                    # shard-local restage: repack from the per-shard banks
-                    # (only the mutated shards' blocks have new content)
-                    self._ret_state = stage_sharded_bank(
-                        self._maint.sbank, self._maint_forest,
-                        self._ret_state.mesh, self._ret_state.axis)
-                else:
-                    self._ret_state = CFTDeviceState.from_bank(
-                        self._maint.bank, self._maint_forest)
+            report = self.prepare_maintenance()
+            self.commit_maintenance()
             return report
         if self._ret_state is not None:
             self._ret_state = self._ret_state.sort_idle()

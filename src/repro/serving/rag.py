@@ -22,6 +22,7 @@ from ..core import (CFTRAG, CFTDeviceState, MaintenanceEngine,
                     ShardedBankState, ShardedMaintenanceEngine, build_bank,
                     build_forest, build_index, retrieve_device,
                     sharded_retrieve_device, stage_sharded_bank)
+from ..core.maintenance import RestageCoordinator
 from ..core import hashing
 from ..data.datasets import SyntheticCorpus
 from ..data.ner import (add_to_gazetteer, build_gazetteer,
@@ -62,6 +63,7 @@ class RAGPipeline:
         self.use_bank = use_bank
         self._mesh, self._mesh_axis = mesh, mesh_axis
         self.bank = build_bank(self.forest) if use_bank else None
+        self._coord = None          # two-phase restage lifecycle owner
         if use_bank and mesh is not None:
             # bank-axis sharded deployment: tree ranges partitioned over
             # the mesh axis, shard-local maintenance, all-to-all routing
@@ -82,6 +84,8 @@ class RAGPipeline:
         else:
             self.maintenance = None
             self._dev_state = None
+        if self.maintenance is not None:
+            self._coord = RestageCoordinator(self.maintenance, self.forest)
 
     # ---------------------------------------------------------- retrieval
     def retrieve(self, query: str,
@@ -119,7 +123,9 @@ class RAGPipeline:
                                       lookup_fn=cuckoo_lookup_arena_auto)
             self._dev_state = self._dev_state.with_temperature(
                 out.temperature)
-            if self.maintenance is not None:
+            if self.maintenance is not None and not self._coord.deferring:
+                # harvest defers while a restage is staged-but-uncommitted
+                # (the bank may already carry the next geometry)
                 self.maintenance.absorb(self._dev_state)
             up, down = np.asarray(out.up), np.asarray(out.down)
             if tree_scope is None and self.use_bank:
@@ -154,20 +160,33 @@ class RAGPipeline:
             raise RuntimeError("dynamic updates need use_bank=True")
         self.maintenance.queue_delete(tree, name)
 
-    def maintain(self):
-        """Idle-time maintenance: apply queued inserts/deletes, compact,
-        resort hot buckets, and restage the device state if the bank
-        mutated.  Returns the MaintenanceReport (None in non-bank mode)."""
+    def prepare_maintenance(self):
+        """Phase one of the zero-pause restage: host-side maintenance pass
+        + staging of only the changed bytes (overlappable with in-flight
+        retrieval on the still-serving old state).  Commits any previous
+        uncommitted plan first; returns the MaintenanceReport (None in
+        non-bank mode)."""
         if self.maintenance is None:
             return None
-        report = self.maintenance.maintain(self._dev_state)
-        if report.changed:
-            if isinstance(self._dev_state, ShardedBankState):
-                self._dev_state = stage_sharded_bank(
-                    self.bank, self.forest, self._mesh, self._mesh_axis)
-            else:
-                self._dev_state = CFTDeviceState.from_bank(self.bank,
-                                                           self.forest)
+        self.commit_maintenance()
+        return self._coord.prepare(self._dev_state)
+
+    def commit_maintenance(self) -> bool:
+        """Phase two: O(changed-bytes) device splice + atomic swap of the
+        retrieval state.  Returns True when a staged plan was applied."""
+        if self._coord is None:
+            return False
+        self._dev_state, applied = self._coord.commit(self._dev_state)
+        return applied
+
+    def maintain(self):
+        """Idle-time maintenance: apply queued inserts/deletes, compact,
+        shrink, resort hot buckets, and splice-commit the device state if
+        the bank mutated (``prepare_maintenance`` + ``commit_maintenance``
+        in one call).  Returns the MaintenanceReport (None in non-bank
+        mode)."""
+        report = self.prepare_maintenance()
+        self.commit_maintenance()
         return report
 
     def _render_device(self, ents: Sequence[str], up_arr: np.ndarray,

@@ -353,16 +353,19 @@ def test_sharded_temperature_absorb_no_double_count():
     """)
 
 
-def test_all_to_all_capacity_factor():
-    """capacity_factor < 1.0 shrinks the routed exchange buffer: balanced
-    loads answer bit-identically through the smaller buffer, and an
-    adversarial batch (every query to one shard) raises the explicit
-    overflow check instead of silently dropping queries."""
+def test_two_pass_capacity():
+    """Two-pass count-then-exchange capacity: balanced loads answer
+    bit-identically through the factor-sized (fast path) buffer, the
+    count pass reports exact per-pair routing, and an adversarial batch
+    that overflowed the old eager pre-check (every query to one shard)
+    now adapts the buffer to the measured maximum and answers exactly —
+    no raise, no dropped queries."""
     _run("""
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import (build_forest, build_bank, routing_capacity,
+    from repro.core import (build_forest, build_bank, routing_counts,
                             sharded_lookup_bank, sharded_retrieve_device,
                             stage_sharded_bank)
+    from repro.core.distributed import _pick_capacity
     from repro.core import hashing
 
     T, D = 32, 8
@@ -377,6 +380,11 @@ def test_all_to_all_capacity_factor():
     qt = (np.arange(128) % T).astype(np.int32)
     qh = np.asarray([int(hashing.entity_hash(f"e{t}_0")) for t in qt],
                     np.uint32)
+    counts = routing_counts(state, qt)
+    assert counts.shape == (D, D) and counts.sum() == 128
+    # each source's 16 round-robin queries cover 16 consecutive trees =
+    # 4 shards at 4 queries each (pads included) -- the counts are exact
+    assert counts.max() == 4, counts
     full = sharded_lookup_bank(state, jnp.asarray(qt), jnp.asarray(qh))
     half = sharded_lookup_bank(state, jnp.asarray(qt), jnp.asarray(qh),
                                capacity_factor=0.5)
@@ -385,25 +393,120 @@ def test_all_to_all_capacity_factor():
                                       np.asarray(getattr(half, f)),
                                       err_msg=f"capacity_factor {f}")
     assert bool(np.asarray(half.hit).all())
-    # the shrunken buffer is real: capacity < worst-case local batch
-    cap = routing_capacity(state, qt, 0.5)
-    assert cap < 128 // D, cap
+    # fast path: counts fit, so the factor sizes the (shrunken) buffer
+    cap = _pick_capacity(state, qt, 0.5)
+    assert cap == 8 and cap < 128 // D, cap
 
     # retrieve path threads the factor too
     out = sharded_retrieve_device(state, jnp.asarray(qh), jnp.asarray(qt),
                                   capacity_factor=0.5)
     assert bool(np.asarray(out.hit).all())
 
-    # adversarial: every query to shard 0's trees -> loud overflow
+    # adversarial: every query to shard 0's trees overflowed the old
+    # eager check at factor 0.25 -- the second pass now sizes the buffer
+    # from the measured max and the batch answers bit-identically
     qt_bad = np.zeros(64, np.int32)
-    try:
-        sharded_lookup_bank(state, jnp.asarray(qt_bad),
-                            jnp.asarray(qh[:64]), capacity_factor=0.25)
-        raise SystemExit("overflow must raise")
-    except ValueError as e:
-        assert "capacity overflow" in str(e)
-    print("all-to-all capacity factor OK")
+    assert int(routing_counts(state, qt_bad).max()) == 64 // D
+    cap_bad = _pick_capacity(state, qt_bad, 0.25)
+    assert cap_bad == 64 // D, cap_bad          # adapted past ceil(f*Bl)
+    ref = sharded_lookup_bank(state, jnp.asarray(qt_bad),
+                              jnp.asarray(qh[:64]))
+    got = sharded_lookup_bank(state, jnp.asarray(qt_bad),
+                              jnp.asarray(qh[:64]), capacity_factor=0.25)
+    for f in ("hit", "head", "bucket", "slot"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(got, f)),
+                                      err_msg=f"adaptive {f}")
+    print("two-pass capacity OK")
     """)
+
+
+def test_sharded_splice_commit_matches_from_scratch():
+    """Acceptance gate (sharded): across random churn schedules
+    (insert/delete/expand/shrink), plan_restage + commit_restage leaves
+    the packed ShardedBankState byte-identical to a from-scratch
+    stage_sharded_bank — and a splice-only cycle never writes a
+    non-owning shard's block (device buffers compared byte-for-byte)."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import (ShardedMaintenanceEngine, build_bank,
+                            build_forest, commit_restage,
+                            sharded_retrieve_device, stage_sharded_bank)
+    from repro.core import hashing
+
+    T, D = 16, 4
+    FIELDS = ("fingerprints", "temperature", "heads", "tree_shard",
+              "tree_offset", "tree_nb", "csr_offsets", "csr_nodes")
+
+    def shard_bytes(state, d):
+        ap = state.arena_rows_per_shard
+        return tuple(np.asarray(getattr(state, f))[d * ap:(d + 1) * ap]
+                     .tobytes() for f in ("fingerprints", "temperature",
+                                          "heads"))
+
+    for seed in (0, 7):
+        rng = np.random.default_rng(seed)
+        trees = [[(f"r{t}", f"e{t}_{i}") for i in range(12)]
+                 for t in range(T)]
+        forest = build_forest(trees)
+        bank = build_bank(forest)
+        sbank = bank.shard(D)
+        eng = ShardedMaintenanceEngine(sbank, seed=seed)
+        mesh = jax.make_mesh((D,), ("model",))
+        state = stage_sharded_bank(sbank, forest, mesh, "model")
+        eng.mark_staged()
+        serial = 0
+        for cycle in range(4):
+            # churn one shard's trees only, so the others must stay
+            # byte-identical through the splice commit
+            hot_shard = int(rng.integers(D))
+            lo, hi = (int(sbank.tree_starts[hot_shard]),
+                      int(sbank.tree_starts[hot_shard + 1]))
+            for _ in range(int(rng.integers(2, 6))):
+                t = int(rng.integers(lo, hi))
+                if rng.random() < 0.6:
+                    eng.queue_insert(t, f"new {seed} {serial}", [serial])
+                    serial += 1
+                else:
+                    eng.queue_delete(t, f"e{t}_{int(rng.integers(12))}")
+            eng.maintain()
+            if rng.random() < 0.5:
+                eng.expand_tree(int(rng.integers(lo, hi)), force=True)
+            elif rng.random() < 0.5:
+                eng.shrink_tree(int(rng.integers(lo, hi)), force=True)
+            before = {d: shard_bytes(state, d) for d in range(D)
+                      if d != hot_shard}
+            plan = eng.plan_restage()
+            state2 = commit_restage(state, plan, eng, forest)
+            ref = stage_sharded_bank(sbank, forest, mesh, "model",
+                                     arena_rows=state2.arena_rows_per_shard)
+            for f in FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(state2, f)),
+                    np.asarray(getattr(ref, f)),
+                    err_msg=f"seed {seed} cycle {cycle} {plan.kind}: {f}")
+            in_place = (plan.kind == "splice"
+                        and state2.arena_rows_per_shard
+                        == state.arena_rows_per_shard)
+            if in_place:   # else: segment outgrew the padding -> repack
+                for d, b in before.items():
+                    # shards before the churned one are always untouched;
+                    # later shards too unless an insert shifted their
+                    # merged head numbering (zero host bytes either way)
+                    if d < hot_shard or plan.head_shift is None:
+                        assert shard_bytes(state2, d) == b, \
+                            (seed, cycle, d, "non-owner block mutated")
+            state = state2
+            # committed state serves: every surviving key resolves
+            qt = np.asarray([t for t in range(T)], np.int32)
+            qh = np.asarray([int(hashing.entity_hash(f"e{t}_2"))
+                             for t in range(T)], np.uint32)
+            out = sharded_retrieve_device(state, jnp.asarray(qh),
+                                          jnp.asarray(qt))
+            state = state.with_temperature(out.temperature)
+            eng.absorb(state)
+    print("sharded splice commit OK")
+    """, devices=4)
 
 
 def test_small_mesh_train_step_sharded():

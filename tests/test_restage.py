@@ -1,0 +1,259 @@
+"""Double-buffered restage: PendingRestage classification, splice-commit
+byte-identity against a from-scratch restage across random churn schedules
+(insert/delete/expand/shrink), the shrink policy, and the serving-layer
+prepare/commit lifecycle."""
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                  # offline container
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (CFTDeviceState, MaintenanceEngine, build_bank,
+                        build_forest, commit_restage, retrieve_device)
+from repro.core import hashing
+
+_STATE_FIELDS = ("fingerprints", "temperature", "heads", "bucket_offsets",
+                 "tree_nb", "csr_offsets", "csr_nodes")
+
+
+def _forest(num_trees=6, entities_per_tree=12):
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def _assert_state_equal(state, ref, tag=""):
+    for f in _STATE_FIELDS:
+        a, b = np.asarray(getattr(state, f)), np.asarray(getattr(ref, f))
+        assert a.shape == b.shape, (tag, f, a.shape, b.shape)
+        np.testing.assert_array_equal(a, b, err_msg=f"{tag}: {f}")
+
+
+def _setup(**kw):
+    forest = _forest()
+    bank = build_bank(forest)
+    eng = MaintenanceEngine(bank, **kw)
+    state = CFTDeviceState.from_bank(bank, forest)
+    eng.mark_staged()
+    return forest, bank, eng, state
+
+
+# ------------------------------------------------------- classification
+
+def test_plan_kinds():
+    """Each cycle shape classifies to the cheapest plan that can express
+    it: nothing -> none, slot edits -> delta, one tree resized -> segment,
+    compaction -> full."""
+    forest, bank, eng, state = _setup()
+    assert eng.plan_restage().kind == "none"
+
+    eng.queue_insert(1, "fresh", [2, 3])
+    eng.maintain()
+    plan = eng.plan_restage()
+    assert plan.kind == "delta" and plan.changed_rows > 0
+    assert plan.csr_offsets is not None          # the insert appended a row
+    state = commit_restage(state, plan, eng, forest)
+    _assert_state_equal(state, CFTDeviceState.from_bank(bank, forest),
+                        "delta")
+
+    eng.expand_tree(2, force=True)
+    plan = eng.plan_restage()
+    assert plan.kind == "segment" and plan.seg_tree == 2
+    state = commit_restage(state, plan, eng, forest)
+    _assert_state_equal(state, CFTDeviceState.from_bank(bank, forest),
+                        "segment")
+
+    # two trees resized in one cycle cannot splice -> full
+    eng.expand_tree(0, force=True)
+    eng.expand_tree(4, force=True)
+    plan = eng.plan_restage()
+    assert plan.kind == "full"
+    state = commit_restage(state, plan, eng, forest)
+    _assert_state_equal(state, CFTDeviceState.from_bank(bank, forest),
+                        "multi-segment full")
+
+    # compaction renumbers CSR rows -> full
+    hashes = hashing.hash_entities(forest.entity_names)
+    for r in range(0, bank.num_rows, 2):
+        eng.queue_delete(int(bank.row_tree[r]),
+                         int(hashes[int(bank.row_entity[r])]))
+    rep = eng.maintain()                  # enough dead rows: auto-compacts
+    assert rep.compacted or eng.compact()
+    plan = eng.plan_restage()
+    assert plan.kind == "full"
+    state = commit_restage(state, plan, eng, forest)
+    _assert_state_equal(state, CFTDeviceState.from_bank(bank, forest),
+                        "compaction full")
+
+
+def test_absorbed_temperature_not_restaged():
+    """Temperature the engine absorbed is already on device: an
+    absorb-only cycle plans to none, and a later delta does not re-stage
+    the bumped rows."""
+    forest, bank, eng, state = _setup()
+    hashes = hashing.hash_entities(forest.entity_names)
+    tid = jnp.asarray(bank.row_tree[:16].astype(np.int32))
+    hh = jnp.asarray(hashes[bank.row_entity[:16]])
+    out = retrieve_device(state, hh, tid)
+    state = state.with_temperature(out.temperature)
+    assert eng.absorb(state) == 16
+    plan = eng.plan_restage()
+    assert plan.kind == "none"                  # device already has them
+    eng.queue_insert(0, "one more", [1])
+    eng.maintain()
+    plan = eng.plan_restage()
+    assert plan.kind == "delta"
+    # only the inserted slot's row (plus eviction traffic in tree 0's
+    # segment) stages — far fewer rows than the 16 bumped ones
+    lo, hi = bank.segment(0)
+    rows = np.asarray(plan.rows)[:plan.changed_rows]
+    assert ((rows >= lo) & (rows < hi)).all()
+    state = commit_restage(state, plan, eng, forest)
+    _assert_state_equal(state, CFTDeviceState.from_bank(bank, forest),
+                        "post-absorb delta")
+
+
+# ------------------------------------------------------------ shrink path
+
+def test_shrink_tree_reverses_expansion():
+    """shrink_tree halves an overprovisioned tree's segment through the
+    same splice machinery: other segments byte-identical, memberships and
+    temperatures preserved, CSR rows never renumbered."""
+    forest, bank, eng, state = _setup()
+    hashes = hashing.hash_entities(forest.entity_names)
+    bank.temperature[bank.fingerprints != hashing.EMPTY_FP] = 5
+    eng.expand_tree(3, force=True)
+    eng.expand_tree(3, force=True)              # 4x overprovisioned now
+    nb_big = int(bank.tree_nb[3])
+    cold = [t for t in range(bank.num_trees) if t != 3]
+    snaps = {t: tuple(arr[slice(*bank.segment(t))].tobytes()
+                      for arr in (bank.fingerprints, bank.heads,
+                                  bank.stored_hash))
+             for t in cold}
+    rows0 = {r: bank.walk_row(r) for r in range(bank.num_rows)}
+    assert eng.shrink_tree(3, force=True)
+    assert int(bank.tree_nb[3]) < nb_big
+    assert eng.stats["shrinks"] == 1
+    for t in cold:
+        cur = tuple(arr[slice(*bank.segment(t))].tobytes()
+                    for arr in (bank.fingerprints, bank.heads,
+                                bank.stored_hash))
+        assert cur == snaps[t], f"cold segment {t} mutated"
+    for r, nodes in rows0.items():
+        assert bank.walk_row(r) == nodes
+        t, e = int(bank.row_tree[r]), int(bank.row_entity[r])
+        hit, row, _ = bank.lookup(t, int(hashes[e]))
+        assert hit and row == r
+    assert (bank.temperature[bank.fingerprints
+                             != hashing.EMPTY_FP] == 5).all()
+
+
+def test_shrink_policy_and_packing_stats():
+    """maintain() auto-shrinks at most one cold tree per pass when
+    shrink_load is set; packing_stats reports the overprovision it acts
+    on.  Without shrink_load the engine never shrinks on its own."""
+    forest, bank, eng, state = _setup()
+    eng.expand_tree(1, force=True)
+    eng.expand_tree(1, force=True)
+    assert eng.maintain().shrinks == 0           # policy off by default
+    stats = eng.packing_stats()
+    assert stats["overprovision"] > 1.0
+    assert int(stats["tree_nb"][1]) > int(stats["ideal_nb"][1])
+
+    forest2, bank2, eng2, _ = _setup(shrink_load=0.5)
+    eng2.expand_tree(1, force=True)
+    eng2.expand_tree(2, force=True)
+    rep = eng2.maintain()
+    assert rep.shrinks == 1                      # one per idle window
+    rep = eng2.maintain()
+    assert rep.shrinks == 1                      # the other one next pass
+    over = eng2.packing_stats()["overprovision"]
+    assert over <= eng.packing_stats()["overprovision"]
+    # a loaded tree never shrinks below what its items need
+    assert (bank2.tree_nb >= eng2.packing_stats()["ideal_nb"]).all()
+
+
+# ------------------------------------------------- churn property test
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_splice_commit_matches_from_scratch_restage(seed):
+    """Acceptance gate (replicated): across a random schedule of
+    insert/delete/expand/shrink cycles, every plan+commit leaves the
+    device state byte-identical to a from-scratch
+    ``CFTDeviceState.from_bank`` of the mutated bank — all tables, all
+    geometry, the CSR arena."""
+    rng = np.random.default_rng(seed)
+    forest = _forest(num_trees=5, entities_per_tree=10)
+    bank = build_bank(forest)
+    eng = MaintenanceEngine(bank, seed=seed & 0xFFFF, shrink_load=0.3)
+    state = CFTDeviceState.from_bank(bank, forest)
+    eng.mark_staged()
+    hashes = hashing.hash_entities(forest.entity_names)
+    live = {(int(bank.row_tree[r]), int(bank.row_entity[r]))
+            for r in range(bank.num_rows)}
+    serial = 0
+    for cycle in range(5):
+        for _ in range(int(rng.integers(1, 6))):
+            op = rng.random()
+            tree = int(rng.integers(bank.num_trees))
+            if op < 0.5:
+                eng.queue_insert(tree, f"new {seed} {serial}",
+                                 [int(rng.integers(forest.num_nodes))])
+                serial += 1
+            elif live:
+                t, e = sorted(live)[int(rng.integers(len(live)))]
+                eng.queue_delete(t, int(hashes[e]))
+                live.discard((t, e))
+        eng.maintain()
+        if rng.random() < 0.4:
+            eng.expand_tree(int(rng.integers(bank.num_trees)), force=True)
+        if rng.random() < 0.4:
+            eng.shrink_tree(int(rng.integers(bank.num_trees)), force=True)
+        plan = eng.plan_restage()
+        state = commit_restage(state, plan, eng, forest)
+        _assert_state_equal(state, CFTDeviceState.from_bank(bank, forest),
+                            f"seed {seed} cycle {cycle} ({plan.kind})")
+        # and the committed state actually serves: a live row resolves
+        if bank.num_rows:
+            r = int(rng.integers(bank.num_rows))
+            if bool(eng.row_alive[r]):
+                out = retrieve_device(
+                    state,
+                    jnp.asarray(np.asarray([eng.row_hash[r]], np.uint32)),
+                    jnp.asarray(np.asarray([bank.row_tree[r]], np.int32)))
+                assert bool(out.hit[0])
+                state = state.with_temperature(out.temperature)
+                eng.absorb(state)
+
+
+# ------------------------------------------------- serving integration
+
+def test_pipeline_prepare_commit_lifecycle():
+    """RAGPipeline two-phase maintenance: prepare stages the plan while
+    the old state keeps serving (absorb deferred), commit swaps in the
+    spliced state, and the answer paths see the mutation."""
+    from repro.data import HashTokenizer, hospital_corpus
+    from repro.serving import RAGPipeline
+    corpus = hospital_corpus(num_trees=6, num_queries=2)
+    rag = RAGPipeline(corpus, None, tokenizer=HashTokenizer(1024),
+                      use_bank=True)
+    node = int(rag.forest.child_index[0])
+    rag.insert_entity(2, "Brand New Clinic", [node])
+    rep = rag.prepare_maintenance()
+    assert rep.inserted == 1 and rag._coord.deferring
+    assert rag._coord.pending.kind in ("delta", "segment")
+    # serving on the pre-commit state still works (and defers absorb)
+    ans = rag.retrieve(f"Tell me about {rag.forest.entity_names[0]}")
+    assert ans.context
+    assert rag.commit_maintenance()
+    assert not rag._coord.deferring
+    ans = rag.retrieve("Describe the Brand New Clinic please")
+    assert "Brand New Clinic" in ans.entities
+    assert "hierarchical relationship of Brand New Clinic" in ans.context
+    # the wrapper still works end to end
+    rag.delete_entity(2, "Brand New Clinic")
+    rep = rag.maintain()
+    assert rep.deleted == 1 and not rag._coord.deferring
