@@ -544,14 +544,54 @@ class ShardedBank:
 # are invalidated, so callers must drop the pre-commit state.
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-def splice_arena_rows(fps, temp, heads, rows, vf, vt, vh):
+def splice_arena_rows(fps, temp, heads, rows, vf, vt, vh, vkeep):
     """In-place donated scatter of staged rows into the live ``(A, S)``
     arena tables: ``rows`` is sentinel-padded (sentinel = A, out of
     bounds, dropped), the value tables carry the new row contents.  O(K)
-    device work, O(K) host→device bytes."""
+    device work, O(K) host→device bytes.
+
+    Temperature **max-merges** on slots whose key the plan leaves in
+    place (``vkeep``): a bump that landed between ``plan_restage()`` and
+    commit (serving continues on the old state through the prepare
+    phase) lives only on device, so overwriting with the staged value
+    would silently drop it.  Where the key moved (delete, eviction, sort)
+    the slot's identity changed and the staged value wins — a bump for a
+    departed key does not leak onto its successor.  ``vkeep`` is the
+    *plan-time* mask ``staged fp == shadow fp`` — device fingerprints
+    are immutable between commits, so the shadow is the live content;
+    comparing against the donated ``fps`` here instead would race the
+    in-place fps scatter (no data dependency orders them)."""
+    live_t = jnp.where(vkeep, temp[rows], 0)
     return (fps.at[rows].set(vf, mode="drop"),
-            temp.at[rows].set(vt, mode="drop"),
+            temp.at[rows].set(jnp.maximum(vt, live_t), mode="drop"),
             heads.at[rows].set(vh, mode="drop"))
+
+
+def pad_csr(offsets: np.ndarray, nodes: np.ndarray, chunk: int = 256
+            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad the replicated CSR staging arrays to a pow2-chunked capacity.
+
+    The CSR arena grows with every insert batch; staged tight, each
+    growth changes the device state's array shapes and forces the jitted
+    retrieval step to recompile at *every* batch geometry — hundreds of
+    milliseconds on the serve path per churn window.  Padding to the next
+    power of two (floored at ``chunk`` entries) keeps the shapes constant
+    until the arena actually doubles, so recompiles amortize like vector
+    growth.  The pad tail is inert: ``offsets`` repeats the terminal
+    offset (every pad row is empty) and ``nodes`` pads with zeros that no
+    live row can address.  Every staging site (fresh stage and restage
+    plan alike) must pad through here so splice-committed and
+    from-scratch states stay byte-identical."""
+    off = np.asarray(offsets, np.int32)
+    nd = np.asarray(nodes, np.int32)
+    if nd.size == 0:
+        nd = np.zeros(1, np.int32)
+    cap = lambda n: max(chunk, int(2 ** np.ceil(np.log2(n))))  # noqa: E731
+    po = np.full(cap(off.size), off[-1], np.int32)
+    po[:off.size] = off
+    pn = np.zeros(cap(nd.size), np.int32)
+    pn[:nd.size] = nd
+    return po, pn
 
 
 @functools.partial(jax.jit, static_argnames=("lo", "hi"))

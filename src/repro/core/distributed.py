@@ -48,7 +48,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map as _shard_map
 from . import hashing
-from .bank import FilterBank, ShardedBank
+from .bank import FilterBank, ShardedBank, pad_csr
 from .lookup import LookupResult, lookup_arena, sort_buckets_arena
 from .tree import EntityForest
 from .trag import CFTDeviceState, DeviceRetrieval, gather_context
@@ -199,7 +199,7 @@ def stage_sharded_bank(sbank: ShardedBank, forest: EntityForest,
         raise ValueError(f"bank has {sbank.num_shards} shards but mesh "
                          f"axis '{axis}' has {d} devices")
     fps, temp, heads = sbank.packed_tables(arena_rows=arena_rows)
-    csr_off, csr_nodes = sbank.merged_csr()
+    csr_off, csr_nodes = pad_csr(*sbank.merged_csr())
     blk = NamedSharding(mesh, P(axis, None))
     rep = NamedSharding(mesh, P())
     put_b = lambda a: jax.device_put(jnp.asarray(a), blk)     # noqa: E731
@@ -244,7 +244,7 @@ def shard_bank(bank: FilterBank, forest: EntityForest, mesh: Mesh,
                    donate_argnums=(0, 1, 2))
 def sharded_apply_delta(fps: jax.Array, temp: jax.Array, heads: jax.Array,
                         rows: jax.Array, vf: jax.Array, vt: jax.Array,
-                        vh: jax.Array, shift: jax.Array,
+                        vh: jax.Array, vkeep: jax.Array, shift: jax.Array,
                         mesh: Mesh, axis: str):
     """Per-shard in-place row scatter + merged-head-numbering shift.
 
@@ -254,21 +254,28 @@ def sharded_apply_delta(fps: jax.Array, temp: jax.Array, heads: jax.Array,
     ``shift`` is the per-shard merged CSR row-id delta (an insert into
     shard d renumbers every later shard's merged rows — applied here as
     an elementwise add over occupied slots, zero host→device bytes).
+
+    Like :func:`repro.core.bank.splice_arena_rows`, temperature
+    max-merges on slots whose key the plan leaves in place — ``vkeep``
+    is the plan-time ``staged fp == shadow fp`` mask (see there for why
+    the donated fps must not be read for the guard) — so bumps that
+    landed on device between plan and commit survive.
     """
-    def local(f, t, h, r, lf, lt, lh, s):
+    def local(f, t, h, r, lf, lt, lh, lk, s):
         h = jnp.where(h != NULL, h + s[0], h)
         r0 = r[0]
+        live_t = jnp.where(lk[0], t[r0], 0)
         return (f.at[r0].set(lf[0], mode="drop"),
-                t.at[r0].set(lt[0], mode="drop"),
+                t.at[r0].set(jnp.maximum(lt[0], live_t), mode="drop"),
                 h.at[r0].set(lh[0], mode="drop"))
 
     blk = P(axis, None)
     fn = _shard_map(local, mesh=mesh,
                     in_specs=(blk, blk, blk, blk, P(axis, None, None),
                               P(axis, None, None), P(axis, None, None),
-                              P(axis)),
+                              P(axis, None, None), P(axis)),
                     out_specs=(blk, blk, blk), check_rep=False)
-    return fn(fps, temp, heads, rows, vf, vt, vh, shift)
+    return fn(fps, temp, heads, rows, vf, vt, vh, vkeep, shift)
 
 
 @functools.partial(jax.jit, static_argnames=("mesh", "axis"),

@@ -58,6 +58,7 @@ O(changed-bytes) splice + atomic state swap).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -65,7 +66,7 @@ import numpy as np
 from . import hashing
 from .bank import (DEFAULT_LOAD_TARGET, EMPTY_TREE_NB, FilterBank,
                    ShardedBank, _pick_tree_buckets, _scalar_insert,
-                   build_bank_from_rows)
+                   build_bank_from_rows, pad_csr)
 from .cuckoo import (DEFAULT_LOAD_THRESHOLD, DEFAULT_MAX_KICKS, NULL,
                      bulk_place)
 
@@ -145,6 +146,8 @@ class _HostPlan:
     """Planner classification before payload staging (numpy only)."""
     kind: str                                   # none | delta | segment | full
     rows: Optional[np.ndarray] = None           # changed arena rows, new coords
+    keep: Optional[np.ndarray] = None           # (k, S) bool — staged fp ==
+    #   shadow (= live device) fp, the commit-time temperature merge guard
     seg: Optional[Tuple[int, int, int, int]] = None   # (tree, lo, hi_old, hi_new)
     csr_appended: bool = False                  # CSR rows grew since staging
 
@@ -164,6 +167,7 @@ class PendingRestage:
     val_fps: Optional[object] = None    # (Kpad, S) staged row contents
     val_temp: Optional[object] = None
     val_heads: Optional[object] = None
+    val_keep: Optional[object] = None   # (Kpad, S) bool — temp merge guard
     changed_rows: int = 0               # true (unpadded) count
     seg_tree: int = -1                  # segment splice: which tree resized
     seg_lo: int = 0                     # arena rows [seg_lo, seg_hi_old) out,
@@ -196,6 +200,7 @@ class PendingShardedRestage:
     val_fps: Optional[object] = None    # (D, Kpad, S)
     val_temp: Optional[object] = None
     val_heads: Optional[object] = None  # merged numbering (new bases)
+    val_keep: Optional[object] = None   # (D, Kpad, S) bool — temp merge guard
     head_shift: Optional[object] = None  # (D,) int32 or None when all-zero
     segments: List[Tuple[int, int, object, object, object]] = \
         dataclasses.field(default_factory=list)  # (owner, start, f, t, h)
@@ -738,11 +743,20 @@ class MaintenanceEngine:
                 hi_new = int(b.bucket_offsets[t + 1])
                 plan.kind = "segment"
                 plan.seg = (t, lo, hi_old, hi_new)
-                plan.rows = np.concatenate([
-                    self._diff_region(0, lo, 0),
-                    self._diff_region(hi_new, b.total_buckets, hi_old)])
+                r1 = self._diff_region(0, lo, 0)
+                r2 = self._diff_region(hi_new, b.total_buckets, hi_old)
+                plan.rows = np.concatenate([r1, r2])
+                # commit-time temperature merge guard: staged fp == what
+                # is live on device right now (= the shadow; r2 rows sit
+                # past the resized segment, shifted in old coordinates)
+                plan.keep = np.concatenate([
+                    b.fingerprints[r1] == sh.fingerprints[r1],
+                    b.fingerprints[r2]
+                    == sh.fingerprints[r2 - (hi_new - hi_old)]])
             else:
                 plan.rows = self._diff_region(0, b.total_buckets, 0)
+                plan.keep = (b.fingerprints[plan.rows]
+                             == sh.fingerprints[plan.rows])
                 if plan.rows.size == 0 and not plan.csr_appended:
                     plan.kind = "none"
             return plan
@@ -775,6 +789,8 @@ class MaintenanceEngine:
                 [b.temperature[rows], pad]))
             plan.val_heads = jnp.asarray(np.concatenate(
                 [b.heads[rows], pad]))
+            plan.val_keep = jnp.asarray(np.concatenate(
+                [host.keep, np.zeros((kp - k, b.slots), bool)]))
             plan.changed_rows = k
         if host.seg is not None:
             t, lo, hi_old, hi_new = host.seg
@@ -788,10 +804,11 @@ class MaintenanceEngine:
         if host.csr_appended:
             # the CSR arena is replicated and O(rows) — staging it whole
             # at plan time (async device_put, off the commit path) beats
-            # an on-device append that recompiles per grown shape
-            plan.csr_offsets = jnp.asarray(b.csr_offsets)
-            plan.csr_nodes = jnp.asarray(b.csr_nodes if b.csr_nodes.size
-                                         else np.zeros(1, np.int32))
+            # an on-device append that recompiles per grown shape; pad_csr
+            # matches from_bank so the committed shapes stay stable
+            off, nodes = pad_csr(b.csr_offsets, b.csr_nodes)
+            plan.csr_offsets = jnp.asarray(off)
+            plan.csr_nodes = jnp.asarray(nodes)
         return plan
 
 
@@ -963,6 +980,7 @@ class ShardedMaintenanceEngine:
         vf = np.zeros((d, kp, s), np.uint32)
         vt = np.zeros((d, kp, s), np.int32)
         vh = np.full((d, kp, s), NULL, np.int32)
+        vk = np.zeros((d, kp, s), bool)
         any_rows = False
         for k, (p, b) in enumerate(zip(host, sb.banks)):
             r = p.rows if p.rows is not None else np.zeros(0, np.int64)
@@ -971,6 +989,7 @@ class ShardedMaintenanceEngine:
                 rows[k, :r.size] = r
                 vf[k, :r.size] = b.fingerprints[r]
                 vt[k, :r.size] = b.temperature[r]
+                vk[k, :r.size] = p.keep
                 heads = b.heads[r]
                 vh[k, :r.size] = np.where(heads != NULL,
                                           heads + np.int32(base_new[k]),
@@ -1003,14 +1022,14 @@ class ShardedMaintenanceEngine:
             plan.val_fps = jnp.asarray(vf)
             plan.val_temp = jnp.asarray(vt)
             plan.val_heads = jnp.asarray(vh)
+            plan.val_keep = jnp.asarray(vk)
             plan.head_shift = jnp.asarray(shift)
         plan.new_arena_rows = [b.total_buckets for b in sb.banks]
         if plan.segments:
             plan.tree_offset = sb.tree_arena_offsets().astype(np.int32)
             plan.tree_nb = sb.tree_nb_map()
         if any(p.csr_appended for p in host):
-            off, nodes = sb.merged_csr()
-            plan.csr_offsets, plan.csr_nodes = off, nodes
+            plan.csr_offsets, plan.csr_nodes = pad_csr(*sb.merged_csr())
         return plan
 
     # ------------------------------------------------------------- stats
@@ -1055,7 +1074,7 @@ def _commit_replicated(state, plan: PendingRestage, bank: FilterBank,
     if plan.rows is not None:
         fps, temp, heads = splice_arena_rows(
             fps, temp, heads, plan.rows, plan.val_fps, plan.val_temp,
-            plan.val_heads)
+            plan.val_heads, plan.val_keep)
     kw.update(fingerprints=fps, temperature=temp, heads=heads)
     if plan.csr_offsets is not None:
         kw["csr_offsets"] = plan.csr_offsets
@@ -1081,7 +1100,8 @@ def _commit_sharded(state, plan: PendingShardedRestage, sbank: ShardedBank,
     if plan.rows is not None:
         fps, temp, heads = sharded_apply_delta(
             fps, temp, heads, plan.rows, plan.val_fps, plan.val_temp,
-            plan.val_heads, plan.head_shift, state.mesh, state.axis)
+            plan.val_heads, plan.val_keep, plan.head_shift,
+            state.mesh, state.axis)
     for owner, start, sf, st, sh in plan.segments:
         fps, temp, heads = sharded_splice_segment(
             fps, temp, heads, sf, st, sh,
@@ -1125,9 +1145,11 @@ def commit_restage(state, plan, engine, forest):
 
     ``state`` is the ``CFTDeviceState`` / ``ShardedBankState`` the plan
     was computed against (plus any temperature bumps it accumulated since
-    — overwritten only on rows the plan stages, exactly as a from-scratch
-    restage would); ``engine`` the maintenance engine that produced the
-    plan.  Returns the post-commit state; the splice ops donate the old
+    — those **max-merge** into staged rows wherever the staged
+    fingerprint matches the live one, so serving through the prepare
+    window never silently drops heat; a slot whose key the plan moved or
+    cleared takes the staged value); ``engine`` the maintenance engine
+    that produced the plan.  Returns the post-commit state; the splice ops donate the old
     state's arena buffers, so the caller must drop every reference to
     ``state`` and use the returned value (on backends without donation
     support this degrades to a copy, never to corruption).
@@ -1167,7 +1189,8 @@ def warm_restage(state, plan) -> None:
         if plan.rows is not None:
             f, t, h = sharded_apply_delta(
                 f, t, h, plan.rows, plan.val_fps, plan.val_temp,
-                plan.val_heads, plan.head_shift, state.mesh, state.axis)
+                plan.val_heads, plan.val_keep, plan.head_shift,
+                state.mesh, state.axis)
         for owner, start, sf, st, sh in plan.segments:
             f, t, h = sharded_splice_segment(
                 f, t, h, sf, st, sh, jnp.int32(owner), jnp.int32(start),
@@ -1182,12 +1205,13 @@ def warm_restage(state, plan) -> None:
             lo=plan.seg_lo, hi=plan.seg_hi_old)
     if plan.rows is not None:
         splice_arena_rows(f, t, h, plan.rows, plan.val_fps, plan.val_temp,
-                          plan.val_heads)
+                          plan.val_heads, plan.val_keep)
 
 
 class RestageCoordinator:
     """The serving-side two-phase restage lifecycle, shared by
-    ``ServeEngine`` and ``RAGPipeline`` so its invariants live once:
+    ``ServeEngine``, ``RAGPipeline`` and ``AsyncServeEngine`` so its
+    invariants live once:
 
     * plans never stack — a caller must commit (or drop) the pending plan
       before preparing another;
@@ -1196,6 +1220,15 @@ class RestageCoordinator:
       bumps absorbed mid-flight would desync the staged payload;
     * the splice executables compile during prepare (``warm_restage``),
       never on the commit path.
+
+    The three phases are serialized by one lock so ``prepare`` may run on
+    a background maintenance thread strictly under in-flight batches
+    while the serve thread keeps harvesting and committing: ``absorb``
+    and non-blocking ``commit`` *try* the lock and fall back to a no-op
+    rather than stall serving behind a host maintenance pass — skipped
+    bumps stay on device (the commit max-merges them, the first
+    post-commit absorb harvests them), a skipped commit retries at the
+    next batch boundary.
 
     The caller owns the device state: ``prepare(state)`` runs the host
     maintenance pass and stages the plan; ``commit(state)`` returns the
@@ -1206,6 +1239,8 @@ class RestageCoordinator:
         self.engine = engine            # Maintenance- or Sharded- engine
         self.forest = forest
         self.pending = None
+        self.plan_time: Optional[float] = None   # clock() at last prepare
+        self._lock = threading.Lock()
         engine.mark_staged()            # caller attaches a freshly staged
         #                                 state over this engine's bank
 
@@ -1214,22 +1249,47 @@ class RestageCoordinator:
         """True while a staged plan awaits commit — skip absorbs."""
         return self.pending is not None
 
-    def prepare(self, state) -> MaintenanceReport:
+    def absorb(self, state) -> int:
+        """Best-effort temperature harvest: skipped (returns 0) while a
+        plan is pending or another thread holds the lifecycle lock.
+        Deferred bumps are never lost — they ride on device until the
+        commit max-merge and the next successful absorb."""
+        if not self._lock.acquire(blocking=False):
+            return 0
+        try:
+            if self.pending is not None:
+                return 0
+            return self.engine.absorb(state)
+        finally:
+            self._lock.release()
+
+    def prepare(self, state, now: Optional[float] = None
+                ) -> MaintenanceReport:
         """Host maintenance pass + plan + payload staging + splice
         compilation — all overlappable with in-flight serving on the
         (still untouched) ``state``."""
-        assert self.pending is None, "commit the pending plan first"
-        report = self.engine.maintain(state)
-        if report.changed and state is not None:
-            self.pending = self.engine.plan_restage()
-            warm_restage(state, self.pending)
-        return report
+        with self._lock:
+            assert self.pending is None, "commit the pending plan first"
+            report = self.engine.maintain(state)
+            if report.changed and state is not None:
+                self.pending = self.engine.plan_restage()
+                self.plan_time = now
+                warm_restage(state, self.pending)
+            return report
 
-    def commit(self, state) -> Tuple[object, bool]:
-        """O(changed-bytes) splice + swap; returns (new state, applied)."""
-        if self.pending is None:
+    def commit(self, state, blocking: bool = True) -> Tuple[object, bool]:
+        """O(changed-bytes) splice + swap; returns (new state, applied).
+        With ``blocking=False`` a lock held by an in-flight prepare makes
+        this a no-op (the caller retries at the next batch boundary)."""
+        if not self._lock.acquire(blocking=blocking):
             return state, False
-        state = commit_restage(state, self.pending, self.engine,
-                               self.forest)
-        self.pending = None
-        return state, True
+        try:
+            if self.pending is None:
+                return state, False
+            state = commit_restage(state, self.pending, self.engine,
+                                   self.forest)
+            self.pending = None
+            self.plan_time = None
+            return state, True
+        finally:
+            self._lock.release()

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import hashing
-from .bank import FilterBank
+from .bank import FilterBank, pad_csr
 from .context import (EntityContext, context_from_arena, context_from_csr,
                       gather_descendants, gather_hierarchy, render_context)
 from .cuckoo import CFTIndex, build_index
@@ -175,6 +175,9 @@ class CFTDeviceState:
     @classmethod
     def from_bank(cls, bank: FilterBank, forest: EntityForest
                   ) -> "CFTDeviceState":
+        # pad_csr keeps the CSR shapes stable under churn so the jitted
+        # retrieval step never recompiles on a restage commit
+        csr_off, csr_nodes = pad_csr(bank.csr_offsets, bank.csr_nodes)
         return cls(
             fingerprints=jnp.asarray(bank.fingerprints),
             temperature=jnp.asarray(bank.temperature),
@@ -182,9 +185,8 @@ class CFTDeviceState:
             bucket_offsets=jnp.asarray(
                 bank.bucket_offsets.astype(np.int32)),
             tree_nb=jnp.asarray(bank.tree_nb.astype(np.int32)),
-            csr_offsets=jnp.asarray(bank.csr_offsets),
-            csr_nodes=jnp.asarray(bank.csr_nodes if bank.csr_nodes.size
-                                  else np.zeros((1,), np.int32)),
+            csr_offsets=jnp.asarray(csr_off),
+            csr_nodes=jnp.asarray(csr_nodes),
             **cls._forest_arrays(forest),
         )
 

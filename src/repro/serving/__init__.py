@@ -1,6 +1,12 @@
-"""Serving: engine (prefill/decode/scheduler) + the CFT-RAG pipeline."""
-from .engine import Request, ServeEngine, kv_cache_bytes
+"""Serving: engine (prefill/decode/scheduler), continuous-batching async
+front end, and the CFT-RAG pipeline."""
+from .async_engine import AsyncServeEngine, AsyncStats, RetrievalSlice
+from .engine import Request, RetrievalSession, ServeEngine, kv_cache_bytes
 from .rag import RAGAnswer, RAGPipeline
+from .scheduler import (CommitPolicy, MicroBatcher, PendingRetrieval,
+                        bucket_batch, bucket_shapes)
 
-__all__ = ["Request", "ServeEngine", "kv_cache_bytes", "RAGAnswer",
-           "RAGPipeline"]
+__all__ = ["AsyncServeEngine", "AsyncStats", "RetrievalSlice", "Request",
+           "RetrievalSession", "ServeEngine", "kv_cache_bytes", "RAGAnswer",
+           "RAGPipeline", "CommitPolicy", "MicroBatcher", "PendingRetrieval",
+           "bucket_batch", "bucket_shapes"]

@@ -1,0 +1,345 @@
+"""Async serving engine: continuous batching over the retrieval session.
+
+``ServeEngine`` processes synchronous batches back-to-back; nothing it
+reports reflects what a caller sees under load.  ``AsyncServeEngine``
+models the real request lifecycle:
+
+1. **submit** — callers enqueue ``(tree_ids, hashes)`` query groups from
+   any thread (or via ``retrieve_async`` from an event loop) and get a
+   future per request.
+2. **coalesce** — a ``MicroBatcher`` collects arrivals until the batch
+   is full or the oldest request has waited out the latency budget.
+3. **dispatch** — the batch pads to a pow2 bucket (closed shape set, so
+   the jitted step never recompiles after warmup) and launches on
+   device.
+4. **overlap** — while the batch is in flight, the maintenance pass
+   (absorb → delta → compact → sort → stage changed bytes) runs on the
+   host against the *pre-dispatch* state snapshot; the serving state is
+   untouched.
+5. **commit** — between batches, under the ``CommitPolicy`` (every N
+   batches or plan age past deadline), the staged plan splices into the
+   serving state in O(changed bytes).
+
+Retrieval outputs (hit/locations/up/down) depend only on the bank
+content, not on temperature or batch grouping, so answers are
+bit-identical to the synchronous engine on the same request stream —
+the equivalence gate in ``benchmarks/bench_async.py`` checks exactly
+that.
+
+Determinism hooks: the constructor takes a ``clock`` (tests inject a
+fake), and :meth:`pump` drives one scheduling step inline without any
+threads.  ``start()``/``stop()`` run the same logic on a scheduler
+thread for real workloads.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .engine import RetrievalSession
+from .scheduler import (CommitPolicy, MicroBatcher, PendingRetrieval,
+                        bucket_shapes)
+
+
+@dataclasses.dataclass
+class RetrievalSlice:
+    """Per-request view of a batched retrieval: row ``i`` answers the
+    request's ``i``-th ``(tree_id, hash)`` query."""
+    hit: np.ndarray
+    locations: np.ndarray
+    up: np.ndarray
+    down: np.ndarray
+
+
+@dataclasses.dataclass
+class AsyncStats:
+    """Counters the benchmark and tests read after a run."""
+    batches: int = 0
+    requests: int = 0
+    queries: int = 0
+    padded_queries: int = 0
+    prepares: int = 0
+    commits: int = 0
+    bucket_histogram: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+class AsyncServeEngine:
+    """Continuous-batching front end over a :class:`RetrievalSession`.
+
+    ``engine`` is a ``ServeEngine`` (its ``.retrieval`` session is used)
+    or a bare ``RetrievalSession``.  ``maintenance`` picks how the
+    prepare phase runs: ``"inline"`` (default) runs it on the scheduler
+    thread strictly under the in-flight batch — dispatch, prepare, then
+    block on results; ``"thread"`` hands it to a background worker so
+    even the host pass is off the serving thread; ``"off"`` disables
+    background maintenance entirely (callers drive ``maintain()``
+    themselves).
+    """
+
+    def __init__(self, engine, *, latency_budget: float = 2e-3,
+                 max_batch: int = 256, min_bucket: int = 16,
+                 commit_every: int = 4, commit_deadline: float = 0.25,
+                 clock=time.monotonic, maintenance: str = "inline"):
+        self.session: RetrievalSession = getattr(engine, "retrieval", engine)
+        if maintenance not in ("inline", "thread", "off"):
+            raise ValueError(f"unknown maintenance mode {maintenance!r}")
+        self.maintenance = maintenance
+        self.clock = clock
+        self.batcher = MicroBatcher(latency_budget=latency_budget,
+                                    max_batch=max_batch,
+                                    min_bucket=min_bucket)
+        self.policy = CommitPolicy(commit_every=commit_every,
+                                   deadline=commit_deadline)
+        self.stats = AsyncStats()
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        # thread-mode prepare handoff: scheduler stores the pre-dispatch
+        # snapshot and sets the event; the worker runs the host pass.
+        self._prep_event = threading.Event()
+        self._prep_state = None
+        self._prep_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ intake
+    def submit(self, tree_ids: Sequence[int],
+               hashes: Sequence[int]) -> Future:
+        """Enqueue one retrieval request; the future resolves to a
+        :class:`RetrievalSlice` once the batch it rides in completes.
+        Thread-safe."""
+        if len(tree_ids) != len(hashes):
+            raise ValueError("tree_ids and hashes length mismatch")
+        req = PendingRetrieval(tree_ids=list(tree_ids),
+                               hashes=list(hashes),
+                               arrive_t=self.clock())
+        with self._work:
+            if self._stop:
+                raise RuntimeError("engine is stopped")
+            self.batcher.add(req)
+            self._work.notify()
+        return req.future
+
+    async def retrieve_async(self, tree_ids: Sequence[int],
+                             hashes: Sequence[int]) -> RetrievalSlice:
+        """Event-loop flavor of :meth:`submit`."""
+        return await asyncio.wrap_future(self.submit(tree_ids, hashes))
+
+    def warmup(self) -> int:
+        """Pre-compile every bucket geometry the batcher can produce so
+        the measured run never hits a compile.  Returns the number of
+        shapes touched."""
+        shapes = bucket_shapes(self.batcher.min_bucket,
+                               self.batcher.max_batch)
+        for s in shapes:
+            hh, tid, _ = self.session.pad_queries([0], [0], pad_to=s)
+            out = self.session.retrieve_dispatch(hh, tid)
+            np.asarray(out.hit)
+        self.session.harvest()
+        return len(shapes)
+
+    # ----------------------------------------------------- deterministic
+    def pump(self, now: Optional[float] = None) -> bool:
+        """Drive one scheduling step inline: launch a batch if one is
+        due, then commit a staged plan if the policy says so.  Returns
+        True when a batch launched.  This is the thread-free path the
+        deterministic tests (and single-threaded callers) use."""
+        explicit = now is not None
+        now = self.clock() if now is None else now
+        launched = False
+        with self._lock:
+            batch = self.batcher.pop() if self.batcher.ready(now) else []
+        if batch:
+            self._launch(batch, now)
+            launched = True
+        self._maybe_commit(now if explicit else self.clock())
+        return launched
+
+    def flush(self, now: Optional[float] = None) -> int:
+        """Launch until the queue drains regardless of deadlines (used on
+        stop so no future is left hanging).  Returns batches launched."""
+        n = 0
+        while True:
+            with self._lock:
+                batch = self.batcher.pop()
+            if not batch:
+                break
+            self._launch(batch, self.clock() if now is None else now)
+            n += 1
+        return n
+
+    # ------------------------------------------------------------ batch
+    def _launch(self, batch: List[PendingRetrieval], now: float) -> None:
+        tids: List[int] = []
+        hhs: List[int] = []
+        for req in batch:
+            tids.extend(int(t) for t in req.tree_ids)
+            hhs.extend(int(h) for h in req.hashes)
+        bucket = self.batcher.bucket(batch)
+
+        # pre-dispatch snapshot: the maintenance pass absorbs against
+        # arrays that are already materialized, so it never blocks on the
+        # batch we just launched; this batch's bumps harvest next cycle.
+        snapshot = self.session.state
+        hh, tid, b = self.session.pad_queries(tids, hhs, pad_to=bucket)
+        try:
+            out = self.session.retrieve_dispatch(hh, tid)
+        except Exception as exc:                      # pragma: no cover
+            for req in batch:
+                req.future.set_exception(exc)
+            raise
+
+        self._maybe_prepare(snapshot, now)
+
+        # materializing blocks until the batch lands — everything above
+        # ran under it.
+        hit = np.asarray(out.hit)
+        loc = np.asarray(out.locations)
+        up = np.asarray(out.up)
+        down = np.asarray(out.down)
+        self.session.harvest()
+
+        off = 0
+        for req in batch:
+            k = len(req)
+            req.future.set_result(RetrievalSlice(
+                hit=hit[off:off + k], locations=loc[off:off + k],
+                up=up[off:off + k], down=down[off:off + k]))
+            off += k
+
+        with self._lock:
+            self.policy.note_batch()
+            self.stats.batches += 1
+            self.stats.requests += len(batch)
+            self.stats.queries += b
+            self.stats.padded_queries += bucket - b
+            self.stats.bucket_histogram[bucket] = \
+                self.stats.bucket_histogram.get(bucket, 0) + 1
+
+    # ------------------------------------------------------ maintenance
+    def _maybe_prepare(self, snapshot, now: float) -> None:
+        if self.maintenance == "off" or self.session.coord is None:
+            return
+        if self.session.coord.deferring:
+            return
+        if self.session.pending_mutations() == 0:
+            return
+        if self.maintenance == "thread":
+            if not self._prep_event.is_set():
+                self._prep_state = snapshot
+                self._prep_event.set()
+            return
+        self._prepare(snapshot, now)
+
+    def _prepare(self, snapshot, now: float) -> None:
+        # coord.prepare (not session.prepare_maintenance): a pending plan
+        # is the scheduler's to commit between batches — prepare must
+        # never flush one from under it.
+        coord = self.session.coord
+        if coord is None or coord.deferring:
+            return
+        report = coord.prepare(snapshot, now=now)
+        with self._lock:
+            self.stats.prepares += 1
+            if coord.deferring:
+                self.policy.note_plan(now)
+
+    def _maybe_commit(self, now: float) -> None:
+        coord = self.session.coord
+        if coord is None or not coord.deferring:
+            return
+        with self._lock:
+            due = self.policy.due(now)
+        if not due:
+            return
+        # non-blocking: if the prepare worker holds the lifecycle lock we
+        # retry on the next pump rather than stalling the serving thread.
+        if self.session.commit_maintenance(blocking=False):
+            with self._lock:
+                self.policy.clear()
+                self.stats.commits += 1
+
+    def _prep_loop(self) -> None:
+        while True:
+            self._prep_event.wait()
+            if self._stop:
+                return
+            state, self._prep_state = self._prep_state, None
+            if state is not None:
+                self._prepare(state, self.clock())
+            self._prep_event.clear()
+            if self._stop:
+                return
+
+    # ---------------------------------------------------------- threads
+    def start(self) -> None:
+        """Spin up the scheduler thread (and, in ``"thread"`` maintenance
+        mode, the prepare worker)."""
+        if self._thread is not None:
+            raise RuntimeError("already started")
+        self._stop = False
+        if self.maintenance == "thread":
+            self._prep_thread = threading.Thread(
+                target=self._prep_loop, name="cft-prepare", daemon=True)
+            self._prep_thread.start()
+        self._thread = threading.Thread(
+            target=self._schedule_loop, name="cft-scheduler", daemon=True)
+        self._thread.start()
+
+    def _schedule_loop(self) -> None:
+        while True:
+            with self._work:
+                if self._stop:
+                    return
+                now = self.clock()
+                if not self.batcher.ready(now):
+                    deadline = self.batcher.deadline()
+                    timeout = None
+                    if deadline is not None:
+                        timeout = max(0.0, deadline - now)
+                    if self.policy.armed:
+                        # wake for the commit deadline even when idle
+                        t2 = max(0.0, self.policy.deadline / 4)
+                        timeout = t2 if timeout is None else min(timeout, t2)
+                    self._work.wait(timeout=timeout)
+                    if self._stop:
+                        return
+                now = self.clock()
+                batch = self.batcher.pop() if self.batcher.ready(now) else []
+            if batch:
+                self._launch(batch, now)
+            self._maybe_commit(self.clock())
+
+    def stop(self, commit: bool = True) -> None:
+        """Stop the scheduler, drain the queue (every outstanding future
+        resolves), and optionally commit any staged plan."""
+        with self._work:
+            self._stop = True
+            self._work.notify_all()
+        self._prep_event.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._prep_thread is not None:
+            self._prep_thread.join()
+            self._prep_thread = None
+        self.flush()
+        if commit and self.session.coord is not None \
+                and self.session.coord.deferring:
+            if self.session.commit_maintenance():
+                with self._lock:
+                    self.policy.clear()
+                    self.stats.commits += 1
+
+    def __enter__(self) -> "AsyncServeEngine":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

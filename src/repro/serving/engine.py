@@ -33,28 +33,39 @@ class Request:
     out_ids: Optional[List[int]] = None
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, cache_size: int = 512,
-                 batch_size: int = 4):
-        self.cfg = cfg
-        self.params = params
-        self.cache_size = cache_size
-        self.batch_size = batch_size
+class RetrievalSession:
+    """The enqueue-able retrieval unit behind every serving front end.
 
-        self._prefill = jax.jit(
-            functools.partial(lm.prefill, cfg, cache_size=cache_size))
-        self._decode = jax.jit(
-            functools.partial(lm.decode_step, cfg), donate_argnums=(2,))
-        self._ret_state: Optional[CFTDeviceState] = None
-        self._maint: Optional[MaintenanceEngine] = None
-        self._coord: Optional[RestageCoordinator] = None
+    Owns a bank-axis device state, the jitted lookup step, the padding
+    policy, temperature threading, and the two-phase maintenance
+    lifecycle.  ``ServeEngine`` composes one (synchronous batches),
+    ``AsyncServeEngine`` schedules one (continuous batching), and
+    ``RAGPipeline``'s device path delegates to one — so the state-swap /
+    harvest / restage invariants live in exactly one place.
 
-    # ---------------------------------------------------------- retrieval
-    def attach_retrieval(self, state, lookup_fn=None,
-                         max_locs: int = 4, n: int = 3,
-                         batch_pad: int = 64) -> None:
-        """Fuse CFT retrieval into the engine: one jitted step over the
-        bank-axis device state, shape-stable via fixed padding geometry.
+    The hot path splits into dispatch and harvest so a scheduler can
+    overlap host work with the in-flight device batch:
+
+    * :meth:`pad_queries` — shape-stable padding (fixed multiple for the
+      sync engine, pow2 buckets for the async one);
+    * :meth:`retrieve_dispatch` — run the jitted step and thread the
+      temperature state *without* forcing a device sync;
+    * :meth:`harvest` — best-effort absorb of device temperature into
+      the host bank (skipped while a restage plan is pending).
+    """
+
+    def __init__(self):
+        self.state = None                      # CFTDeviceState | Sharded
+        self.maint: Optional[MaintenanceEngine] = None
+        self.coord: Optional[RestageCoordinator] = None
+        self.batch_pad = 64
+        self._step = None
+
+    # ------------------------------------------------------------ attach
+    def attach(self, state, lookup_fn=None, max_locs: int = 4, n: int = 3,
+               batch_pad: int = 64) -> None:
+        """Point the session at a device state: one jitted step over the
+        bank-axis layout, shape-stable via the padding policy.
 
         ``state`` is either a replicated :class:`CFTDeviceState` or a
         bank-axis :class:`ShardedBankState` — the sharded step routes each
@@ -62,65 +73,90 @@ class ServeEngine:
         probing a replicated bank; everything downstream (padding policy,
         temperature threading, maintenance harvest) is identical.
         """
-        self._ret_state = state
-        self._ret_pad = batch_pad
+        self.state = state
+        self.batch_pad = batch_pad
         if isinstance(state, ShardedBankState):
             # already jitted; mesh/axis ride in the state's static aux
-            self._ret_step = functools.partial(
+            self._step = functools.partial(
                 sharded_retrieve_device, max_locs=max_locs, n=n,
                 lookup_fn=lookup_fn)
         else:
-            self._ret_step = jax.jit(functools.partial(
+            self._step = jax.jit(functools.partial(
                 retrieve_device, max_locs=max_locs, n=n,
                 lookup_fn=lookup_fn))
 
-    def retrieve(self, tree_ids: Sequence[int],
-                 hashes: Sequence[int]) -> DeviceRetrieval:
-        """Serve one ``(tree_id, hash)`` query batch.
+    def attach_maintenance(self, maint, forest) -> None:
+        """Attach a host-side maintenance engine over the bank backing
+        the attached state — which must have just been staged from that
+        bank (the engine's restage shadow initializes to its content)."""
+        self.maint = maint
+        self.coord = RestageCoordinator(maint, forest)
 
-        Queries pad to a multiple of ``batch_pad`` (one compilation per
-        geometry, like the token scheduler).  Pad slots query tree 0 with
-        hash 0; a pad hash can in principle alias a stored fingerprint,
-        which only over-bumps that slot's temperature — a heuristic,
-        not a correctness input.
-        """
-        if self._ret_state is None:
-            raise RuntimeError("call attach_retrieval() first")
+    # ---------------------------------------------------------- hot path
+    def pad_queries(self, tree_ids: Sequence[int], hashes: Sequence[int],
+                    pad_to: Optional[int] = None
+                    ) -> Tuple[jax.Array, jax.Array, int]:
+        """Pad a query batch to a shape-stable geometry; returns
+        ``(hashes, tree_ids, true_length)``.  Default policy rounds up to
+        a multiple of ``batch_pad``; a caller-picked ``pad_to`` (the
+        async engine's pow2 buckets) overrides it.  Pad slots query tree
+        0 with hash 0; a pad hash can in principle alias a stored
+        fingerprint, which only over-bumps that slot's temperature — a
+        heuristic, not a correctness input."""
         b = len(hashes)
-        bp = max(self._ret_pad, -(-b // self._ret_pad) * self._ret_pad)
+        bp = pad_to if pad_to is not None else \
+            max(self.batch_pad, -(-b // self.batch_pad) * self.batch_pad)
+        if bp < b:
+            raise ValueError(f"pad_to {bp} < batch {b}")
         tid = np.zeros((bp,), np.int32)
         tid[:b] = np.asarray(tree_ids, np.int32)
         hh = np.zeros((bp,), np.uint32)
         hh[:b] = np.asarray(hashes, np.uint32)
-        out = self._ret_step(self._ret_state, jnp.asarray(hh),
-                             jnp.asarray(tid))
-        self._ret_state = self._ret_state.with_temperature(out.temperature)
-        if self._maint is not None and not self._coord.deferring:
-            # close the paper's feedback loop: harvest this batch's bumps
-            # into the host bank (drives the idle-sort trigger policy).
-            # While a restage is staged-but-uncommitted the harvest is
-            # deferred — bumps stay on device and the first post-commit
-            # batch harvests them.
-            self._maint.absorb(self._ret_state)
+        return jnp.asarray(hh), jnp.asarray(tid), b
+
+    def retrieve_dispatch(self, hh: jax.Array, tid: jax.Array):
+        """Dispatch one already-padded retrieval step and thread the
+        bumped temperature into the live state.  Returns the raw padded
+        result *without* blocking — the arrays are in flight, so host
+        maintenance can run under the batch before the caller touches
+        them."""
+        if self.state is None:
+            raise RuntimeError("attach a retrieval state first")
+        out = self._step(self.state, hh, tid)
+        self.state = self.state.with_temperature(out.temperature)
+        return out
+
+    def harvest(self) -> int:
+        """Close the paper's feedback loop: absorb this batch's bumps
+        into the host bank (drives the idle-sort trigger policy).  While
+        a restage is staged-but-uncommitted — or a background prepare
+        holds the lifecycle lock — the harvest is skipped; bumps stay on
+        device and the first post-commit batch harvests them."""
+        if self.coord is None:
+            return 0
+        return self.coord.absorb(self.state)
+
+    def retrieve(self, tree_ids: Sequence[int],
+                 hashes: Sequence[int]) -> DeviceRetrieval:
+        """Serve one ``(tree_id, hash)`` query batch synchronously: pad,
+        dispatch, harvest, slice back to the true batch."""
+        hh, tid, b = self.pad_queries(tree_ids, hashes)
+        out = self.retrieve_dispatch(hh, tid)
+        self.harvest()
         return DeviceRetrieval(hit=out.hit[:b], locations=out.locations[:b],
                                up=out.up[:b], down=out.down[:b],
                                temperature=out.temperature)
 
-    # -------------------------------------------------------- maintenance
-    def attach_maintenance(self, maint, forest) -> None:
-        """Attach a host-side maintenance engine (``MaintenanceEngine`` or
-        ``ShardedMaintenanceEngine``) over the bank backing the attached
-        retrieval state — which must have just been staged from that bank
-        (the engine's restage shadow is initialized to its content).
-        ``retrieve`` then harvests temperature after every query batch,
-        and :meth:`maintain` (called between batches, or by ``serve``
-        automatically) applies queued insert/delete deltas, compacts,
-        resorts, and splice-commits the device state whenever the bank
-        mutated."""
-        self._maint = maint
-        self._coord = RestageCoordinator(maint, forest)
+    def compile_cache_size(self) -> int:
+        """Number of compiled geometries the jitted step holds (-1 when
+        the backend does not expose it) — the async tests pin this to the
+        bucket count to prove the hot path never recompiles."""
+        size = getattr(self._step, "_cache_size", None)
+        return int(size()) if callable(size) else -1
 
-    def prepare_maintenance(self) -> Optional[MaintenanceReport]:
+    # -------------------------------------------------------- maintenance
+    def prepare_maintenance(self, state=None,
+                            now=None) -> Optional[MaintenanceReport]:
         """Phase one of the zero-pause restage: run the host-side
         maintenance pass (absorb → delta → compact → shrink → sort) and
         stage the restage plan's payload — only the changed bytes.
@@ -130,21 +166,25 @@ class ServeEngine:
         call this, then :meth:`commit_maintenance` once the batch is
         consumed.  The old state keeps serving untouched until commit.
         An uncommitted previous plan is committed first (plans do not
-        stack)."""
-        if self._maint is None:
+        stack).  ``state`` overrides the absorb target — a scheduler
+        passes the pre-dispatch snapshot so the pass never blocks on the
+        in-flight batch's temperature."""
+        if self.maint is None:
             return None
         self.commit_maintenance()
-        return self._coord.prepare(self._ret_state)
+        return self.coord.prepare(self.state if state is None else state,
+                                  now=now)
 
-    def commit_maintenance(self) -> bool:
+    def commit_maintenance(self, blocking: bool = True) -> bool:
         """Phase two: the O(changed-bytes) device splice + atomic state
         swap.  Returns True when a staged plan was applied.  The splice
         donates the old state's arena buffers — the swapped-out state must
         not be probed again (on backends without donation this is merely
         a copy)."""
-        if self._coord is None:
+        if self.coord is None:
             return False
-        self._ret_state, applied = self._coord.commit(self._ret_state)
+        self.state, applied = self.coord.commit(self.state,
+                                                blocking=blocking)
         return applied
 
     def maintain(self) -> Optional[MaintenanceReport]:
@@ -158,13 +198,97 @@ class ServeEngine:
         diverge; a compaction falls back to the full restage).  Without
         one: a pure device-side idle sort (``sort_buckets_arena``) — hot
         fingerprints bubble to slot 0 using temperature alone."""
-        if self._maint is not None:
+        if self.maint is not None:
             report = self.prepare_maintenance()
             self.commit_maintenance()
             return report
-        if self._ret_state is not None:
-            self._ret_state = self._ret_state.sort_idle()
+        if self.state is not None:
+            self.state = self.state.sort_idle()
         return None
+
+    def pending_mutations(self) -> int:
+        """Queued-but-unapplied insert/delete count across the attached
+        engine('s shards) — the async scheduler's prepare trigger."""
+        if self.maint is None:
+            return 0
+        engines = getattr(self.maint, "engines", None)
+        if engines is None:
+            engines = [self.maint]
+        return sum(len(e.delta) for e in engines)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, cache_size: int = 512,
+                 batch_size: int = 4):
+        self.cfg = cfg
+        self.params = params
+        self.cache_size = cache_size
+        self.batch_size = batch_size
+
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill, cfg, cache_size=cache_size))
+        self._decode = jax.jit(
+            functools.partial(lm.decode_step, cfg), donate_argnums=(2,))
+        self.retrieval = RetrievalSession()
+
+    # engine-internal views of the session (kept for callers that poke
+    # the state directly, e.g. the benches' equivalence gates)
+    @property
+    def _ret_state(self):
+        return self.retrieval.state
+
+    @property
+    def _maint(self):
+        return self.retrieval.maint
+
+    @property
+    def _coord(self):
+        return self.retrieval.coord
+
+    # ---------------------------------------------------------- retrieval
+    def attach_retrieval(self, state, lookup_fn=None,
+                         max_locs: int = 4, n: int = 3,
+                         batch_pad: int = 64) -> None:
+        """Fuse CFT retrieval into the engine — see
+        :meth:`RetrievalSession.attach`."""
+        self.retrieval.attach(state, lookup_fn=lookup_fn,
+                              max_locs=max_locs, n=n, batch_pad=batch_pad)
+
+    def retrieve(self, tree_ids: Sequence[int],
+                 hashes: Sequence[int]) -> DeviceRetrieval:
+        """Serve one ``(tree_id, hash)`` query batch (padded to a
+        multiple of ``batch_pad`` — one compilation per geometry, like
+        the token scheduler)."""
+        return self.retrieval.retrieve(tree_ids, hashes)
+
+    # -------------------------------------------------------- maintenance
+    def attach_maintenance(self, maint, forest) -> None:
+        """Attach a host-side maintenance engine (``MaintenanceEngine`` or
+        ``ShardedMaintenanceEngine``) over the bank backing the attached
+        retrieval state — which must have just been staged from that bank
+        (the engine's restage shadow is initialized to its content).
+        ``retrieve`` then harvests temperature after every query batch,
+        and :meth:`maintain` (called between batches, or by ``serve``
+        automatically) applies queued insert/delete deltas, compacts,
+        resorts, and splice-commits the device state whenever the bank
+        mutated."""
+        self.retrieval.attach_maintenance(maint, forest)
+
+    def prepare_maintenance(self) -> Optional[MaintenanceReport]:
+        """Phase one of the zero-pause restage (host maintenance pass +
+        payload staging, overlappable with an in-flight batch) — see
+        :meth:`RetrievalSession.prepare_maintenance`."""
+        return self.retrieval.prepare_maintenance()
+
+    def commit_maintenance(self) -> bool:
+        """Phase two: O(changed-bytes) splice + atomic swap — see
+        :meth:`RetrievalSession.commit_maintenance`."""
+        return self.retrieval.commit_maintenance()
+
+    def maintain(self) -> Optional[MaintenanceReport]:
+        """Idle-time maintenance hook (between serving batches) — see
+        :meth:`RetrievalSession.maintain`."""
+        return self.retrieval.maintain()
 
     # ----------------------------------------------------------- generate
     def generate(self, batch: Dict[str, jax.Array], max_new_tokens: int

@@ -12,7 +12,9 @@ Two retrieval paths:
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
@@ -22,14 +24,14 @@ from ..core import (CFTRAG, CFTDeviceState, MaintenanceEngine,
                     ShardedBankState, ShardedMaintenanceEngine, build_bank,
                     build_forest, build_index, retrieve_device,
                     sharded_retrieve_device, stage_sharded_bank)
-from ..core.maintenance import RestageCoordinator
 from ..core import hashing
 from ..data.datasets import SyntheticCorpus
 from ..data.ner import (add_to_gazetteer, build_gazetteer,
                         recognize_entities)
 from ..data.tokenizer import HashTokenizer
 from ..kernels.cuckoo_lookup.ops import cuckoo_lookup_arena_auto
-from .engine import Request, ServeEngine
+from .async_engine import AsyncServeEngine
+from .engine import Request, RetrievalSession, ServeEngine
 
 SYSTEM_PROMPT = ("You are an assistant answering questions about an "
                  "organization using its entity hierarchy.")
@@ -63,7 +65,10 @@ class RAGPipeline:
         self.use_bank = use_bank
         self._mesh, self._mesh_axis = mesh, mesh_axis
         self.bank = build_bank(self.forest) if use_bank else None
-        self._coord = None          # two-phase restage lifecycle owner
+        # the session owns the device state and the two-phase restage
+        # lifecycle; the pipeline's `_dev_state`/`_coord` are views on it
+        self.session = RetrievalSession()
+        self._gen_lock = threading.Lock()
         if use_bank and mesh is not None:
             # bank-axis sharded deployment: tree ranges partitioned over
             # the mesh axis, shard-local maintenance, all-to-all routing
@@ -84,8 +89,28 @@ class RAGPipeline:
         else:
             self.maintenance = None
             self._dev_state = None
+        if self._dev_state is not None:
+            # builds the padded jitted step (used by the async engine);
+            # the inline `retrieve` below keeps its own exact-shape calls
+            self.session.attach(self._dev_state,
+                                lookup_fn=cuckoo_lookup_arena_auto)
         if self.maintenance is not None:
-            self._coord = RestageCoordinator(self.maintenance, self.forest)
+            self.session.attach_maintenance(self.maintenance, self.forest)
+
+    # device state + restage lifecycle live on the session; keep the
+    # historical attribute names as views so callers (and tests) that
+    # poke `rag._dev_state` / `rag._coord` see the single source of truth
+    @property
+    def _dev_state(self):
+        return self.session.state
+
+    @_dev_state.setter
+    def _dev_state(self, state) -> None:
+        self.session.state = state
+
+    @property
+    def _coord(self):
+        return self.session.coord
 
     # ---------------------------------------------------------- retrieval
     def retrieve(self, query: str,
@@ -98,19 +123,10 @@ class RAGPipeline:
         """
         ents = recognize_entities(query, self.gazetteer)
         if self.use_device_lookup:
-            hashes = jnp.asarray(hashing.hash_entities(ents)
-                                 if ents else np.zeros((1,), np.uint32))
-            b = hashes.shape[0]
-            if tree_scope is not None:
-                trees = jnp.full((b,), tree_scope, jnp.int32)
-            elif self.use_bank:
-                # global query over a bank: (tree_id, hash) pairs for every
-                # tree; per-entity results merge across trees below
-                t = self.bank.num_trees
-                trees = jnp.repeat(jnp.arange(t, dtype=jnp.int32), b)
-                hashes = jnp.tile(hashes, t)
-            else:
-                trees = jnp.zeros((b,), jnp.int32)
+            trees_np, hashes_np, b = self._device_query_batch(ents,
+                                                              tree_scope)
+            hashes = jnp.asarray(hashes_np)
+            trees = jnp.asarray(trees_np)
             if isinstance(self._dev_state, ShardedBankState):
                 # the Pallas arena probe routes per query (segment start +
                 # bucket mask), so it works unchanged after tree-local
@@ -123,23 +139,51 @@ class RAGPipeline:
                                       lookup_fn=cuckoo_lookup_arena_auto)
             self._dev_state = self._dev_state.with_temperature(
                 out.temperature)
-            if self.maintenance is not None and not self._coord.deferring:
-                # harvest defers while a restage is staged-but-uncommitted
-                # (the bank may already carry the next geometry)
-                self.maintenance.absorb(self._dev_state)
-            up, down = np.asarray(out.up), np.asarray(out.down)
-            if tree_scope is None and self.use_bank:
-                t, locs, n = self.bank.num_trees, up.shape[1], up.shape[2]
-                up = (up.reshape(t, b, locs, n).transpose(1, 0, 2, 3)
-                        .reshape(b, t * locs, n))
-                down = (down.reshape(t, b, locs, n).transpose(1, 0, 2, 3)
-                          .reshape(b, t * locs, n))
+            # harvest defers while a restage is staged-but-uncommitted
+            # (the bank may already carry the next geometry)
+            self.session.harvest()
+            up, down = self._merge_bank_updown(np.asarray(out.up),
+                                               np.asarray(out.down),
+                                               b, tree_scope)
             ctxs = self._render_device(ents, up, down)
         else:
             ctxs = self.retriever.render(self.retriever.retrieve(ents))
         prompt = f"{SYSTEM_PROMPT}\n{ctxs}\nQuestion: {query}\nAnswer:"
         return RAGAnswer(query=query, entities=ents, context=ctxs,
                          prompt=prompt)
+
+    def _device_query_batch(self, ents: Sequence[str],
+                            tree_scope: Optional[int] = None):
+        """Map recognized entities to the ``(tree_ids, hashes)`` batch the
+        device step consumes.  ``tree_scope`` routes everything to one
+        tree; bank mode with no scope fans each entity out to every tree
+        (per-entity results merge back in :meth:`_merge_bank_updown`)."""
+        hashes = np.asarray(hashing.hash_entities(ents) if ents
+                            else np.zeros((1,), np.uint32))
+        b = hashes.shape[0]
+        if tree_scope is not None:
+            trees = np.full((b,), tree_scope, np.int32)
+        elif self.use_bank:
+            # global query over a bank: (tree_id, hash) pairs for every
+            # tree; per-entity results merge across trees afterwards
+            t = self.bank.num_trees
+            trees = np.repeat(np.arange(t, dtype=np.int32), b)
+            hashes = np.tile(hashes, t)
+        else:
+            trees = np.zeros((b,), np.int32)
+        return trees, hashes, b
+
+    def _merge_bank_updown(self, up: np.ndarray, down: np.ndarray, b: int,
+                           tree_scope: Optional[int]):
+        """Fold the per-tree fan-out back to per-entity rows: the
+        ``(t*b, locs, n)`` device result regroups as ``(b, t*locs, n)``."""
+        if tree_scope is None and self.use_bank:
+            t, locs, n = self.bank.num_trees, up.shape[1], up.shape[2]
+            up = (up.reshape(t, b, locs, n).transpose(1, 0, 2, 3)
+                    .reshape(b, t * locs, n))
+            down = (down.reshape(t, b, locs, n).transpose(1, 0, 2, 3)
+                      .reshape(b, t * locs, n))
+        return up, down
 
     # -------------------------------------------------------- maintenance
     def insert_entity(self, tree: int, name: str,
@@ -166,18 +210,12 @@ class RAGPipeline:
         retrieval on the still-serving old state).  Commits any previous
         uncommitted plan first; returns the MaintenanceReport (None in
         non-bank mode)."""
-        if self.maintenance is None:
-            return None
-        self.commit_maintenance()
-        return self._coord.prepare(self._dev_state)
+        return self.session.prepare_maintenance()
 
     def commit_maintenance(self) -> bool:
         """Phase two: O(changed-bytes) device splice + atomic swap of the
         retrieval state.  Returns True when a staged plan was applied."""
-        if self._coord is None:
-            return False
-        self._dev_state, applied = self._coord.commit(self._dev_state)
-        return applied
+        return self.session.commit_maintenance()
 
     def maintain(self):
         """Idle-time maintenance: apply queued inserts/deletes, compact,
@@ -216,6 +254,54 @@ class RAGPipeline:
         ans.output_ids = req.out_ids
         ans.text = self.tokenizer.decode(req.out_ids)
         self.maintain()        # generation was the idle window
+        return ans
+
+    # -------------------------------------------------------------- async
+    def async_serving(self, **knobs) -> AsyncServeEngine:
+        """Build a continuous-batching front end over this pipeline's
+        retrieval session (``latency_budget``, ``max_batch``,
+        ``commit_every``, ... forward to :class:`AsyncServeEngine`).
+        The returned engine coalesces concurrent :meth:`answer_async`
+        retrievals into shared device batches and runs the two-phase
+        maintenance lifecycle in the background — do not call
+        :meth:`maintain` concurrently with a started engine."""
+        if self._dev_state is None:
+            raise RuntimeError(
+                "async serving needs use_device_lookup or use_bank")
+        return AsyncServeEngine(self.session, **knobs)
+
+    async def answer_async(self, query: str, aengine: AsyncServeEngine,
+                           max_new_tokens: int = 16,
+                           tree_scope: Optional[int] = None) -> RAGAnswer:
+        """Async flavor of :meth:`answer`: retrieval rides the shared
+        continuous batches of ``aengine`` (built by
+        :meth:`async_serving`), generation runs on an executor thread
+        serialized by a lock (the decode step donates its buffers, so
+        two generations must not interleave).  Maintenance is *not*
+        driven here — the async engine's background lifecycle owns it."""
+        ents = recognize_entities(query, self.gazetteer)
+        trees, hashes, b = self._device_query_batch(ents, tree_scope)
+        sl = await aengine.retrieve_async(
+            [int(t) for t in trees], [int(h) for h in hashes])
+        up, down = self._merge_bank_updown(np.asarray(sl.up),
+                                           np.asarray(sl.down),
+                                           b, tree_scope)
+        ctxs = self._render_device(ents, up, down)
+        prompt = f"{SYSTEM_PROMPT}\n{ctxs}\nQuestion: {query}\nAnswer:"
+        ans = RAGAnswer(query=query, entities=ents, context=ctxs,
+                        prompt=prompt)
+        if self.engine is None:
+            return ans
+        ids = self.tokenizer.encode(ans.prompt, bos=True)
+        req = Request(prompt_ids=ids, max_new_tokens=max_new_tokens)
+
+        def _generate() -> None:
+            with self._gen_lock:
+                self.engine.serve([req])
+
+        await asyncio.get_running_loop().run_in_executor(None, _generate)
+        ans.output_ids = req.out_ids
+        ans.text = self.tokenizer.decode(req.out_ids)
         return ans
 
     # --------------------------------------------------- retrieval metrics

@@ -1,0 +1,170 @@
+"""Continuous-batching primitives for the async serving engine.
+
+Everything here is deterministic and clock-free: callers pass ``now``
+explicitly, so the batching policy is unit-testable without sleeping and
+the engine can swap in a fake clock.  Three pieces:
+
+* :func:`bucket_batch` — pow2 batch-shape buckets.  The retrieval step is
+  jitted per geometry; rounding every coalesced batch up to a power of
+  two bounds the number of compilations at ``log2(max_batch /
+  min_bucket) + 1`` regardless of arrival pattern, so XLA never
+  recompiles on the hot path after warmup.
+* :class:`MicroBatcher` — coalesces request arrivals into batches under a
+  latency budget.  A batch launches when the pending query count reaches
+  ``max_batch`` (bucket-full) or the *oldest* pending request has waited
+  ``latency_budget`` seconds (budget expiry) — the standard continuous-
+  batching tradeoff between padding waste and queueing delay.
+* :class:`CommitPolicy` — decides when the background maintenance loop
+  may splice a staged restage plan into the serving state: every
+  ``commit_every`` batches, or sooner when the plan has aged past
+  ``deadline`` seconds (bounding staleness of the served filter bank).
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import Future
+from typing import List, Optional, Sequence, Tuple
+
+
+def bucket_batch(n: int, min_bucket: int = 16, max_batch: int = 256) -> int:
+    """Smallest power-of-two ``>= n``, clamped to ``[min_bucket,
+    max_batch]``.  ``n`` itself must not exceed ``max_batch``."""
+    if n <= 0:
+        raise ValueError("empty batch")
+    if n > max_batch:
+        raise ValueError(f"batch {n} exceeds max_batch {max_batch}")
+    b = min_bucket
+    while b < n:
+        b <<= 1
+    return min(b, max_batch)
+
+
+def bucket_shapes(min_bucket: int = 16, max_batch: int = 256) -> List[int]:
+    """All pow2 geometries :func:`bucket_batch` can produce — the closed
+    set of shapes the jitted retrieval step will ever see, exposed so
+    tests (and warmup) can enumerate them."""
+    shapes = []
+    b = min_bucket
+    while b < max_batch:
+        shapes.append(b)
+        b <<= 1
+    shapes.append(max_batch)
+    return shapes
+
+
+@dataclasses.dataclass
+class PendingRetrieval:
+    """One enqueued retrieval request: a (tree_ids, hashes) query group
+    whose per-request slice resolves through ``future`` once the batch
+    it rode in completes."""
+    tree_ids: Sequence[int]
+    hashes: Sequence[int]
+    arrive_t: float
+    future: Future = dataclasses.field(default_factory=Future)
+
+    def __len__(self) -> int:
+        return len(self.hashes)
+
+
+class MicroBatcher:
+    """FIFO arrival coalescer.  Not thread-safe — the engine serializes
+    access under its own lock and this class stays pure policy."""
+
+    def __init__(self, latency_budget: float = 2e-3,
+                 max_batch: int = 256, min_bucket: int = 16):
+        if min_bucket > max_batch:
+            raise ValueError("min_bucket > max_batch")
+        self.latency_budget = latency_budget
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self._queue: List[PendingRetrieval] = []
+        self._pending_queries = 0
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending_queries(self) -> int:
+        return self._pending_queries
+
+    def add(self, req: PendingRetrieval) -> None:
+        if len(req) == 0:
+            raise ValueError("empty retrieval request")
+        if len(req) > self.max_batch:
+            raise ValueError(
+                f"request with {len(req)} queries exceeds max_batch "
+                f"{self.max_batch}")
+        self._queue.append(req)
+        self._pending_queries += len(req)
+
+    def ready(self, now: float) -> bool:
+        """Launch condition: bucket-full, or the head request's wait hit
+        the latency budget."""
+        if not self._queue:
+            return False
+        if self._pending_queries >= self.max_batch:
+            return True
+        return (now - self._queue[0].arrive_t) >= self.latency_budget
+
+    def deadline(self) -> Optional[float]:
+        """Absolute time at which :meth:`ready` flips true by budget
+        expiry alone; ``None`` when the queue is empty.  The scheduler
+        thread sleeps until ``deadline() - now`` (or an arrival)."""
+        if not self._queue:
+            return None
+        return self._queue[0].arrive_t + self.latency_budget
+
+    def pop(self) -> List[PendingRetrieval]:
+        """Dequeue the longest FIFO prefix whose total query count fits
+        ``max_batch``.  Requests never split across batches — per-request
+        futures resolve atomically."""
+        batch: List[PendingRetrieval] = []
+        total = 0
+        while self._queue and total + len(self._queue[0]) <= self.max_batch:
+            req = self._queue.pop(0)
+            total += len(req)
+            batch.append(req)
+        self._pending_queries -= total
+        return batch
+
+    def bucket(self, batch: Sequence[PendingRetrieval]) -> int:
+        return bucket_batch(sum(len(r) for r in batch),
+                            self.min_bucket, self.max_batch)
+
+
+class CommitPolicy:
+    """When may the maintenance loop swap the serving state?
+
+    Commits only happen *between* batches (the splice donates the live
+    buffers), so the policy just answers "is one due": after
+    ``commit_every`` batches since the plan was staged, or once the plan
+    is ``deadline`` seconds old — whichever comes first.
+    """
+
+    def __init__(self, commit_every: int = 4, deadline: float = 0.25):
+        self.commit_every = commit_every
+        self.deadline = deadline
+        self._plan_t: Optional[float] = None
+        self._batches_since_plan = 0
+
+    @property
+    def armed(self) -> bool:
+        return self._plan_t is not None
+
+    def note_plan(self, now: float) -> None:
+        self._plan_t = now
+        self._batches_since_plan = 0
+
+    def note_batch(self) -> None:
+        if self._plan_t is not None:
+            self._batches_since_plan += 1
+
+    def due(self, now: float) -> bool:
+        if self._plan_t is None:
+            return False
+        return (self._batches_since_plan >= self.commit_every
+                or (now - self._plan_t) >= self.deadline)
+
+    def clear(self) -> None:
+        self._plan_t = None
+        self._batches_since_plan = 0

@@ -1,0 +1,263 @@
+"""Async serving engine: scheduler primitives, deterministic-clock
+lifecycle, shape-stability of the hot path, and equivalence with the
+synchronous engine on the same request stream."""
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CFTDeviceState, MaintenanceEngine, build_bank,
+                        build_forest)
+from repro.core import hashing
+from repro.serving import (AsyncServeEngine, CommitPolicy, MicroBatcher,
+                           PendingRetrieval, RAGPipeline, RetrievalSession,
+                           bucket_batch, bucket_shapes)
+
+
+def _forest(num_trees=4, entities_per_tree=10):
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def _session(maint=True, forest=None):
+    forest = forest or _forest()
+    bank = build_bank(forest)
+    session = RetrievalSession()
+    session.attach(CFTDeviceState.from_bank(bank, forest))
+    if maint:
+        session.attach_maintenance(MaintenanceEngine(bank), forest)
+    return forest, bank, session
+
+
+def _queries(forest, bank, n):
+    """Deterministic (tree_ids, hashes) request stream over live keys."""
+    hashes = hashing.hash_entities(forest.entity_names)
+    reqs = []
+    for i in range(n):
+        k = 1 + (i % 3)
+        rows = [(i * 7 + j) % len(bank.row_entity) for j in range(k)]
+        reqs.append(([int(bank.row_tree[r]) for r in rows],
+                     [int(hashes[bank.row_entity[r]]) for r in rows]))
+    return reqs
+
+
+# ------------------------------------------------------------- primitives
+
+def test_bucket_batch_pow2_and_bounds():
+    assert bucket_batch(1) == 16                     # clamped to min bucket
+    assert bucket_batch(16) == 16
+    assert bucket_batch(17) == 32
+    assert bucket_batch(200) == 256
+    assert bucket_batch(3, min_bucket=2, max_batch=8) == 4
+    with pytest.raises(ValueError):
+        bucket_batch(0)
+    with pytest.raises(ValueError):
+        bucket_batch(300)
+    # the closed shape set: every batch lands on one of these geometries
+    shapes = bucket_shapes()
+    assert shapes == [16, 32, 64, 128, 256]
+    for n in range(1, 257):
+        assert bucket_batch(n) in shapes
+
+
+def test_microbatcher_budget_expiry_vs_bucket_full():
+    mb = MicroBatcher(latency_budget=1.0, max_batch=8, min_bucket=2)
+    mb.add(PendingRetrieval([0, 0], [1, 2], arrive_t=0.0))
+    assert not mb.ready(0.0)
+    assert not mb.ready(0.99)          # inside the budget: keep coalescing
+    assert mb.ready(1.0)               # budget expiry launches
+    assert mb.deadline() == 1.0
+    batch = mb.pop()
+    assert len(batch) == 1 and mb.pending_queries == 0
+
+    # bucket-full launches immediately, whatever the clock says
+    for i in range(4):
+        mb.add(PendingRetrieval([0, 0], [i, i], arrive_t=0.0))
+    assert mb.pending_queries == 8
+    assert mb.ready(0.0)
+    assert mb.bucket(mb.pop()) == 8
+
+    # a batch never splits a request: FIFO prefix that fits max_batch
+    mb.add(PendingRetrieval([0] * 5, [0] * 5, arrive_t=0.0))
+    mb.add(PendingRetrieval([0] * 5, [1] * 5, arrive_t=0.0))
+    first = mb.pop()
+    assert [len(r) for r in first] == [5]            # 10 > max 8: one rides
+    assert mb.pending_queries == 5                   # the other waits
+
+    with pytest.raises(ValueError):
+        mb.add(PendingRetrieval([0] * 9, [0] * 9, arrive_t=0.0))
+
+
+def test_commit_policy_batch_count_and_age():
+    p = CommitPolicy(commit_every=3, deadline=0.25)
+    assert not p.due(99.0)                           # nothing staged
+    p.note_plan(10.0)
+    assert not p.due(10.0)
+    p.note_batch(); p.note_batch()
+    assert not p.due(10.1)
+    p.note_batch()
+    assert p.due(10.1)                               # third batch since plan
+    p.clear(); p.note_plan(20.0)
+    assert not p.due(20.24)
+    assert p.due(20.25)                              # plan aged past deadline
+
+
+# -------------------------------------------------- deterministic lifecycle
+
+def test_pump_coalesces_until_budget_then_matches_sync():
+    forest, bank, session = _session(maint=False)
+    now = [100.0]
+    eng = AsyncServeEngine(session, latency_budget=0.5, max_batch=32,
+                           min_bucket=4, clock=lambda: now[0],
+                           maintenance="off")
+    reqs = _queries(forest, bank, 6)
+    futs = [eng.submit(t, h) for t, h in reqs]
+    assert not eng.pump(now[0])                      # budget not expired
+    assert all(not f.done() for f in futs)
+    now[0] += 0.5
+    assert eng.pump(now[0])                          # one coalesced batch
+    assert all(f.done() for f in futs)
+    assert eng.stats.batches == 1
+    assert eng.stats.requests == 6
+
+    # same stream through a second, identically-built synchronous session
+    _, _, ref = _session(maint=False, forest=forest)
+    for (t, h), f in zip(reqs, futs):
+        want = ref.retrieve(t, h)
+        got = f.result()
+        np.testing.assert_array_equal(got.hit, np.asarray(want.hit))
+        np.testing.assert_array_equal(got.locations,
+                                      np.asarray(want.locations))
+        np.testing.assert_array_equal(got.up, np.asarray(want.up))
+        np.testing.assert_array_equal(got.down, np.asarray(want.down))
+
+
+def test_hot_path_never_recompiles():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = AsyncServeEngine(session, latency_budget=0.0, max_batch=64,
+                           min_bucket=4, clock=lambda: now[0],
+                           maintenance="off")
+    assert eng.warmup() == len(bucket_shapes(4, 64))
+    baseline = session.compile_cache_size()
+    if baseline < 0:
+        pytest.skip("backend does not expose the jit cache size")
+    reqs = _queries(forest, bank, 40)
+    for t, h in reqs:                                # varying batch sizes
+        eng.submit(t, h)
+        now[0] += 1.0
+        eng.pump(now[0])
+    assert eng.stats.batches > 0
+    # every launch hit a warm bucket geometry: zero new compilations
+    assert session.compile_cache_size() == baseline
+
+
+def test_background_lifecycle_prepare_under_batch_commit_between():
+    forest, bank, session = _session(maint=True)
+    now = [0.0]
+    eng = AsyncServeEngine(session, latency_budget=0.0, max_batch=32,
+                           min_bucket=4, commit_every=2, commit_deadline=1e9,
+                           clock=lambda: now[0], maintenance="inline")
+    eng.warmup()
+    reqs = _queries(forest, bank, 8)
+    session.maint.queue_insert(0, "fresh entity", [1])
+    # batch 1: the pending insert triggers a prepare strictly under the
+    # in-flight batch; the plan stays staged (commit_every = 2)
+    eng.submit(*reqs[0]); now[0] += 1; eng.pump(now[0])
+    assert eng.stats.prepares == 1
+    assert session.coord.deferring
+    assert eng.stats.commits == 0
+    # batch 2 completes the policy window: commit lands between batches
+    eng.submit(*reqs[1]); now[0] += 1; eng.pump(now[0])
+    assert eng.stats.commits == 1
+    assert not session.coord.deferring
+    # the committed state serves the inserted key
+    h = int(hashing.hash_entities(["fresh entity"])[0])
+    eng.submit([0], [h]); now[0] += 1; eng.pump(now[0])
+    # flush pending absorb/plan state and check host/device agree
+    session.maintain()
+    ref = CFTDeviceState.from_bank(bank, forest)
+    np.testing.assert_array_equal(np.asarray(session.state.fingerprints),
+                                  np.asarray(ref.fingerprints))
+
+
+def test_commit_deadline_triggers_without_batches():
+    forest, bank, session = _session(maint=True)
+    now = [0.0]
+    eng = AsyncServeEngine(session, latency_budget=0.0, max_batch=32,
+                           min_bucket=4, commit_every=10 ** 6,
+                           commit_deadline=5.0, clock=lambda: now[0],
+                           maintenance="inline")
+    eng.warmup()
+    session.maint.queue_insert(0, "aged entity", [1])
+    t, h = _queries(forest, bank, 1)[0]
+    eng.submit(t, h); now[0] += 1; eng.pump(now[0])
+    assert session.coord.deferring                   # staged, not yet due
+    now[0] += 4.0
+    eng.pump(now[0])                                 # idle pump: age < 5s
+    assert session.coord.deferring
+    now[0] += 1.1
+    eng.pump(now[0])                                 # plan aged out
+    assert not session.coord.deferring
+    assert eng.stats.commits == 1
+
+
+# ------------------------------------------------------------ thread mode
+
+def test_threaded_engine_with_churn_matches_sync():
+    forest, bank, session = _session(maint=True)
+    reqs = _queries(forest, bank, 24)
+    eng = AsyncServeEngine(session, latency_budget=1e-3, max_batch=32,
+                           min_bucket=4, commit_every=2,
+                           maintenance="thread")
+    eng.warmup()
+    with eng:
+        futs = []
+        for i, (t, h) in enumerate(reqs):
+            if i == 8:
+                session.maint.queue_insert(0, "mid-flight entity", [2])
+            futs.append(eng.submit(t, h))
+        results = [f.result(timeout=30) for f in futs]
+    assert not session.coord.deferring               # stop() commits
+    # retrieval outputs are independent of batching schedule and of
+    # temperature, so a synchronous replay on the same final bank agrees
+    # for keys that predate the churn
+    _, _, ref = _session(maint=False, forest=forest)
+    for (t, h), got in zip(reqs, results):
+        want = ref.retrieve(t, h)
+        np.testing.assert_array_equal(got.hit, np.asarray(want.hit))
+        np.testing.assert_array_equal(got.locations,
+                                      np.asarray(want.locations))
+
+    with pytest.raises(RuntimeError):
+        eng.submit([0], [0])                         # stopped engine
+
+
+# -------------------------------------------------------------- pipeline
+
+def test_rag_answer_async_matches_answer():
+    corpus_like = [[("root a", "child a1"), ("root a", "child a2")],
+                   [("root b", "child b1")]]
+
+    class _Corpus:
+        trees = corpus_like
+
+    rag = RAGPipeline(_Corpus(), engine=None, use_bank=True)
+    queries = ["tell me about child a1", "child a2 and child b1?",
+               "where is root b"]
+    want = [rag.answer(q).prompt for q in queries]
+
+    rag2 = RAGPipeline(_Corpus(), engine=None, use_bank=True)
+    aeng = rag2.async_serving(latency_budget=1e-3, max_batch=64,
+                              min_bucket=4)
+    aeng.warmup()
+
+    async def run():
+        with aeng:
+            return await asyncio.gather(
+                *[rag2.answer_async(q, aeng) for q in queries])
+
+    got = [a.prompt for a in asyncio.run(run())]
+    assert got == want

@@ -1,0 +1,91 @@
+"""Perf-regression gate: direction-aware thresholding, identity-key
+matching, and the committed baselines' self-consistency."""
+import json
+import pathlib
+
+from benchmarks.check_regression import check_dirs, compare
+
+BASELINES = (pathlib.Path(__file__).resolve().parent.parent
+             / "benchmarks" / "baselines")
+
+
+def _pause(reduction):
+    return {"rows": [dict(layout="replicated", trees=8,
+                          pause_reduction=reduction, serve_ms=1.0)]}
+
+
+def _regressed(entries):
+    return [e for e in entries if e["regressed"]]
+
+
+def test_injected_2x_slowdown_fails():
+    base = _pause(10.0)
+    entries, _ = compare("BENCH_pause.json", _pause(5.0), base)
+    assert len(_regressed(entries)) == 1
+    # and the untouched payload passes
+    entries, _ = compare("BENCH_pause.json", _pause(10.0), base)
+    assert not _regressed(entries)
+
+
+def test_threshold_is_25_percent_and_direction_aware():
+    base = _pause(10.0)
+    ok, _ = compare("p", _pause(8.0), base)          # -20%: inside
+    bad, _ = compare("p", _pause(7.0), base)         # -30%: regressed
+    assert not _regressed(ok) and len(_regressed(bad)) == 1
+    # an *improvement* of any size never trips the gate
+    up, _ = compare("p", _pause(100.0), base)
+    assert not _regressed(up)
+
+    # bytes_fraction regresses in the other direction (growth is bad)
+    b = {"rows": [dict(trees=4, bytes_fraction=0.10)]}
+    grown = {"rows": [dict(trees=4, bytes_fraction=0.20)]}
+    shrunk = {"rows": [dict(trees=4, bytes_fraction=0.05)]}
+    assert len(_regressed(compare("r", grown, b)[0])) == 1
+    assert not _regressed(compare("r", shrunk, b)[0])
+
+
+def test_raw_timings_are_not_gated():
+    base = {"rows": [dict(trees=8, serve_ms=1.0, sync_p99_ms=5.0)]}
+    cur = {"rows": [dict(trees=8, serve_ms=50.0, sync_p99_ms=500.0)]}
+    entries, _ = compare("t", cur, base)
+    assert entries == []                  # nothing gated -> nothing to fail
+
+
+def test_below_crossover_ratio_is_skipped():
+    """A higher-is-better ratio below 1 on the recording host (e.g. a
+    host-mesh shard speedup) is noise-dominated and must not gate."""
+    base = {"rows": [dict(devices=8, speedup=0.03)]}
+    cur = {"rows": [dict(devices=8, speedup=0.01)]}
+    entries, notes = compare("s", cur, base)
+    assert entries == []
+    assert any("not gated" in n for n in notes)
+
+
+def test_scenario_change_skips_row_with_note():
+    base = {"rows": [dict(trees=8, pause_reduction=10.0)]}
+    cur = {"rows": [dict(trees=64, pause_reduction=1.0)]}
+    entries, notes = compare("p", cur, base)
+    assert entries == []
+    assert any("refresh the baseline" in n for n in notes)
+
+
+def test_committed_baselines_self_compare_clean(tmp_path):
+    """The checked-in baselines must gate themselves at zero regressions
+    (guards against schema drift between the benches and the checker)."""
+    assert BASELINES.is_dir() and list(BASELINES.glob("BENCH_*.json"))
+    assert check_dirs(str(BASELINES), str(BASELINES)) == 0
+
+
+def test_check_dirs_end_to_end_with_injection(tmp_path):
+    cur = tmp_path / "cur"
+    cur.mkdir()
+    for p in BASELINES.glob("BENCH_*.json"):
+        (cur / p.name).write_text(p.read_text())
+    assert check_dirs(str(cur), str(BASELINES)) == 0
+    payload = json.loads((cur / "BENCH_pause.json").read_text())
+    payload["rows"][0]["pause_reduction"] /= 2.0
+    (cur / "BENCH_pause.json").write_text(json.dumps(payload))
+    assert check_dirs(str(cur), str(BASELINES)) == 1
+    # a bench the run did not produce is skipped, not failed
+    (cur / "BENCH_pause.json").unlink()
+    assert check_dirs(str(cur), str(BASELINES)) == 0

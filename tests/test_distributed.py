@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns a fresh interpreter + an 8-device host mesh —
+# the expensive tier CI runs as its own job (see .github/workflows/ci.yml)
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

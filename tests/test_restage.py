@@ -115,6 +115,50 @@ def test_absorbed_temperature_not_restaged():
                         "post-absorb delta")
 
 
+def test_bump_between_plan_and_commit_max_merges():
+    """A temperature bump that lands while a plan is staged (serving
+    continues on the old state through the prepare window) survives the
+    commit wherever the plan left the slot's key in place — and never
+    leaks onto a slot whose key the plan moved or cleared."""
+    forest, bank, eng, state = _setup()
+    eng.queue_delete(0, "entity 0_5")
+    eng.queue_insert(0, "one more", [1])
+    eng.maintain()
+    plan = eng.plan_restage()
+    assert plan.kind == "delta"
+    k = plan.changed_rows
+    rows = np.asarray(plan.rows)[:k]
+    vt = np.asarray(plan.val_temp)[:k]
+    vf = np.asarray(plan.val_fps)[:k]
+    vk = np.asarray(plan.val_keep)[:k]
+    # a staged slot whose key the plan did not move: its stored hash lets
+    # us aim a query (and so a device-side bump) exactly at it
+    cand = np.argwhere(vk & (vf != hashing.EMPTY_FP))
+    assert cand.size, "delta left no key in place"
+    i, s = cand[0]
+    r = int(rows[i])
+    kept_hash = np.uint32(bank.stored_hash[r, s])
+    # the deleted key is still live on the old device state — querying it
+    # bumps its (soon to be cleared) slot
+    del_hash = hashing.hash_entities(["entity 0_5"])[0]
+    out = retrieve_device(state, jnp.asarray([kept_hash, del_hash]),
+                          jnp.zeros(2, jnp.int32))
+    state = state.with_temperature(out.temperature)    # bumped, NOT absorbed
+    assert np.asarray(state.temperature)[r, s] == vt[i, s] + 1
+    state = commit_restage(state, plan, eng, forest)
+    t = np.asarray(state.temperature)
+    # kept slot: the in-flight bump max-merges into the staged row
+    assert t[r, s] == vt[i, s] + 1
+    # moved/cleared slots: staged value wins — the deleted key's bump
+    # must not leak onto its cleared slot (or any successor key)
+    assert (t[rows][~vk] == vt[~vk]).all()
+    # the bank never saw the bump; a post-commit absorb reconciles and
+    # the next plan has nothing to restage
+    assert eng.absorb(state) >= 1
+    assert int(bank.temperature[r, s]) == int(t[r, s])
+    assert eng.plan_restage().kind == "none"
+
+
 # ------------------------------------------------------------ shrink path
 
 def test_shrink_tree_reverses_expansion():
