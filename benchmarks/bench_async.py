@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import CFTDeviceState, MaintenanceEngine, build_bank
 from repro.core import hashing
+from repro.obs import get_registry
 from repro.serving import AsyncServeEngine, RetrievalSession
 
 from .bench_ragged import skewed_forest
@@ -203,7 +204,7 @@ def run_continuous(session, arrivals, reqs, churn, *, latency_budget: float,
     session.maintain()                       # flush any straggler delta
     latencies = done_t - (t0 + arrivals)
     outputs = [(r.hit, r.locations, r.up, r.down) for r in results]
-    return latencies, outputs, makespan, eng.stats
+    return latencies, outputs, makespan, eng.stats, eng.hot_recompiles
 
 
 def _equal(a, b) -> bool:
@@ -228,7 +229,7 @@ def run(num_trees: int = 64, entities_per_tree: int = 48,
     lat_s, out_s, span_s = run_sync(
         s_sync, arrivals, reqs, churn, batch_requests=batch_requests,
         pad_to=max_batch, maintain_every=maintain_every)
-    lat_a, out_a, span_a, stats = run_continuous(
+    lat_a, out_a, span_a, stats, hot = run_continuous(
         s_async, arrivals, reqs, churn, latency_budget=latency_budget,
         max_batch=max_batch, min_bucket=min_bucket,
         commit_every=commit_every)
@@ -243,10 +244,37 @@ def run(num_trees: int = 64, entities_per_tree: int = 48,
                async_goodput_rps=n_requests / max(span_a, 1e-9),
                batches=stats.batches, prepares=stats.prepares,
                commits=stats.commits,
+               hot_recompiles=int(hot),
                bucket_histogram={str(k): v for k, v
                                  in sorted(stats.bucket_histogram.items())},
                equal=bool(equal))
     return [row]
+
+
+def measure_overhead(num_trees: int = 48, entities_per_tree: int = 32,
+                     n_requests: int = 150, rate: float = 800.0,
+                     seed: int = 3) -> float:
+    """p50 latency with metrics enabled over p50 with them disabled, on
+    identically built sessions and the same arrival schedule (no churn,
+    so the runs differ only in observability).  The acceptance guard is
+    ratio <= 1.05 — instrumented counters and spans must stay invisible
+    next to the millisecond-scale coalescing budget."""
+    reg = get_registry()
+    forest, bank, _ = _build_session(num_trees, entities_per_tree, 8, seed)
+    arrivals, reqs = _request_stream(forest, bank, n_requests, rate, seed)
+    p50 = {}
+    try:
+        for mode in ("disabled", "enabled"):
+            _, _, session = _build_session(num_trees, entities_per_tree,
+                                           8, seed, forest=forest)
+            reg.enabled = mode == "enabled"
+            lat, _, _, _, _ = run_continuous(
+                session, arrivals, reqs, {}, latency_budget=2e-3,
+                max_batch=256, min_bucket=32, commit_every=4)
+            p50[mode] = float(np.percentile(lat, 50))
+    finally:
+        reg.enable()
+    return p50["enabled"] / max(p50["disabled"], 1e-9)
 
 
 def print_rows(rows: List[Dict]) -> None:
@@ -282,7 +310,23 @@ def main() -> None:
         assert r["equal"], \
             "continuous-batching outputs diverged from the sync path"
         assert r["p99_ratio"] >= 2.0, r
-    write_json(json_path, {"rows": rows})
+        # the recompile sentinel across the full churn schedule: the
+        # padded path must never compile after warmup
+        assert r["hot_recompiles"] == 0, r
+    # observability overhead guard: enabled-metrics p50 within 5% of
+    # disabled (same retry discipline as the wall-clock gates)
+    for _ in range(3):
+        overhead = measure_overhead()
+        if overhead <= 1.05:
+            break
+    print(f"metrics overhead: enabled/disabled p50 = {overhead:.3f}x")
+    assert overhead <= 1.05, f"metrics overhead {overhead:.3f}x > 1.05x"
+    snap = get_registry().snapshot()
+    write_json(json_path, {"rows": rows, "obs": snap,
+                           "metrics_overhead": overhead})
+    # standalone artifact for the CI smoke job (uploaded next to the
+    # BENCH trajectories; also the thing to read first on a gate trip)
+    write_json("metrics_snapshot.json", snap)
 
 
 if __name__ == "__main__":

@@ -308,7 +308,11 @@ def main() -> None:
         assert r["equal"], \
             "post-commit state diverged from from-scratch restage"
         assert r["pause_reduction"] >= 5.0, r
-    write_json(json_path, {"rows": rows})
+    # embed the observability snapshot (plan kinds, splice rows, compile
+    # counts) so a pause_reduction regression carries its causal trail
+    from repro.obs import get_registry
+    write_json(json_path, {"rows": rows,
+                           "obs": get_registry().snapshot()})
 
 
 if __name__ == "__main__":

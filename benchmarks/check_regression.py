@@ -118,6 +118,31 @@ def print_table(entries: List[Dict]) -> None:
               f"{e['change']:+7.1%}{flag}")
 
 
+def print_snapshot_diff(name: str, current: Dict, baseline: Dict) -> None:
+    """The causal trail behind a gate trip: diff the embedded
+    observability snapshots (``payload["obs"]`` — counters and gauges)
+    of the regressed file against its baseline.  A p99 regression with
+    ``serve.hot_recompiles`` up, or a pause regression with
+    ``maint.plans{kind=full}`` up, answers "why" without a rerun."""
+    cur, base = current.get("obs"), baseline.get("obs")
+    if not cur:
+        print(f"{name}: no embedded obs snapshot in the current run")
+        return
+    base = base or {}
+    print(f"\n{name}: embedded metrics snapshot "
+          f"(current vs baseline{'' if base else ' — none recorded'})")
+    print(f"{'metric':>44s} {'baseline':>12s} {'current':>12s}")
+    for section in ("counters", "gauges"):
+        c = cur.get(section, {})
+        b = base.get(section, {})
+        for key in sorted(set(c) | set(b)):
+            bv, cv = b.get(key, "-"), c.get(key, "-")
+            mark = "" if bv == cv else "  <<"
+            fmt = lambda v: f"{v:12.4g}" if isinstance(v, (int, float)) \
+                else f"{v:>12s}"                          # noqa: E731
+            print(f"{key:>44s} {fmt(bv)} {fmt(cv)}{mark}")
+
+
 def check_dirs(current_dir: str, baseline_dir: str,
                threshold: float = 0.25) -> int:
     """Compare every BENCH_*.json present in both dirs; returns the
@@ -131,6 +156,7 @@ def check_dirs(current_dir: str, baseline_dir: str,
               file=sys.stderr)
         return 1
     compared = 0
+    payloads: Dict[str, Tuple[Dict, Dict]] = {}
     for name in names:
         cur_path = os.path.join(current_dir, name)
         if not os.path.exists(cur_path):
@@ -140,6 +166,7 @@ def check_dirs(current_dir: str, baseline_dir: str,
             current = json.load(f)
         with open(os.path.join(baseline_dir, name)) as f:
             baseline = json.load(f)
+        payloads[name] = (current, baseline)
         e, n = compare(name, current, baseline, threshold)
         entries.extend(e)
         notes.extend(n)
@@ -153,6 +180,10 @@ def check_dirs(current_dir: str, baseline_dir: str,
         print(f"note: {n}")
     bad = sum(e["regressed"] for e in entries)
     if bad:
+        # surface the causal trail of every regressed file before failing
+        for name in sorted({e["file"] for e in entries if e["regressed"]}):
+            cur, base = payloads[name]
+            print_snapshot_diff(name, cur, base)
         print(f"\nFAIL: {bad} metric(s) regressed more than "
               f"{threshold:.0%} vs benchmarks/baselines/ — if the change "
               "is intended, refresh the baseline JSON (CONTRIBUTING.md)")

@@ -8,4 +8,35 @@ try:                                   # jax >= 0.5 exposes it at top level
 except AttributeError:                 # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 
-__all__ = ["shard_map"]
+
+def register_compile_listener(fn) -> bool:
+    """Best-effort hook into the runtime's compile telemetry.
+
+    Registers ``fn(event_name, duration_s)`` for backend-compile events
+    via ``jax.monitoring`` (fired once per new-shape XLA compilation,
+    silent on jit cache hits).  Returns True when the hook landed, False
+    on stacks without the monitoring API — callers must treat the
+    listener as advisory (the recompile sentinel's jit-cache-size
+    counting works either way).  There is no targeted unregister in the
+    supported jax range, so register exactly one process-wide listener
+    and fan out behind it; never call ``clear_event_listeners`` (it
+    would drop listeners owned by other libraries too).
+    """
+    try:
+        from jax import monitoring
+        register = monitoring.register_event_duration_secs_listener
+    except (ImportError, AttributeError):
+        return False
+
+    def _listener(event: str, duration: float, **kw) -> None:
+        if "backend_compile" in event:
+            fn(event, duration)
+
+    try:
+        register(_listener)
+    except Exception:                             # pragma: no cover
+        return False
+    return True
+
+
+__all__ = ["shard_map", "register_compile_listener"]

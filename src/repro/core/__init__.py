@@ -1,7 +1,7 @@
 """CFT-RAG core: improved cuckoo filter + entity-tree retrieval."""
 from .bank import (FilterBank, ShardedBank, build_bank,
-                   build_bank_from_rows, plan_partition, splice_arena_rows,
-                   splice_arena_segment)
+                   build_bank_from_rows, estimate_fpr, plan_partition,
+                   splice_arena_rows, splice_arena_segment)
 from .baselines import BloomTRAG, BloomTRAG2, NaiveTRAG
 from .blocklist import BlockListArena, BlockListBuilder, CSRArena, build_csr
 from .context import (EntityContext, context_from_arena, context_from_csr,
@@ -28,7 +28,8 @@ from .tree import EntityForest, build_forest
 
 __all__ = [
     "FilterBank", "ShardedBank", "build_bank", "build_bank_from_rows",
-    "plan_partition", "splice_arena_rows", "splice_arena_segment",
+    "estimate_fpr", "plan_partition", "splice_arena_rows",
+    "splice_arena_segment",
     "BankDelta", "MaintenanceEngine", "MaintenanceReport",
     "PendingRestage", "PendingShardedRestage", "ShardedMaintenanceEngine",
     "commit_restage", "warm_restage",

@@ -636,6 +636,29 @@ def _bank_rows(forest: EntityForest):
     return row_tree, row_entity, offsets, n_s.astype(np.int32), entity_hashes
 
 
+def estimate_fpr(load, slots: int,
+                 fp_bits: int = hashing.FP_BITS):
+    """Empirical false-positive-rate estimate of a cuckoo-filter tree at
+    the given load factor(s) — the observability half of the ROADMAP's
+    self-tuning-bank item (the exemplar filters in SNIPPETS.md estimate
+    FPR online from load and fingerprint bits the same way).
+
+    A missing key probes its two candidate buckets, ~``2·slots·load``
+    occupied slots, each holding a fingerprint uniform over the
+    ``2^fp_bits - 1`` usable values (0 is the empty sentinel —
+    ``hashing.fingerprint`` remaps real fingerprints off it), so
+
+        FPR ≈ 1 - (1 - 1/(2^fp_bits - 1))^(2·slots·load)
+
+    Accepts a scalar or an array of per-tree loads; returns the same
+    shape as a float / float64 array.
+    """
+    p = 1.0 / ((1 << fp_bits) - 1)
+    occupied = 2.0 * slots * np.asarray(load, np.float64)
+    est = 1.0 - np.power(1.0 - p, occupied)
+    return float(est) if est.ndim == 0 else est
+
+
 def _pick_num_buckets(max_per_tree: int, slots: int,
                       load_target: float) -> int:
     need = max(1, int(np.ceil(max_per_tree / (slots * load_target))))

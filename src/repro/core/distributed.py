@@ -47,6 +47,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map as _shard_map
+from ..obs import get_registry
 from . import hashing
 from .bank import FilterBank, ShardedBank, pad_csr
 from .lookup import LookupResult, lookup_arena, sort_buckets_arena
@@ -421,9 +422,20 @@ def routing_counts(state: ShardedBankState, tree_ids) -> np.ndarray:
     the only host transfer is the O(D²) count readback that sizes the
     payload buffer."""
     tid = jnp.asarray(tree_ids).reshape(-1)
-    return np.asarray(_routing_counts_jit(
+    counts = np.asarray(_routing_counts_jit(
         state.tree_shard, tid, state.mesh, state.axis, state.num_shards,
         state.num_trees))
+    reg = get_registry()
+    if reg.enabled:
+        reg.counter("dist.count_exchanges",
+                    "all-to-all routing-count passes").inc()
+        reg.counter("dist.routed_queries",
+                    "queries routed through the all-to-all "
+                    "(pad slots included)").inc(int(counts.sum()))
+        reg.gauge("dist.routing_max",
+                  "worst per-(dst,src) routed count of the last batch"
+                  ).set(int(counts.max()))
+    return counts
 
 
 def _pick_capacity(state: ShardedBankState, tree_ids,
@@ -439,7 +451,10 @@ def _pick_capacity(state: ShardedBankState, tree_ids,
     measured maximum instead (rounded up to a power of two to bound
     recompiles), replacing the old eager host-side pre-check that raised.
     """
+    adapt = get_registry().counter(
+        "dist.capacity", "all-to-all receive-capacity picks by path")
     if capacity_factor is None:
+        adapt.inc(path="worst_case")
         return None
     d = state.num_shards
     b = int(jnp.asarray(tree_ids).size)    # shape metadata, no transfer
@@ -447,7 +462,9 @@ def _pick_capacity(state: ShardedBankState, tree_ids,
     fast = min(bl, max(1, int(np.ceil(bl * float(capacity_factor)))))
     worst = int(routing_counts(state, tree_ids).max())
     if worst <= fast:
+        adapt.inc(path="fast")
         return fast
+    adapt.inc(path="adapted")
     return min(bl, 1 << int(np.ceil(np.log2(max(1, worst)))))
 
 

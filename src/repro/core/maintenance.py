@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -66,9 +67,10 @@ import numpy as np
 from . import hashing
 from .bank import (DEFAULT_LOAD_TARGET, EMPTY_TREE_NB, FilterBank,
                    ShardedBank, _pick_tree_buckets, _scalar_insert,
-                   build_bank_from_rows, pad_csr)
+                   build_bank_from_rows, estimate_fpr, pad_csr)
 from .cuckoo import (DEFAULT_LOAD_THRESHOLD, DEFAULT_MAX_KICKS, NULL,
                      bulk_place)
+from ..obs import Tracer, get_registry
 
 Key = Union[str, int]              # entity name or 32-bit entity hash
 
@@ -608,16 +610,26 @@ class MaintenanceEngine:
     def packing_stats(self) -> Dict[str, object]:
         """Per-tree load / overprovision report for the shrink policy:
         ``ideal_nb`` is what a fresh build would allocate each tree today,
-        ``overprovision`` the ratio of live arena rows to that ideal."""
+        ``overprovision`` the ratio of live arena rows to that ideal,
+        ``est_fpr`` the per-tree empirical false-positive-rate estimate
+        (:func:`repro.core.bank.estimate_fpr` from load and fingerprint
+        bits).  Every value is pure Python (``json.dumps``-ready) — this
+        dict rides verbatim in observability snapshots."""
         b = self.bank
         ideal = _pick_tree_buckets(b.num_items, b.slots,
                                    DEFAULT_LOAD_TARGET)
         ideal_rows = int(ideal.sum())
-        return dict(load=b.load_factors, tree_nb=b.tree_nb.copy(),
-                    ideal_nb=ideal.astype(np.int64),
-                    arena_rows=b.total_buckets, ideal_rows=ideal_rows,
-                    overprovision=b.total_buckets / max(1, ideal_rows),
-                    dead_rows=self.num_dead_rows)
+        load = b.load_factors
+        return dict(load=[float(x) for x in load],
+                    tree_nb=[int(x) for x in b.tree_nb],
+                    ideal_nb=[int(x) for x in ideal],
+                    est_fpr=[float(x)
+                             for x in estimate_fpr(load, b.slots)],
+                    arena_rows=int(b.total_buckets),
+                    ideal_rows=ideal_rows,
+                    overprovision=float(b.total_buckets
+                                        / max(1, ideal_rows)),
+                    dead_rows=int(self.num_dead_rows))
 
     def compact(self) -> bool:
         """Reclaim tombstoned CSR rows (per-tree nb preserved); returns
@@ -770,6 +782,8 @@ class MaintenanceEngine:
         serving.  The bank must not mutate again before commit."""
         import jax.numpy as jnp
         host = self._classify()
+        get_registry().counter(
+            "maint.plans", "restage plans by kind").inc(kind=host.kind)
         if host.kind in ("none", "full"):
             return PendingRestage(kind=host.kind)
         b = self.bank
@@ -886,18 +900,19 @@ class ShardedMaintenanceEngine:
         return sum(e.maybe_shrink() for e in self.engines)
 
     def packing_stats(self) -> Dict[str, object]:
-        """Global packing report: per-tree arrays concatenate in global
-        tree order; scalars aggregate across shards."""
+        """Global packing report: per-tree lists concatenate in global
+        tree order; scalars aggregate across shards.  Pure Python, like
+        the per-shard reports it merges."""
         per = [e.packing_stats() for e in self.engines]
         arena = sum(p["arena_rows"] for p in per)
         ideal = sum(p["ideal_rows"] for p in per)
+        cat = lambda k: [x for p in per for x in p[k]]       # noqa: E731
         return dict(
-            load=np.concatenate([p["load"] for p in per]),
-            tree_nb=np.concatenate([p["tree_nb"] for p in per]),
-            ideal_nb=np.concatenate([p["ideal_nb"] for p in per]),
-            arena_rows=arena, ideal_rows=ideal,
-            overprovision=arena / max(1, ideal),
-            dead_rows=sum(p["dead_rows"] for p in per))
+            load=cat("load"), tree_nb=cat("tree_nb"),
+            ideal_nb=cat("ideal_nb"), est_fpr=cat("est_fpr"),
+            arena_rows=int(arena), ideal_rows=int(ideal),
+            overprovision=float(arena / max(1, ideal)),
+            dead_rows=int(sum(p["dead_rows"] for p in per)))
 
     def maybe_compact(self) -> bool:
         return any([e.maybe_compact() for e in self.engines])
@@ -962,10 +977,15 @@ class ShardedMaintenanceEngine:
                       if e._shadow is not None else -1)
                      for e in self.engines]
         host = [e._classify() for e in self.engines]   # re-marks shadows
+        plans = get_registry().counter("maint.plans",
+                                       "restage plans by kind")
         if any(p.kind == "full" for p in host):
+            plans.inc(kind="full")
             return PendingShardedRestage(kind="full")
         if all(p.kind == "none" for p in host):
+            plans.inc(kind="none")
             return PendingShardedRestage(kind="none")
+        plans.inc(kind="splice")
         base_new = sb.shard_row_base()
         base_old = np.zeros(d + 1, np.int64)
         np.cumsum(old_rows, out=base_old[1:])
@@ -1154,6 +1174,11 @@ def commit_restage(state, plan, engine, forest):
     ``state`` and use the returned value (on backends without donation
     support this degrades to a copy, never to corruption).
     """
+    reg = get_registry()
+    reg.counter("maint.commits", "restage commits by kind").inc(
+        kind=plan.kind)
+    reg.counter("maint.commit_rows",
+                "arena rows spliced across commits").inc(plan.changed_rows)
     if isinstance(plan, PendingShardedRestage):
         return _commit_sharded(state, plan, engine.sbank, forest)
     return _commit_replicated(state, plan, engine.bank, forest)
@@ -1241,8 +1266,30 @@ class RestageCoordinator:
         self.pending = None
         self.plan_time: Optional[float] = None   # clock() at last prepare
         self._lock = threading.Lock()
+        self.metrics = get_registry()
+        self.tracer = Tracer(self.metrics)
         engine.mark_staged()            # caller attaches a freshly staged
         #                                 state over this engine's bank
+
+    def _packing_gauges(self) -> None:
+        """Refresh the bank-packing gauges from ``packing_stats()`` —
+        the load / overprovision / FPR surface the ROADMAP's self-tuning
+        item tunes against."""
+        if not self.metrics.enabled:
+            return
+        p = self.engine.packing_stats()
+        g = self.metrics.gauge
+        g("maint.overprovision",
+          "live arena rows / ideal fresh-build rows").set(
+              p["overprovision"])
+        g("maint.arena_rows", "live arena rows").set(p["arena_rows"])
+        g("maint.dead_rows", "tombstoned CSR rows").set(p["dead_rows"])
+        if p["load"]:
+            g("maint.load_max", "hottest tree load factor").set(
+                max(p["load"]))
+            g("maint.est_fpr_max",
+              "worst per-tree empirical FPR estimate").set(
+                  max(p["est_fpr"]))
 
     @property
     def deferring(self) -> bool:
@@ -1270,11 +1317,18 @@ class RestageCoordinator:
         (still untouched) ``state``."""
         with self._lock:
             assert self.pending is None, "commit the pending plan first"
-            report = self.engine.maintain(state)
-            if report.changed and state is not None:
-                self.pending = self.engine.plan_restage()
-                self.plan_time = now
-                warm_restage(state, self.pending)
+            with self.tracer.span("maint.prepare") as sp:
+                with sp.stage("maintain"):
+                    report = self.engine.maintain(state)
+                if report.changed and state is not None:
+                    with sp.stage("plan"):
+                        self.pending = self.engine.plan_restage()
+                    self.plan_time = now
+                    with sp.stage("warm"):
+                        warm_restage(state, self.pending)
+                sp.set(kind=getattr(self.pending, "kind", "none"),
+                       changed=report.changed)
+                self._packing_gauges()
             return report
 
     def commit(self, state, blocking: bool = True) -> Tuple[object, bool]:
@@ -1286,8 +1340,19 @@ class RestageCoordinator:
         try:
             if self.pending is None:
                 return state, False
-            state = commit_restage(state, self.pending, self.engine,
-                                   self.forest)
+            # the serve-blocked window: nothing dispatches while the
+            # splice applies — the histogram bench_pause gates on
+            t0 = time.perf_counter()
+            with self.tracer.span(
+                    "maint.commit", kind=self.pending.kind,
+                    changed_rows=self.pending.changed_rows) as sp:
+                with sp.stage("splice"):
+                    state = commit_restage(state, self.pending,
+                                           self.engine, self.forest)
+            self.metrics.histogram(
+                "maint.commit_blocked_s",
+                "exclusive serve-blocked commit window").observe(
+                    time.perf_counter() - t0)
             self.pending = None
             self.plan_time = None
             return state, True

@@ -1,0 +1,149 @@
+"""Trace spans over the serving and maintenance lifecycles.
+
+A span is one named unit of work (an async batch, a sync retrieve, a
+maintenance prepare) carrying attributes (bucket size, plan kind) and a
+sequence of timed **stages** — the async request path decomposes as
+``coalesce → pad → dispatch → prepare → device_lookup → route_back``,
+the maintenance path as ``maintain → plan → warm`` then ``splice``.
+
+On ``end()`` the span lands twice:
+
+* each stage's duration feeds a registry histogram named
+  ``trace.<span>.<stage>`` (plus ``trace.<span>`` for the total), so the
+  per-stage p50/p90/p99 aggregates ride in every snapshot;
+* the finished span joins a bounded ring buffer (``Tracer.recent()``)
+  for request-level inspection — plain dicts, JSON-ready.
+
+A disabled registry makes ``Tracer.span`` return a shared no-op span,
+so traced hot paths cost one branch when observability is off.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+from .metrics import MetricsRegistry, get_registry
+
+
+class Span:
+    """One traced unit of work; create via :meth:`Tracer.span`."""
+
+    __slots__ = ("name", "attrs", "stages", "_tracer", "_t0", "_last",
+                 "_wall")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: Dict):
+        self.name = name
+        self.attrs = attrs
+        self.stages: List[Dict] = []
+        self._tracer = tracer
+        self._t0 = tracer.clock()
+        self._last = self._t0
+        self._wall = time.time()
+
+    def set(self, **attrs) -> "Span":
+        self.attrs.update(attrs)
+        return self
+
+    def stage(self, name: str) -> "_StageTimer":
+        """``with span.stage("dispatch"): ...`` — time one stage."""
+        return _StageTimer(self, name)
+
+    def add_stage(self, name: str, duration: float) -> "Span":
+        """Record an externally-measured stage (e.g. coalesce time,
+        which elapsed before the span opened)."""
+        self.stages.append(dict(stage=name, duration_s=float(duration)))
+        return self
+
+    def end(self) -> "Span":
+        self._tracer._finish(self, self._tracer.clock() - self._t0)
+        return self
+
+    def __enter__(self) -> "Span":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.end()
+
+    def to_dict(self) -> Dict:
+        return dict(span=self.name, t_wall=self._wall,
+                    attrs=dict(self.attrs), stages=list(self.stages))
+
+
+class _StageTimer:
+    __slots__ = ("_span", "_name", "_t0")
+
+    def __init__(self, span: Span, name: str):
+        self._span = span
+        self._name = name
+
+    def __enter__(self) -> "_StageTimer":
+        self._t0 = self._span._tracer.clock()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._span.add_stage(self._name,
+                             self._span._tracer.clock() - self._t0)
+
+
+class _NullSpan:
+    """Shared do-nothing span handed out while tracing is disabled."""
+
+    __slots__ = ()
+
+    def set(self, **attrs) -> "_NullSpan":
+        return self
+
+    def stage(self, name: str) -> "_NullSpan":
+        return self
+
+    def add_stage(self, name: str, duration: float) -> "_NullSpan":
+        return self
+
+    def end(self) -> "_NullSpan":
+        return self
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+    def to_dict(self) -> Dict:
+        return {}
+
+
+NULL_SPAN = _NullSpan()
+
+
+class Tracer:
+    """Span factory bound to a registry; keeps the last ``capacity``
+    finished spans and aggregates stage durations into histograms."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 capacity: int = 512, clock=time.perf_counter):
+        self.registry = registry if registry is not None else get_registry()
+        self.clock = clock
+        self._ring: deque = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+
+    def span(self, name: str, **attrs):
+        if not self.registry.enabled:
+            return NULL_SPAN
+        return Span(self, name, attrs)
+
+    def _finish(self, span: Span, total: float) -> None:
+        reg = self.registry
+        reg.histogram(f"trace.{span.name}").observe(total)
+        for st in span.stages:
+            reg.histogram(f"trace.{span.name}.{st['stage']}") \
+               .observe(st["duration_s"])
+        with self._lock:
+            self._ring.append(span.to_dict())
+
+    def recent(self, n: Optional[int] = None) -> List[Dict]:
+        """The most recent finished spans, oldest first — plain dicts."""
+        with self._lock:
+            spans = list(self._ring)
+        return spans if n is None else spans[-n:]

@@ -30,6 +30,18 @@ Determinism hooks: the constructor takes a ``clock`` (tests inject a
 fake), and :meth:`pump` drives one scheduling step inline without any
 threads.  ``start()``/``stop()`` run the same logic on a scheduler
 thread for real workloads.
+
+Observability: every statistic lives in the process-wide
+``repro.obs`` registry (``serve.*`` counters, all mutation under the
+registry lock — the old ``AsyncStats`` dataclass was updated from the
+scheduler thread, the prepare worker, *and* ``stop()`` without one);
+the :attr:`stats` property stays as a compat shim, reconstructing an
+``AsyncStats`` view from this engine's registry deltas.  Each launch
+emits a ``serve.batch`` trace span (coalesce → pad → dispatch →
+prepare → device_lookup → route_back) and ticks the session's
+recompile sentinel, so a commit that leaks an unstable shape into the
+hot path is counted (and, armed, fatal) rather than a silent ~650 ms
+tail spike.
 """
 from __future__ import annotations
 
@@ -59,7 +71,13 @@ class RetrievalSlice:
 
 @dataclasses.dataclass
 class AsyncStats:
-    """Counters the benchmark and tests read after a run."""
+    """Compat view of one engine's serving counters.
+
+    The counters themselves live in the ``repro.obs`` registry (shared,
+    lock-protected); :attr:`AsyncServeEngine.stats` materializes this
+    dataclass from the registry values minus the engine's
+    construction-time baseline, so sequential engines in one process
+    never see each other's counts."""
     batches: int = 0
     requests: int = 0
     queries: int = 0
@@ -96,7 +114,23 @@ class AsyncServeEngine:
                                     min_bucket=min_bucket)
         self.policy = CommitPolicy(commit_every=commit_every,
                                    deadline=commit_deadline)
-        self.stats = AsyncStats()
+
+        # registry-backed statistics: one counter per AsyncStats field,
+        # every mutation under the registry lock (thread-safe across the
+        # scheduler thread, the prepare worker, and stop())
+        m = self.session.metrics
+        self._c_batches = m.counter("serve.batches", "launched batches")
+        self._c_requests = m.counter("serve.requests", "served requests")
+        self._c_queries = m.counter("serve.queries", "true queries served")
+        self._c_padded = m.counter("serve.padded_queries",
+                                   "pad slots dispatched")
+        self._c_prepares = m.counter("serve.prepares",
+                                     "maintenance prepare passes")
+        self._c_commits = m.counter("serve.commits",
+                                    "maintenance commits applied")
+        self._c_bucket = m.counter("serve.batch_bucket",
+                                   "batches per pow2 bucket geometry")
+        self._base = self._counter_values()
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -107,6 +141,42 @@ class AsyncServeEngine:
         self._prep_event = threading.Event()
         self._prep_state = None
         self._prep_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- stats
+    def _counter_values(self) -> Dict:
+        return dict(batches=self._c_batches.value(),
+                    requests=self._c_requests.value(),
+                    queries=self._c_queries.value(),
+                    padded_queries=self._c_padded.value(),
+                    prepares=self._c_prepares.value(),
+                    commits=self._c_commits.value(),
+                    bucket=self._c_bucket.raw())
+
+    @property
+    def stats(self) -> AsyncStats:
+        """This engine's counters as the legacy ``AsyncStats`` shape —
+        registry values minus the construction-time baseline."""
+        cur, base = self._counter_values(), self._base
+        hist = {}
+        for key, v in cur["bucket"].items():
+            d = int(v - base["bucket"].get(key, 0))
+            if d:
+                hist[int(dict(key)["bucket"])] = d
+        return AsyncStats(
+            batches=int(cur["batches"] - base["batches"]),
+            requests=int(cur["requests"] - base["requests"]),
+            queries=int(cur["queries"] - base["queries"]),
+            padded_queries=int(cur["padded_queries"]
+                               - base["padded_queries"]),
+            prepares=int(cur["prepares"] - base["prepares"]),
+            commits=int(cur["commits"] - base["commits"]),
+            bucket_histogram=dict(sorted(hist.items())))
+
+    @property
+    def hot_recompiles(self) -> int:
+        """Serve-step recompiles the session's sentinel attributed to
+        this process's hot path — 0 on a healthy padded path."""
+        return self.session.sentinel.recompiles
 
     # ------------------------------------------------------------ intake
     def submit(self, tree_ids: Sequence[int],
@@ -142,6 +212,10 @@ class AsyncServeEngine:
             out = self.session.retrieve_dispatch(hh, tid)
             np.asarray(out.hit)
         self.session.harvest()
+        # warmup compiles are intentional: baseline the sentinel here so
+        # everything after counts as a hot-path recompile
+        self.session.sentinel.rebaseline()
+        self.session.compile_cache_size()
         return len(shapes)
 
     # ----------------------------------------------------- deterministic
@@ -183,44 +257,58 @@ class AsyncServeEngine:
             hhs.extend(int(h) for h in req.hashes)
         bucket = self.batcher.bucket(batch)
 
+        sp = self.session.tracer.span("serve.batch", bucket=bucket,
+                                      requests=len(batch))
+        # the oldest request's queue wait is the coalescing cost this
+        # batch imposed — measured from its arrival stamp, not timed here
+        sp.add_stage("coalesce", max(0.0, now - batch[0].arrive_t))
+
         # pre-dispatch snapshot: the maintenance pass absorbs against
         # arrays that are already materialized, so it never blocks on the
         # batch we just launched; this batch's bumps harvest next cycle.
         snapshot = self.session.state
-        hh, tid, b = self.session.pad_queries(tids, hhs, pad_to=bucket)
+        with sp.stage("pad"):
+            hh, tid, b = self.session.pad_queries(tids, hhs, pad_to=bucket)
         try:
-            out = self.session.retrieve_dispatch(hh, tid)
+            with sp.stage("dispatch"):
+                out = self.session.retrieve_dispatch(hh, tid)
         except Exception as exc:                      # pragma: no cover
             for req in batch:
                 req.future.set_exception(exc)
             raise
 
-        self._maybe_prepare(snapshot, now)
+        with sp.stage("prepare"):
+            self._maybe_prepare(snapshot, now)
 
         # materializing blocks until the batch lands — everything above
         # ran under it.
-        hit = np.asarray(out.hit)
-        loc = np.asarray(out.locations)
-        up = np.asarray(out.up)
-        down = np.asarray(out.down)
-        self.session.harvest()
+        with sp.stage("device_lookup"):
+            hit = np.asarray(out.hit)
+            loc = np.asarray(out.locations)
+            up = np.asarray(out.up)
+            down = np.asarray(out.down)
+            self.session.harvest()
 
-        off = 0
-        for req in batch:
-            k = len(req)
-            req.future.set_result(RetrievalSlice(
-                hit=hit[off:off + k], locations=loc[off:off + k],
-                up=up[off:off + k], down=down[off:off + k]))
-            off += k
+        with sp.stage("route_back"):
+            off = 0
+            for req in batch:
+                k = len(req)
+                req.future.set_result(RetrievalSlice(
+                    hit=hit[off:off + k], locations=loc[off:off + k],
+                    up=up[off:off + k], down=down[off:off + k]))
+                off += k
+        sp.set(queries=b).end()
 
         with self._lock:
             self.policy.note_batch()
-            self.stats.batches += 1
-            self.stats.requests += len(batch)
-            self.stats.queries += b
-            self.stats.padded_queries += bucket - b
-            self.stats.bucket_histogram[bucket] = \
-                self.stats.bucket_histogram.get(bucket, 0) + 1
+        self._c_batches.inc()
+        self._c_requests.inc(len(batch))
+        self._c_queries.inc(b)
+        self._c_padded.inc(bucket - b)
+        self._c_bucket.inc(bucket=bucket)
+        # post-batch sentinel tick: any serve-step compile after warmup
+        # is attributed (and fatal when armed)
+        self.session.observe()
 
     # ------------------------------------------------------ maintenance
     def _maybe_prepare(self, snapshot, now: float) -> None:
@@ -244,9 +332,9 @@ class AsyncServeEngine:
         coord = self.session.coord
         if coord is None or coord.deferring:
             return
-        report = coord.prepare(snapshot, now=now)
+        coord.prepare(snapshot, now=now)
+        self._c_prepares.inc()
         with self._lock:
-            self.stats.prepares += 1
             if coord.deferring:
                 self.policy.note_plan(now)
 
@@ -261,9 +349,9 @@ class AsyncServeEngine:
         # non-blocking: if the prepare worker holds the lifecycle lock we
         # retry on the next pump rather than stalling the serving thread.
         if self.session.commit_maintenance(blocking=False):
+            self._c_commits.inc()
             with self._lock:
                 self.policy.clear()
-                self.stats.commits += 1
 
     def _prep_loop(self) -> None:
         while True:
@@ -333,9 +421,9 @@ class AsyncServeEngine:
         if commit and self.session.coord is not None \
                 and self.session.coord.deferring:
             if self.session.commit_maintenance():
+                self._c_commits.inc()
                 with self._lock:
                     self.policy.clear()
-                    self.stats.commits += 1
 
     def __enter__(self) -> "AsyncServeEngine":
         self.start()

@@ -24,6 +24,7 @@ from ..core import (CFTDeviceState, DeviceRetrieval, MaintenanceEngine,
 from ..core.maintenance import RestageCoordinator
 from ..data.tokenizer import HashTokenizer
 from ..models import lm
+from ..obs import RecompileSentinel, Tracer, get_registry, state_shapes
 
 
 @dataclasses.dataclass
@@ -60,6 +61,11 @@ class RetrievalSession:
         self.coord: Optional[RestageCoordinator] = None
         self.batch_pad = 64
         self._step = None
+        # observability: process-wide registry, per-session tracer and
+        # recompile sentinel (the PR 6 shape-instability tripwire)
+        self.metrics = get_registry()
+        self.tracer = Tracer(self.metrics)
+        self.sentinel = RecompileSentinel(self.metrics)
 
     # ------------------------------------------------------------ attach
     def attach(self, state, lookup_fn=None, max_locs: int = 4, n: int = 3,
@@ -80,10 +86,13 @@ class RetrievalSession:
             self._step = functools.partial(
                 sharded_retrieve_device, max_locs=max_locs, n=n,
                 lookup_fn=lookup_fn)
+            from ..core.distributed import _sharded_retrieve_jit
+            self.sentinel.watch("serve.step", _sharded_retrieve_jit)
         else:
             self._step = jax.jit(functools.partial(
                 retrieve_device, max_locs=max_locs, n=n,
                 lookup_fn=lookup_fn))
+            self.sentinel.watch("serve.step", self._step)
 
     def attach_maintenance(self, maint, forest) -> None:
         """Attach a host-side maintenance engine over the bank backing
@@ -140,9 +149,14 @@ class RetrievalSession:
                  hashes: Sequence[int]) -> DeviceRetrieval:
         """Serve one ``(tree_id, hash)`` query batch synchronously: pad,
         dispatch, harvest, slice back to the true batch."""
-        hh, tid, b = self.pad_queries(tree_ids, hashes)
-        out = self.retrieve_dispatch(hh, tid)
-        self.harvest()
+        with self.tracer.span("serve.retrieve",
+                              queries=len(hashes)) as sp:
+            with sp.stage("pad"):
+                hh, tid, b = self.pad_queries(tree_ids, hashes)
+            with sp.stage("dispatch"):
+                out = self.retrieve_dispatch(hh, tid)
+            with sp.stage("harvest"):
+                self.harvest()
         return DeviceRetrieval(hit=out.hit[:b], locations=out.locations[:b],
                                up=out.up[:b], down=out.down[:b],
                                temperature=out.temperature)
@@ -150,9 +164,22 @@ class RetrievalSession:
     def compile_cache_size(self) -> int:
         """Number of compiled geometries the jitted step holds (-1 when
         the backend does not expose it) — the async tests pin this to the
-        bucket count to prove the hot path never recompiles."""
+        bucket count to prove the hot path never recompiles.  Refreshes
+        the ``serve.compile_cache_size`` gauge as a side effect."""
         size = getattr(self._step, "_cache_size", None)
-        return int(size()) if callable(size) else -1
+        n = int(size()) if callable(size) else -1
+        self.metrics.gauge("serve.compile_cache_size",
+                           "compiled geometries held by the serve step"
+                           ).set(n)
+        return n
+
+    def observe(self) -> dict:
+        """Post-batch observability tick: refresh the compile-cache
+        gauge and let the sentinel attribute any new hot-path
+        compilations (raising when armed).  Cheap — two cache-size
+        reads — so schedulers call it every batch."""
+        self.compile_cache_size()
+        return self.sentinel.check()
 
     # -------------------------------------------------------- maintenance
     def prepare_maintenance(self, state=None,
@@ -183,8 +210,16 @@ class RetrievalSession:
         a copy)."""
         if self.coord is None:
             return False
+        pending = self.coord.pending
+        kind = getattr(pending, "kind", None)
+        before = state_shapes(self.state) if pending is not None else None
         self.state, applied = self.coord.commit(self.state,
                                                 blocking=blocking)
+        if applied and before is not None:
+            # shape-stability tripwire: a delta/none commit must never
+            # change a committed array shape (PR 6's recompile bug)
+            self.sentinel.note_commit(kind, before,
+                                      state_shapes(self.state))
         return applied
 
     def maintain(self) -> Optional[MaintenanceReport]:

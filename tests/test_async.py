@@ -2,6 +2,7 @@
 lifecycle, shape-stability of the hot path, and equivalence with the
 synchronous engine on the same request stream."""
 import asyncio
+import threading
 
 import jax.numpy as jnp
 import numpy as np
@@ -233,6 +234,54 @@ def test_threaded_engine_with_churn_matches_sync():
 
     with pytest.raises(RuntimeError):
         eng.submit([0], [0])                         # stopped engine
+
+
+def test_concurrent_submitters_stats_stay_consistent():
+    """Many submitter threads hammer the running engine while thread-mode
+    maintenance churns underneath — the registry-backed counters must
+    come out exactly consistent (the old ad-hoc ``AsyncStats`` dataclass
+    was mutated from three threads without a lock and could tear)."""
+    forest, bank, session = _session(maint=True)
+    n_threads, per = 4, 30
+    streams = [_queries(forest, bank, per) for _ in range(n_threads)]
+    eng = AsyncServeEngine(session, latency_budget=1e-3, max_batch=32,
+                           min_bucket=4, commit_every=2,
+                           maintenance="thread")
+    eng.warmup()
+    futs = [[] for _ in range(n_threads)]
+    errors = []
+
+    def submitter(i):
+        try:
+            for j, (t, h) in enumerate(streams[i]):
+                if j == 10:                          # mid-flight churn
+                    session.maint.queue_insert(
+                        i % 4, f"stress entity {i}", [2])
+                futs[i].append(eng.submit(t, h))
+        except Exception as exc:                     # pragma: no cover
+            errors.append(exc)
+
+    with eng:
+        workers = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(n_threads)]
+        for w in workers:
+            w.start()
+        for w in workers:
+            w.join()
+        results = [f.result(timeout=30) for fs in futs for f in fs]
+    assert not errors
+    assert len(results) == n_threads * per
+
+    # exact accounting: no submit lost, no query double-counted
+    s = eng.stats
+    assert s.requests == n_threads * per
+    assert s.queries == sum(len(h) for st in streams for _, h in st)
+    assert sum(s.bucket_histogram.values()) == s.batches
+    # every dispatched slot is either a true query or a pad slot
+    assert (sum(b * n for b, n in s.bucket_histogram.items())
+            == s.queries + s.padded_queries)
+    assert s.commits >= 1                            # the churn landed
+    assert eng.hot_recompiles == 0                   # and stayed padded
 
 
 # -------------------------------------------------------------- pipeline
