@@ -38,6 +38,7 @@ GATED_METRICS: Dict[str, str] = {
     "expand_speedup": "down",     # bench_ragged
     "pause_reduction": "down",    # bench_pause
     "p99_ratio": "down",          # bench_async
+    "goodput_ratio": "down",      # bench_faults (faulted / fault-free)
     "bytes_fraction": "up",       # bench_ragged / bench_distributed
 }
 

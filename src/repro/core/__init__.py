@@ -13,10 +13,14 @@ from .lookup import (LookupResult, bump_temperature, bump_temperature_arena,
                      lookup_batch_bank, lookup_batch_ragged,
                      lookup_batch_trees, sort_buckets, sort_buckets_arena,
                      sort_buckets_bank)
-from .maintenance import (BankDelta, MaintenanceEngine, MaintenanceReport,
-                          PendingRestage, PendingShardedRestage,
-                          ShardedMaintenanceEngine, commit_restage,
-                          warm_restage)
+from .maintenance import (BankDelta, MaintenanceBreaker, MaintenanceEngine,
+                          MaintenanceReport, PendingRestage,
+                          PendingShardedRestage, ShardedMaintenanceEngine,
+                          commit_restage, warm_restage)
+from .snapshot import (RestoredSnapshot, SnapshotWriter,
+                       apply_maint_bookkeeping, cleanup_snapshots,
+                       latest_snapshot, list_snapshots, merge_sharded_bank,
+                       restore_snapshot, restore_state, save_snapshot)
 from .trag import (CFTRAG, CFTDeviceState, DeviceRetrieval, build_retriever,
                    gather_context, retrieve_device)
 from .distributed import (ShardedBankState, routing_counts, shard_bank,
@@ -30,9 +34,14 @@ __all__ = [
     "FilterBank", "ShardedBank", "build_bank", "build_bank_from_rows",
     "estimate_fpr", "plan_partition", "splice_arena_rows",
     "splice_arena_segment",
-    "BankDelta", "MaintenanceEngine", "MaintenanceReport",
+    "BankDelta", "MaintenanceBreaker", "MaintenanceEngine",
+    "MaintenanceReport",
     "PendingRestage", "PendingShardedRestage", "ShardedMaintenanceEngine",
     "commit_restage", "warm_restage",
+    "RestoredSnapshot", "SnapshotWriter", "apply_maint_bookkeeping",
+    "cleanup_snapshots", "latest_snapshot", "list_snapshots",
+    "merge_sharded_bank", "restore_snapshot", "restore_state",
+    "save_snapshot",
     "ShardedBankState", "routing_counts", "shard_bank",
     "sharded_apply_delta", "sharded_lookup", "sharded_lookup_bank",
     "sharded_retrieve_device", "sharded_splice_segment",

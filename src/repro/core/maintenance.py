@@ -123,6 +123,88 @@ class MaintenanceReport:
                     or self.sorted)
 
 
+# --------------------------------------------------- maintenance breaker
+
+class MaintenanceBreaker:
+    """Circuit breaker + retry backoff for the maintenance fault domain.
+
+    States (surfaced as the ``maint.breaker_state`` gauge — 0 closed,
+    1 half-open, 2 open):
+
+    * **closed** — normal operation.  After a failure, retries are gated
+      by exponential backoff (``backoff * 2**(k-1)``, capped at
+      ``backoff_max``, where k is the consecutive-failure count).
+    * **open** — tripped after ``threshold`` consecutive failures (or a
+      failed half-open probe).  Maintenance is disabled — the engine
+      degrades to serve-only mode (stale but correct answers from the
+      last committed state) until ``cooldown`` seconds pass.
+    * **half-open** — one probe attempt is allowed after the cooldown; a
+      success closes the breaker, a failure re-opens it.
+
+    Time is always passed in (``now``) so a fake clock drives the state
+    machine deterministically in tests.  Not locked — the coordinator
+    already serializes the maintenance lifecycle under its own lock.
+    """
+
+    CLOSED, HALF_OPEN, OPEN = "closed", "half_open", "open"
+    _GAUGE = {CLOSED: 0, HALF_OPEN: 1, OPEN: 2}
+
+    def __init__(self, threshold: int = 3, cooldown: float = 5.0,
+                 backoff: float = 0.05, backoff_max: float = 2.0):
+        self.threshold = threshold
+        self.cooldown = cooldown
+        self.backoff = backoff
+        self.backoff_max = backoff_max
+        self.failures = 0                       # consecutive
+        self.state = self.CLOSED
+        self._last_failure_t: Optional[float] = None
+        self._set_state(self.CLOSED)
+
+    def _set_state(self, state: str) -> None:
+        self.state = state
+        get_registry().gauge(
+            "maint.breaker_state",
+            "maintenance breaker: 0 closed, 1 half-open, 2 open").set(
+                self._GAUGE[state])
+
+    def retry_delay(self) -> float:
+        """Current exponential-backoff delay (closed state, after k
+        consecutive failures)."""
+        if self.failures == 0:
+            return 0.0
+        return min(self.backoff * 2 ** (self.failures - 1),
+                   self.backoff_max)
+
+    def allow(self, now: float) -> bool:
+        """May a maintenance attempt start at ``now``?  Transitions
+        open → half-open once the cooldown elapses."""
+        if self.state == self.OPEN:
+            if self._last_failure_t is not None and \
+                    now - self._last_failure_t >= self.cooldown:
+                self._set_state(self.HALF_OPEN)
+                return True
+            return False
+        if self.failures and self._last_failure_t is not None and \
+                now - self._last_failure_t < self.retry_delay():
+            return False                         # still backing off
+        return True
+
+    def record_failure(self, now: float, phase: str) -> None:
+        self.failures += 1
+        self._last_failure_t = now
+        get_registry().counter(
+            "maint.failures",
+            "maintenance prepare/commit failures by phase").inc(phase=phase)
+        if self.state == self.HALF_OPEN or self.failures >= self.threshold:
+            self._set_state(self.OPEN)
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self._last_failure_t = None
+        if self.state != self.CLOSED:
+            self._set_state(self.CLOSED)
+
+
 # ------------------------------------------------ double-buffered restage
 
 _SCATTER_PAD = 256      # scatter payloads round up to this (shape-stable jit)
@@ -717,6 +799,15 @@ class MaintenanceEngine:
             num_rows=b.num_rows,
             compactions=self.stats["compactions"])
 
+    def invalidate_shadow(self) -> None:
+        """Drop the restage shadow — the next :meth:`plan_restage`
+        classifies as ``full``, restaging the device state from the bank
+        from scratch.  The maintenance fault domain calls this after a
+        failed prepare/commit: the bank may have advanced past what the
+        device serves, and a full restage from the (always-consistent)
+        host bank is the recovery path that needs no diff bookkeeping."""
+        self._shadow = None
+
     def _diff_region(self, lo_new: int, hi_new: int,
                      lo_old: int) -> np.ndarray:
         """Arena rows in [lo_new, hi_new) whose staged-table content
@@ -955,6 +1046,12 @@ class ShardedMaintenanceEngine:
         a packed device state is built from this sharded bank."""
         for e in self.engines:
             e.mark_staged()
+
+    def invalidate_shadow(self) -> None:
+        """Drop every shard's restage shadow — the next plan is ``full``
+        (see :meth:`MaintenanceEngine.invalidate_shadow`)."""
+        for e in self.engines:
+            e.invalidate_shadow()
 
     def plan_restage(self) -> PendingShardedRestage:
         """Classify every shard's diff and stage a packed splice plan.
@@ -1260,7 +1357,8 @@ class RestageCoordinator:
     post-splice state (the old one is donated — drop it).
     """
 
-    def __init__(self, engine, forest):
+    def __init__(self, engine, forest, breaker: Optional[
+            "MaintenanceBreaker"] = None, fault_hook=None):
         self.engine = engine            # Maintenance- or Sharded- engine
         self.forest = forest
         self.pending = None
@@ -1268,6 +1366,21 @@ class RestageCoordinator:
         self._lock = threading.Lock()
         self.metrics = get_registry()
         self.tracer = Tracer(self.metrics)
+        # ------------------------------------------ maintenance fault domain
+        # breaker: consecutive prepare/commit failures gate retries with
+        # exponential backoff and eventually trip to serve-only mode.
+        # fault_hook(site): injected by the serving layer (faultinject's
+        # fault_point) — core never imports serving.
+        self.breaker = breaker if breaker is not None else \
+            MaintenanceBreaker()
+        self._fault = fault_hook if fault_hook is not None \
+            else (lambda site: None)
+        # dirty: a prepare/commit failed after the bank may have advanced
+        # past the device content — the next successful prepare must stage
+        # a (full) plan even if that cycle's maintain() reports no change,
+        # and absorbs are skipped (bank/device layouts may disagree).
+        self._dirty = False
+        self.last_error: Optional[BaseException] = None
         engine.mark_staged()            # caller attaches a freshly staged
         #                                 state over this engine's bank
 
@@ -1296,15 +1409,49 @@ class RestageCoordinator:
         """True while a staged plan awaits commit — skip absorbs."""
         return self.pending is not None
 
+    @property
+    def dirty(self) -> bool:
+        """True after a quarantined failure until the recovery commit —
+        the next prepare must stage a plan even on a no-change cycle."""
+        return self._dirty
+
+    @property
+    def degraded(self) -> bool:
+        """True while the breaker is open — serve-only mode (answers come
+        from the last committed state: stale but correct)."""
+        return self.breaker.state == MaintenanceBreaker.OPEN
+
+    def allow(self, now: float) -> bool:
+        """May a maintenance attempt start at ``now``?  Gated by the
+        breaker's backoff/cooldown schedule."""
+        return self.breaker.allow(now)
+
+    def _quarantine(self, phase: str, now: Optional[float],
+                    exc: BaseException) -> None:
+        """A prepare/commit raised: drop the failed plan, invalidate the
+        diff shadow (next successful prepare restages full, from the
+        always-consistent host bank — the rollback target is whatever the
+        device currently serves, which the failure never touched), mark
+        the lifecycle dirty, and feed the breaker."""
+        self.pending = None
+        self.plan_time = None
+        self._dirty = True
+        self.last_error = exc
+        self.engine.invalidate_shadow()
+        self.breaker.record_failure(
+            time.monotonic() if now is None else now, phase)
+
     def absorb(self, state) -> int:
         """Best-effort temperature harvest: skipped (returns 0) while a
-        plan is pending or another thread holds the lifecycle lock.
-        Deferred bumps are never lost — they ride on device until the
-        commit max-merge and the next successful absorb."""
+        plan is pending, the lifecycle is dirty after a failure (bank and
+        device layouts may disagree — a stale absorb raises), or another
+        thread holds the lifecycle lock.  Deferred bumps are never lost —
+        they ride on device until the commit max-merge and the next
+        successful absorb."""
         if not self._lock.acquire(blocking=False):
             return 0
         try:
-            if self.pending is not None:
+            if self.pending is not None or self._dirty:
                 return 0
             return self.engine.absorb(state)
         finally:
@@ -1314,47 +1461,75 @@ class RestageCoordinator:
                 ) -> MaintenanceReport:
         """Host maintenance pass + plan + payload staging + splice
         compilation — all overlappable with in-flight serving on the
-        (still untouched) ``state``."""
+        (still untouched) ``state``.
+
+        A raise anywhere in the pass quarantines the cycle (failed plan
+        dropped, shadow invalidated, breaker fed) and re-raises; the
+        device state was never touched, so serving continues on the last
+        committed content.  After a dirty failure the pass skips the
+        absorb (layouts may disagree) and always stages a plan — the full
+        restage from the host bank is the recovery."""
         with self._lock:
             assert self.pending is None, "commit the pending plan first"
-            with self.tracer.span("maint.prepare") as sp:
-                with sp.stage("maintain"):
-                    report = self.engine.maintain(state)
-                if report.changed and state is not None:
-                    with sp.stage("plan"):
-                        self.pending = self.engine.plan_restage()
-                    self.plan_time = now
-                    with sp.stage("warm"):
-                        warm_restage(state, self.pending)
-                sp.set(kind=getattr(self.pending, "kind", "none"),
-                       changed=report.changed)
-                self._packing_gauges()
+            try:
+                self._fault("prepare")
+                with self.tracer.span("maint.prepare") as sp:
+                    with sp.stage("maintain"):
+                        report = self.engine.maintain(
+                            None if self._dirty else state)
+                    if (report.changed or self._dirty) \
+                            and state is not None:
+                        with sp.stage("plan"):
+                            self.pending = self.engine.plan_restage()
+                        self.plan_time = now
+                        with sp.stage("warm"):
+                            warm_restage(state, self.pending)
+                    sp.set(kind=getattr(self.pending, "kind", "none"),
+                           changed=report.changed)
+                    self._packing_gauges()
+            except Exception as exc:
+                self._quarantine("prepare", now, exc)
+                raise
+            self.breaker.record_success()
             return report
 
-    def commit(self, state, blocking: bool = True) -> Tuple[object, bool]:
+    def commit(self, state, blocking: bool = True,
+               now: Optional[float] = None) -> Tuple[object, bool]:
         """O(changed-bytes) splice + swap; returns (new state, applied).
         With ``blocking=False`` a lock held by an in-flight prepare makes
-        this a no-op (the caller retries at the next batch boundary)."""
+        this a no-op (the caller retries at the next batch boundary).
+
+        A raise quarantines the plan and re-raises; the fault fires
+        before any buffer donates, so the caller's ``state`` is still the
+        live, consistent pre-commit content — rollback is "keep serving
+        it" and the next successful prepare restages full."""
         if not self._lock.acquire(blocking=blocking):
             return state, False
         try:
             if self.pending is None:
                 return state, False
-            # the serve-blocked window: nothing dispatches while the
-            # splice applies — the histogram bench_pause gates on
-            t0 = time.perf_counter()
-            with self.tracer.span(
-                    "maint.commit", kind=self.pending.kind,
-                    changed_rows=self.pending.changed_rows) as sp:
-                with sp.stage("splice"):
-                    state = commit_restage(state, self.pending,
-                                           self.engine, self.forest)
-            self.metrics.histogram(
-                "maint.commit_blocked_s",
-                "exclusive serve-blocked commit window").observe(
-                    time.perf_counter() - t0)
+            try:
+                self._fault("commit")
+                # the serve-blocked window: nothing dispatches while the
+                # splice applies — the histogram bench_pause gates on
+                t0 = time.perf_counter()
+                with self.tracer.span(
+                        "maint.commit", kind=self.pending.kind,
+                        changed_rows=self.pending.changed_rows) as sp:
+                    with sp.stage("splice"):
+                        state = commit_restage(state, self.pending,
+                                               self.engine, self.forest)
+                self.metrics.histogram(
+                    "maint.commit_blocked_s",
+                    "exclusive serve-blocked commit window").observe(
+                        time.perf_counter() - t0)
+            except Exception as exc:
+                self._quarantine("commit", now, exc)
+                raise
             self.pending = None
             self.plan_time = None
+            self._dirty = False
+            self.breaker.record_success()
             return state, True
         finally:
             self._lock.release()

@@ -140,11 +140,15 @@ class CFTDeviceState:
     def from_index(cls, index: CFTIndex) -> "CFTDeviceState":
         t = index.filter.tables()
         nb = index.filter.num_buckets
+        # NB: the host tables must be *copied*, not wrapped — on CPU,
+        # jnp.asarray zero-copies a 64-byte-aligned numpy array, and an
+        # aliased buffer would let later host-side writes (inserts,
+        # temperature bumps) leak into this supposedly immutable state
         return cls(
-            fingerprints=jnp.asarray(t.fingerprints),
-            temperature=jnp.asarray(t.temperature),
+            fingerprints=jnp.array(t.fingerprints, copy=True),
+            temperature=jnp.array(t.temperature, copy=True),
             # the device path uses CSR: slot payload = entity id (= row)
-            heads=jnp.asarray(t.entity_ids),
+            heads=jnp.array(t.entity_ids, copy=True),
             bucket_offsets=jnp.asarray(np.asarray([0, nb], np.int32)),
             tree_nb=jnp.asarray(np.asarray([nb], np.int32)),
             csr_offsets=jnp.asarray(index.csr.offsets),
@@ -178,10 +182,14 @@ class CFTDeviceState:
         # pad_csr keeps the CSR shapes stable under churn so the jitted
         # retrieval step never recompiles on a restage commit
         csr_off, csr_nodes = pad_csr(bank.csr_offsets, bank.csr_nodes)
+        # copy the mutable arena tables (see from_index): an aliased
+        # buffer would let maintenance writes to the host bank show
+        # through the serving state, breaking quarantine rollback ("keep
+        # serving the last committed content")
         return cls(
-            fingerprints=jnp.asarray(bank.fingerprints),
-            temperature=jnp.asarray(bank.temperature),
-            heads=jnp.asarray(bank.heads),
+            fingerprints=jnp.array(bank.fingerprints, copy=True),
+            temperature=jnp.array(bank.temperature, copy=True),
+            heads=jnp.array(bank.heads, copy=True),
             bucket_offsets=jnp.asarray(
                 bank.bucket_offsets.astype(np.int32)),
             tree_nb=jnp.asarray(bank.tree_nb.astype(np.int32)),

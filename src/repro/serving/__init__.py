@@ -1,7 +1,11 @@
 """Serving: engine (prefill/decode/scheduler), continuous-batching async
-front end, and the CFT-RAG pipeline."""
+front end, the CFT-RAG pipeline, typed serving errors, and the
+deterministic fault-injection harness."""
 from .async_engine import AsyncServeEngine, AsyncStats, RetrievalSlice
 from .engine import Request, RetrievalSession, ServeEngine, kv_cache_bytes
+from .errors import DeadlineExceeded, EngineClosed, EngineOverloaded
+from .faultinject import (FAULT_SITES, FaultPlan, InjectedFault,
+                          active_plan, fault_point, inject)
 from .rag import RAGAnswer, RAGPipeline
 from .scheduler import (CommitPolicy, MicroBatcher, PendingRetrieval,
                         bucket_batch, bucket_shapes)
@@ -9,4 +13,7 @@ from .scheduler import (CommitPolicy, MicroBatcher, PendingRetrieval,
 __all__ = ["AsyncServeEngine", "AsyncStats", "RetrievalSlice", "Request",
            "RetrievalSession", "ServeEngine", "kv_cache_bytes", "RAGAnswer",
            "RAGPipeline", "CommitPolicy", "MicroBatcher", "PendingRetrieval",
-           "bucket_batch", "bucket_shapes"]
+           "bucket_batch", "bucket_shapes",
+           "DeadlineExceeded", "EngineClosed", "EngineOverloaded",
+           "FAULT_SITES", "FaultPlan", "InjectedFault", "active_plan",
+           "fault_point", "inject"]

@@ -42,6 +42,30 @@ prepare → device_lookup → route_back) and ticks the session's
 recompile sentinel, so a commit that leaks an unstable shape into the
 hot path is counted (and, armed, fatal) rather than a silent ~650 ms
 tail spike.
+
+Failure model (see README "Failure model" for the full contract):
+
+* **admission control** — the request queue is bounded
+  (``max_queue_requests``); a submit past the bound raises
+  :class:`~repro.serving.errors.EngineOverloaded` instead of growing
+  the queue (and the tail latency) without limit.
+* **deadlines** — ``submit(..., timeout=s)`` stamps an absolute
+  deadline; expired requests fail fast with
+  :class:`~repro.serving.errors.DeadlineExceeded` at coalesce time
+  (swept from the queue before every launch) and again at dispatch
+  time, never occupying a batch slot or device work.
+* **dispatch faults** — an exception while serving a batch fails that
+  batch's futures and the engine keeps scheduling; it never kills the
+  scheduler thread (counted as ``serve.batch_failures``).
+* **maintenance faults** — prepare/commit exceptions are quarantined by
+  the ``RestageCoordinator`` (plan dropped, shadow invalidated) and the
+  engine keeps serving the last committed state; retries follow the
+  breaker's backoff schedule and an open breaker degrades to serve-only
+  mode (see :class:`~repro.core.maintenance.MaintenanceBreaker`).
+* **shutdown** — ``stop()`` drains the queue (every outstanding future
+  resolves — with a result, or with the failure that stopped it) and
+  any submit afterwards raises
+  :class:`~repro.serving.errors.EngineClosed` immediately.
 """
 from __future__ import annotations
 
@@ -49,12 +73,15 @@ import asyncio
 import dataclasses
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import HotPathRecompileError
 from .engine import RetrievalSession
+from .errors import DeadlineExceeded, EngineClosed, EngineOverloaded
+from .faultinject import fault_point
 from .scheduler import (CommitPolicy, MicroBatcher, PendingRetrieval,
                         bucket_shapes)
 
@@ -103,12 +130,21 @@ class AsyncServeEngine:
     def __init__(self, engine, *, latency_budget: float = 2e-3,
                  max_batch: int = 256, min_bucket: int = 16,
                  commit_every: int = 4, commit_deadline: float = 0.25,
-                 clock=time.monotonic, maintenance: str = "inline"):
+                 clock=time.monotonic, maintenance: str = "inline",
+                 max_queue_requests: int = 1024,
+                 default_timeout: Optional[float] = None):
         self.session: RetrievalSession = getattr(engine, "retrieval", engine)
         if maintenance not in ("inline", "thread", "off"):
             raise ValueError(f"unknown maintenance mode {maintenance!r}")
+        if max_queue_requests < 1:
+            raise ValueError("max_queue_requests must be >= 1")
         self.maintenance = maintenance
         self.clock = clock
+        # admission control: pending *requests* (split chunks included)
+        # above this bound shed with EngineOverloaded at submit time
+        self.max_queue_requests = max_queue_requests
+        # deadline stamped on submits that pass no explicit timeout
+        self.default_timeout = default_timeout
         self.batcher = MicroBatcher(latency_budget=latency_budget,
                                     max_batch=max_batch,
                                     min_bucket=min_bucket)
@@ -130,7 +166,19 @@ class AsyncServeEngine:
                                     "maintenance commits applied")
         self._c_bucket = m.counter("serve.batch_bucket",
                                    "batches per pow2 bucket geometry")
+        self._c_rejected = m.counter(
+            "serve.rejected",
+            "requests shed before dispatch, by reason "
+            "(overload | deadline | closed)")
+        self._c_batch_failures = m.counter(
+            "serve.batch_failures",
+            "batches whose dispatch/serve path raised (futures failed, "
+            "engine kept scheduling)")
         self._base = self._counter_values()
+
+        # last maintenance exception the background lifecycle swallowed
+        # (the coordinator's quarantine already counted + metered it)
+        self.last_maintenance_error: Optional[BaseException] = None
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -179,27 +227,110 @@ class AsyncServeEngine:
         return self.session.sentinel.recompiles
 
     # ------------------------------------------------------------ intake
-    def submit(self, tree_ids: Sequence[int],
-               hashes: Sequence[int]) -> Future:
+    @staticmethod
+    def _fail(req: PendingRetrieval, exc: BaseException) -> None:
+        """Resolve a request's future with ``exc`` unless the caller
+        already cancelled it (never let a future hang)."""
+        try:
+            req.future.set_exception(exc)
+        except InvalidStateError:
+            pass
+
+    @staticmethod
+    def _resolve(req: PendingRetrieval, result: "RetrievalSlice") -> None:
+        try:
+            req.future.set_result(result)
+        except InvalidStateError:
+            pass
+
+    def submit(self, tree_ids: Sequence[int], hashes: Sequence[int],
+               *, timeout: Optional[float] = None) -> Future:
         """Enqueue one retrieval request; the future resolves to a
         :class:`RetrievalSlice` once the batch it rides in completes.
-        Thread-safe."""
+        Thread-safe.
+
+        ``timeout`` (seconds, default :attr:`default_timeout`) stamps an
+        absolute deadline: a request still queued — or popped but not yet
+        dispatched — past it fails with :class:`DeadlineExceeded`.
+
+        Raises :class:`EngineClosed` after ``stop()``, and
+        :class:`EngineOverloaded` when the bounded queue is full (the
+        request is shed, never enqueued).  A request larger than
+        ``max_batch`` splits into chunks that ride separate batches; the
+        returned future aggregates the chunk slices in query order (any
+        chunk failure fails the whole request).
+        """
         if len(tree_ids) != len(hashes):
             raise ValueError("tree_ids and hashes length mismatch")
-        req = PendingRetrieval(tree_ids=list(tree_ids),
-                               hashes=list(hashes),
-                               arrive_t=self.clock())
+        now = self.clock()
+        timeout = self.default_timeout if timeout is None else timeout
+        deadline_t = None if timeout is None else now + timeout
+        mb = self.batcher.max_batch
+        chunks = [PendingRetrieval(
+            tree_ids=list(tree_ids[i:i + mb]),
+            hashes=list(hashes[i:i + mb]),
+            arrive_t=now, deadline_t=deadline_t)
+            for i in range(0, max(len(hashes), 1), mb)]
         with self._work:
             if self._stop:
-                raise RuntimeError("engine is stopped")
-            self.batcher.add(req)
+                self._c_rejected.inc(reason="closed")
+                raise EngineClosed()
+            room = self.max_queue_requests - len(self.batcher)
+            if len(chunks) > room:
+                # all-or-nothing: a partially enqueued split request
+                # could never resolve its aggregate future coherently
+                self._c_rejected.inc(reason="overload")
+                raise EngineOverloaded(pending=len(self.batcher),
+                                       limit=self.max_queue_requests)
+            for c in chunks:
+                self.batcher.add(c)
             self._work.notify()
-        return req.future
+        if len(chunks) == 1:
+            return chunks[0].future
+        return self._aggregate([c.future for c in chunks])
+
+    @staticmethod
+    def _aggregate(parts: List[Future]) -> Future:
+        """One future over a split request's chunk futures: resolves to
+        the concatenated :class:`RetrievalSlice` (query order preserved)
+        once every chunk lands; the first chunk failure fails it."""
+        parent: Future = Future()
+        remaining = [len(parts)]
+        lock = threading.Lock()
+
+        def _on_done(_f) -> None:
+            with lock:
+                remaining[0] -= 1
+                if remaining[0] > 0:
+                    return
+            try:
+                slices = [p.result() for p in parts]
+                out = RetrievalSlice(
+                    hit=np.concatenate([s.hit for s in slices]),
+                    locations=np.concatenate(
+                        [s.locations for s in slices]),
+                    up=np.concatenate([s.up for s in slices]),
+                    down=np.concatenate([s.down for s in slices]))
+                parent.set_result(out)
+            except InvalidStateError:                # pragma: no cover
+                pass
+            except BaseException as exc:
+                try:
+                    parent.set_exception(exc)
+                except InvalidStateError:            # pragma: no cover
+                    pass
+
+        for p in parts:
+            p.add_done_callback(_on_done)
+        return parent
 
     async def retrieve_async(self, tree_ids: Sequence[int],
-                             hashes: Sequence[int]) -> RetrievalSlice:
+                             hashes: Sequence[int],
+                             timeout: Optional[float] = None
+                             ) -> RetrievalSlice:
         """Event-loop flavor of :meth:`submit`."""
-        return await asyncio.wrap_future(self.submit(tree_ids, hashes))
+        return await asyncio.wrap_future(
+            self.submit(tree_ids, hashes, timeout=timeout))
 
     def warmup(self) -> int:
         """Pre-compile every bucket geometry the batcher can produce so
@@ -219,37 +350,66 @@ class AsyncServeEngine:
         return len(shapes)
 
     # ----------------------------------------------------- deterministic
+    def _fail_expired(self, expired: List[PendingRetrieval],
+                      now: float) -> None:
+        """Fail swept requests with DeadlineExceeded (outside the engine
+        lock — future callbacks may re-enter submit())."""
+        for req in expired:
+            self._c_rejected.inc(reason="deadline")
+            self._fail(req, DeadlineExceeded(req.deadline_t, now))
+
     def pump(self, now: Optional[float] = None) -> bool:
-        """Drive one scheduling step inline: launch a batch if one is
-        due, then commit a staged plan if the policy says so.  Returns
-        True when a batch launched.  This is the thread-free path the
-        deterministic tests (and single-threaded callers) use."""
+        """Drive one scheduling step inline: sweep expired requests,
+        launch a batch if one is due, then commit a staged plan if the
+        policy says so.  Returns True when a batch launched.  This is the
+        thread-free path the deterministic tests (and single-threaded
+        callers) use."""
         explicit = now is not None
         now = self.clock() if now is None else now
-        launched = False
         with self._lock:
+            expired = self.batcher.expire(now)
             batch = self.batcher.pop() if self.batcher.ready(now) else []
+        self._fail_expired(expired, now)
+        launched = False
         if batch:
-            self._launch(batch, now)
-            launched = True
+            launched = self._launch(batch, now)
         self._maybe_commit(now if explicit else self.clock())
         return launched
 
     def flush(self, now: Optional[float] = None) -> int:
-        """Launch until the queue drains regardless of deadlines (used on
-        stop so no future is left hanging).  Returns batches launched."""
+        """Launch until the queue drains, ignoring the coalescing budget
+        (used on stop so no future is left hanging — every outstanding
+        future resolves with a result, a DeadlineExceeded for requests
+        already past deadline, or the failure that broke its batch).
+        Returns batches launched."""
         n = 0
         while True:
+            t = self.clock() if now is None else now
             with self._lock:
+                expired = self.batcher.expire(t)
                 batch = self.batcher.pop()
+            self._fail_expired(expired, t)
             if not batch:
                 break
-            self._launch(batch, self.clock() if now is None else now)
-            n += 1
+            if self._launch(batch, t):
+                n += 1
         return n
 
     # ------------------------------------------------------------ batch
-    def _launch(self, batch: List[PendingRetrieval], now: float) -> None:
+    def _launch(self, batch: List[PendingRetrieval], now: float) -> bool:
+        """Serve one popped batch.  Returns True when it dispatched.
+
+        Dispatch-time deadline check: requests that expired while the
+        batch coalesced fail fast here and never pad into the bucket.  A
+        raise anywhere in the serve path (injected ``dispatch`` faults
+        included) fails this batch's futures and returns — the engine
+        keeps scheduling; it never kills the scheduler thread."""
+        arrive_t = batch[0].arrive_t
+        live = [r for r in batch if not r.expired(now)]
+        self._fail_expired([r for r in batch if r.expired(now)], now)
+        if not live:
+            return False
+        batch = live
         tids: List[int] = []
         hhs: List[int] = []
         for req in batch:
@@ -261,39 +421,48 @@ class AsyncServeEngine:
                                       requests=len(batch))
         # the oldest request's queue wait is the coalescing cost this
         # batch imposed — measured from its arrival stamp, not timed here
-        sp.add_stage("coalesce", max(0.0, now - batch[0].arrive_t))
+        sp.add_stage("coalesce", max(0.0, now - arrive_t))
 
         # pre-dispatch snapshot: the maintenance pass absorbs against
         # arrays that are already materialized, so it never blocks on the
         # batch we just launched; this batch's bumps harvest next cycle.
         snapshot = self.session.state
-        with sp.stage("pad"):
-            hh, tid, b = self.session.pad_queries(tids, hhs, pad_to=bucket)
         try:
+            with sp.stage("pad"):
+                hh, tid, b = self.session.pad_queries(tids, hhs,
+                                                      pad_to=bucket)
             with sp.stage("dispatch"):
+                fault_point("dispatch")
                 out = self.session.retrieve_dispatch(hh, tid)
-        except Exception as exc:                      # pragma: no cover
-            for req in batch:
-                req.future.set_exception(exc)
+
+            with sp.stage("prepare"):
+                self._maybe_prepare(snapshot, now)
+
+            # materializing blocks until the batch lands — everything
+            # above ran under it.
+            with sp.stage("device_lookup"):
+                hit = np.asarray(out.hit)
+                loc = np.asarray(out.locations)
+                up = np.asarray(out.up)
+                down = np.asarray(out.down)
+                self.session.harvest()
+        except HotPathRecompileError:
+            # armed sentinel at dispatch: fail loudly, don't contain
             raise
-
-        with sp.stage("prepare"):
-            self._maybe_prepare(snapshot, now)
-
-        # materializing blocks until the batch lands — everything above
-        # ran under it.
-        with sp.stage("device_lookup"):
-            hit = np.asarray(out.hit)
-            loc = np.asarray(out.locations)
-            up = np.asarray(out.up)
-            down = np.asarray(out.down)
-            self.session.harvest()
+        except Exception as exc:
+            # contain the blast radius to this batch: fail its futures,
+            # count it, keep the scheduler alive on the last good state
+            sp.set(error=type(exc).__name__).end()
+            self._c_batch_failures.inc()
+            for req in batch:
+                self._fail(req, exc)
+            return False
 
         with sp.stage("route_back"):
             off = 0
             for req in batch:
                 k = len(req)
-                req.future.set_result(RetrievalSlice(
+                self._resolve(req, RetrievalSlice(
                     hit=hit[off:off + k], locations=loc[off:off + k],
                     up=up[off:off + k], down=down[off:off + k]))
                 off += k
@@ -309,14 +478,20 @@ class AsyncServeEngine:
         # post-batch sentinel tick: any serve-step compile after warmup
         # is attributed (and fatal when armed)
         self.session.observe()
+        return True
 
     # ------------------------------------------------------ maintenance
     def _maybe_prepare(self, snapshot, now: float) -> None:
-        if self.maintenance == "off" or self.session.coord is None:
+        coord = self.session.coord
+        if self.maintenance == "off" or coord is None:
             return
-        if self.session.coord.deferring:
+        if coord.deferring:
             return
-        if self.session.pending_mutations() == 0:
+        # breaker gate: backoff after failures, serve-only while open —
+        # the queued delta simply waits for the next allowed attempt
+        if not coord.allow(now):
+            return
+        if self.session.pending_mutations() == 0 and not coord.dirty:
             return
         if self.maintenance == "thread":
             if not self._prep_event.is_set():
@@ -332,7 +507,14 @@ class AsyncServeEngine:
         coord = self.session.coord
         if coord is None or coord.deferring:
             return
-        coord.prepare(snapshot, now=now)
+        try:
+            coord.prepare(snapshot, now=now)
+        except Exception as exc:
+            # the coordinator already quarantined (plan dropped, shadow
+            # invalidated, breaker fed) — serving continues on the last
+            # committed state and the breaker schedules the retry
+            self.last_maintenance_error = exc
+            return
         self._c_prepares.inc()
         with self._lock:
             if coord.deferring:
@@ -348,7 +530,22 @@ class AsyncServeEngine:
             return
         # non-blocking: if the prepare worker holds the lifecycle lock we
         # retry on the next pump rather than stalling the serving thread.
-        if self.session.commit_maintenance(blocking=False):
+        try:
+            applied = self.session.commit_maintenance(blocking=False,
+                                                      now=now)
+        except HotPathRecompileError:
+            # the armed sentinel is a fail-loudly tripwire (CI/debug
+            # mode), not a maintenance fault — never contain it
+            raise
+        except Exception as exc:
+            # quarantined splice failure: the session still serves the
+            # pre-commit state (the plan dropped before any donation) —
+            # clear the policy, the breaker gates the re-prepare
+            self.last_maintenance_error = exc
+            with self._lock:
+                self.policy.clear()
+            return
+        if applied:
             self._c_commits.inc()
             with self._lock:
                 self.policy.clear()
@@ -386,7 +583,8 @@ class AsyncServeEngine:
                 if self._stop:
                     return
                 now = self.clock()
-                if not self.batcher.ready(now):
+                expired = self.batcher.expire(now)
+                if not expired and not self.batcher.ready(now):
                     deadline = self.batcher.deadline()
                     timeout = None
                     if deadline is not None:
@@ -398,15 +596,22 @@ class AsyncServeEngine:
                     self._work.wait(timeout=timeout)
                     if self._stop:
                         return
-                now = self.clock()
+                    now = self.clock()
+                    expired += self.batcher.expire(now)
                 batch = self.batcher.pop() if self.batcher.ready(now) else []
+            # future callbacks may re-enter submit(): resolve outside
+            # the engine lock
+            self._fail_expired(expired, now)
             if batch:
                 self._launch(batch, now)
             self._maybe_commit(self.clock())
 
     def stop(self, commit: bool = True) -> None:
-        """Stop the scheduler, drain the queue (every outstanding future
-        resolves), and optionally commit any staged plan."""
+        """Stop the scheduler and drain: every outstanding future
+        resolves (result, DeadlineExceeded, or its batch's failure —
+        never left hanging), then any staged plan optionally commits.
+        Afterwards :meth:`submit` raises :class:`EngineClosed`
+        immediately.  Idempotent."""
         with self._work:
             self._stop = True
             self._work.notify_all()
@@ -418,12 +623,30 @@ class AsyncServeEngine:
             self._prep_thread.join()
             self._prep_thread = None
         self.flush()
+        # belt-and-braces: a request the drain could not serve (e.g. its
+        # batch kept failing) must still resolve — never leak a future
+        with self._lock:
+            leftovers = self.batcher.pop()
+            while leftovers:
+                for req in leftovers:
+                    self._fail(req, EngineClosed(
+                        "engine stopped before the request was served"))
+                leftovers = self.batcher.pop()
         if commit and self.session.coord is not None \
                 and self.session.coord.deferring:
-            if self.session.commit_maintenance():
+            try:
+                applied = self.session.commit_maintenance()
+            except Exception as exc:
+                self.last_maintenance_error = exc
+                applied = False
+            if applied:
                 self._c_commits.inc()
                 with self._lock:
                     self.policy.clear()
+
+    def close(self) -> None:
+        """Alias for :meth:`stop` — the resource-style name."""
+        self.stop()
 
     def __enter__(self) -> "AsyncServeEngine":
         self.start()

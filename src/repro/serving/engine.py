@@ -59,6 +59,7 @@ class RetrievalSession:
         self.state = None                      # CFTDeviceState | Sharded
         self.maint: Optional[MaintenanceEngine] = None
         self.coord: Optional[RestageCoordinator] = None
+        self.snapshots = None                  # Optional[SnapshotWriter]
         self.batch_pad = 64
         self._step = None
         # observability: process-wide registry, per-session tracer and
@@ -94,12 +95,24 @@ class RetrievalSession:
                 lookup_fn=lookup_fn))
             self.sentinel.watch("serve.step", self._step)
 
-    def attach_maintenance(self, maint, forest) -> None:
+    def attach_maintenance(self, maint, forest, breaker=None) -> None:
         """Attach a host-side maintenance engine over the bank backing
         the attached state — which must have just been staged from that
-        bank (the engine's restage shadow initializes to its content)."""
+        bank (the engine's restage shadow initializes to its content).
+        ``breaker`` overrides the coordinator's fault-domain circuit
+        breaker (tests pass one with a tight threshold/cooldown).  The
+        fault-injection hook is wired here so ``repro.core`` never
+        imports the serving layer."""
+        from .faultinject import fault_point
         self.maint = maint
-        self.coord = RestageCoordinator(maint, forest)
+        self.coord = RestageCoordinator(maint, forest, breaker=breaker,
+                                        fault_hook=fault_point)
+
+    def configure_snapshots(self, writer) -> None:
+        """Attach a :class:`repro.core.snapshot.SnapshotWriter`: every
+        applied maintenance commit ticks it, so snapshots land exactly
+        when bank and device state are in sync."""
+        self.snapshots = writer
 
     # ---------------------------------------------------------- hot path
     def pad_queries(self, tree_ids: Sequence[int], hashes: Sequence[int],
@@ -202,24 +215,31 @@ class RetrievalSession:
         return self.coord.prepare(self.state if state is None else state,
                                   now=now)
 
-    def commit_maintenance(self, blocking: bool = True) -> bool:
+    def commit_maintenance(self, blocking: bool = True,
+                           now: Optional[float] = None) -> bool:
         """Phase two: the O(changed-bytes) device splice + atomic state
         swap.  Returns True when a staged plan was applied.  The splice
         donates the old state's arena buffers — the swapped-out state must
         not be probed again (on backends without donation this is merely
-        a copy)."""
+        a copy).  A splice failure quarantines the plan and re-raises;
+        ``self.state`` is untouched (the fault fires before donation), so
+        the session keeps serving the last committed content."""
         if self.coord is None:
             return False
         pending = self.coord.pending
         kind = getattr(pending, "kind", None)
         before = state_shapes(self.state) if pending is not None else None
         self.state, applied = self.coord.commit(self.state,
-                                                blocking=blocking)
+                                                blocking=blocking, now=now)
         if applied and before is not None:
             # shape-stability tripwire: a delta/none commit must never
             # change a committed array shape (PR 6's recompile bug)
             self.sentinel.note_commit(kind, before,
                                       state_shapes(self.state))
+        if applied and self.snapshots is not None:
+            # bank == device right here; the writer decides cadence and
+            # swallows write failures (serving outlives a bad disk)
+            self.snapshots.note_commit(self.state, self.maint)
         return applied
 
     def maintain(self) -> Optional[MaintenanceReport]:

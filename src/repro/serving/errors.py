@@ -1,0 +1,47 @@
+"""Typed serving-path errors.
+
+Every failure the async engine can hand a caller is a distinct subclass
+of ``RuntimeError`` (so pre-existing ``except RuntimeError`` callers keep
+working) carrying enough context to act on:
+
+* :class:`EngineOverloaded` — admission control rejected the request
+  because the bounded queue is full.  Shed load upstream (back off,
+  retry elsewhere); the engine itself never grows the queue unbounded.
+* :class:`DeadlineExceeded` — the request's deadline passed before it
+  dispatched.  Raised at coalesce or dispatch time, never after device
+  work was spent on the request.
+* :class:`EngineClosed` — the engine was stopped (or never started);
+  the request cannot be served by this engine instance.  Outstanding
+  futures at ``stop()`` resolve with this instead of hanging forever.
+"""
+from __future__ import annotations
+
+
+class EngineOverloaded(RuntimeError):
+    """Admission control rejected a submit: the request queue is full."""
+
+    def __init__(self, pending: int, limit: int):
+        super().__init__(
+            f"engine overloaded: {pending} pending requests at the "
+            f"queue bound {limit}")
+        self.pending = pending
+        self.limit = limit
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before it was dispatched."""
+
+    def __init__(self, deadline_t: float, now: float):
+        super().__init__(
+            f"deadline exceeded: deadline_t={deadline_t:.6f} "
+            f"now={now:.6f}")
+        self.deadline_t = deadline_t
+        self.now = now
+
+
+class EngineClosed(RuntimeError):
+    """The engine is stopped; the request was not (and will not be)
+    served by this instance."""
+
+    def __init__(self, msg: str = "engine is stopped"):
+        super().__init__(msg)

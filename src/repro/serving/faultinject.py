@@ -1,0 +1,121 @@
+"""Deterministic fault injection for the serving stack.
+
+Chaos tests (and ``benchmarks/bench_faults.py``) need failures that are
+*repeatable*: "the second maintenance prepare of the run raises", not
+"some prepare eventually raises".  A :class:`FaultPlan` maps named fault
+sites to the 0-based invocation ordinals that should raise; production
+code calls :func:`fault_point` at each site, which is a no-op (one module
+attribute load + ``None`` check) unless a plan is active.
+
+Named sites — the registry is ``FAULT_SITES`` and documented in
+CONTRIBUTING.md:
+
+* ``prepare``  — start of ``RestageCoordinator.prepare``, before the
+  host maintenance pass mutates the bank;
+* ``commit``   — start of ``RestageCoordinator.commit``'s splice, before
+  any device buffer is donated;
+* ``dispatch`` — in ``AsyncServeEngine._launch``, before the batch
+  dispatches on device;
+* ``snapshot-write`` — in ``core.snapshot`` after the leaves are written
+  but *before* the atomic rename (proves a crashed write never corrupts
+  the previous snapshot).
+
+Core modules never import this one — the serving layer injects
+:func:`fault_point` as a ``fault_hook`` callable where core code needs a
+site, so ``repro.core`` stays free of serving dependencies.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from ..obs import get_registry
+
+#: the closed set of named fault sites production code exposes
+FAULT_SITES = ("prepare", "commit", "dispatch", "snapshot-write")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed fault site; carries the site name and the
+    0-based invocation ordinal that fired."""
+
+    def __init__(self, site: str, ordinal: int):
+        super().__init__(f"injected fault at site {site!r} "
+                         f"(invocation #{ordinal})")
+        self.site = site
+        self.ordinal = ordinal
+
+
+class FaultPlan:
+    """Deterministic fault schedule: ``{site: ordinals}`` where each
+    ordinal is a 0-based invocation index of that site that raises
+    :class:`InjectedFault`.  An ``int`` value is shorthand for "the
+    first n invocations" (``3`` ≡ ``(0, 1, 2)``).
+
+    Thread-safe: sites fire from the scheduler thread, the prepare
+    worker, and test threads concurrently.  ``history`` records every
+    injected ``(site, ordinal)`` in firing order; ``calls(site)`` counts
+    total invocations (fired or not) so tests can assert coverage.
+    """
+
+    def __init__(self, spec: Dict[str, Union[int, Sequence[int]]]):
+        self._spec: Dict[str, frozenset] = {}
+        for site, ords in spec.items():
+            if isinstance(ords, int):
+                ords = range(ords)
+            self._spec[site] = frozenset(int(o) for o in ords)
+        self._counts: Dict[str, int] = {}
+        self._lock = threading.Lock()
+        self.history: List[Tuple[str, int]] = []
+
+    def fire(self, site: str) -> None:
+        with self._lock:
+            n = self._counts.get(site, 0)
+            self._counts[site] = n + 1
+            hit = n in self._spec.get(site, ())
+            if hit:
+                self.history.append((site, n))
+        if hit:
+            get_registry().counter(
+                "faults.injected", "injected faults by site").inc(site=site)
+            raise InjectedFault(site, n)
+
+    def calls(self, site: str) -> int:
+        """Total invocations of ``site`` seen so far (fired or not)."""
+        with self._lock:
+            return self._counts.get(site, 0)
+
+    def hits(self, site: Optional[str] = None) -> int:
+        """Number of faults actually injected (optionally per site)."""
+        with self._lock:
+            if site is None:
+                return len(self.history)
+            return sum(1 for s, _ in self.history if s == site)
+
+
+_active: Optional[FaultPlan] = None
+
+
+def fault_point(site: str) -> None:
+    """Production-code hook: raises per the active plan, else a no-op."""
+    plan = _active
+    if plan is not None:
+        plan.fire(site)
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _active
+
+
+@contextmanager
+def inject(plan: FaultPlan):
+    """Arm ``plan`` for the duration of the block (process-global — one
+    plan at a time; chaos tests do not run in parallel)."""
+    global _active
+    prev = _active
+    _active = plan
+    try:
+        yield plan
+    finally:
+        _active = prev

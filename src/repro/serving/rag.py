@@ -52,7 +52,9 @@ class RAGPipeline:
                  tokenizer: Optional[HashTokenizer] = None,
                  num_buckets: int = 1024, n_hierarchy: int = 3,
                  use_device_lookup: bool = False, use_bank: bool = False,
-                 mesh=None, mesh_axis: str = "model"):
+                 mesh=None, mesh_axis: str = "model",
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 1, snapshot_keep: int = 3):
         self.corpus = corpus
         self.forest = build_forest(corpus.trees)
         self.index = build_index(self.forest, num_buckets=num_buckets)
@@ -69,20 +71,48 @@ class RAGPipeline:
         # lifecycle; the pipeline's `_dev_state`/`_coord` are views on it
         self.session = RetrievalSession()
         self._gen_lock = threading.Lock()
+        # crash recovery: a compatible snapshot under snapshot_dir
+        # replaces the fresh bank/state build — bit-identical to what was
+        # serving when the snapshot was taken (corrupt or layout-
+        # incompatible snapshots fall back to a fresh build)
+        self.snapshot_dir = snapshot_dir
+        self.restored_step: Optional[int] = None
+        snap = self._load_snapshot() if use_bank and snapshot_dir else None
         if use_bank and mesh is not None:
-            # bank-axis sharded deployment: tree ranges partitioned over
-            # the mesh axis, shard-local maintenance, all-to-all routing
-            self.bank = self.bank.shard(int(mesh.shape[mesh_axis]))
-            self.maintenance = ShardedMaintenanceEngine(self.bank)
-            self._dev_state = stage_sharded_bank(self.bank, self.forest,
-                                                 mesh, mesh_axis)
+            from ..core.snapshot import apply_maint_bookkeeping, \
+                restore_state
+            if snap is not None:
+                self.bank = snap.bank
+                self.maintenance = ShardedMaintenanceEngine(self.bank)
+                apply_maint_bookkeeping(self.maintenance, snap)
+                self._dev_state = restore_state(snap, mesh=mesh,
+                                                axis=mesh_axis)
+                self.restored_step = snap.step
+            else:
+                # bank-axis sharded deployment: tree ranges partitioned
+                # over the mesh axis, shard-local maintenance,
+                # all-to-all routing
+                self.bank = self.bank.shard(int(mesh.shape[mesh_axis]))
+                self.maintenance = ShardedMaintenanceEngine(self.bank)
+                self._dev_state = stage_sharded_bank(self.bank, self.forest,
+                                                     mesh, mesh_axis)
         elif use_bank:
-            self.maintenance = MaintenanceEngine(self.bank)
-            # NB: the pipeline owns its device state, so it runs its own
-            # idle-time hook (maintain() below) rather than attaching the
-            # engine's — two restage owners over one bank would let host
-            # and device slot layouts diverge.
-            self._dev_state = CFTDeviceState.from_bank(self.bank, self.forest)
+            from ..core.snapshot import apply_maint_bookkeeping, \
+                restore_state
+            if snap is not None:
+                self.bank = snap.bank
+                self.maintenance = MaintenanceEngine(self.bank)
+                apply_maint_bookkeeping(self.maintenance, snap)
+                self._dev_state = restore_state(snap)
+                self.restored_step = snap.step
+            else:
+                self.maintenance = MaintenanceEngine(self.bank)
+                # NB: the pipeline owns its device state, so it runs its
+                # own idle-time hook (maintain() below) rather than
+                # attaching the engine's — two restage owners over one
+                # bank would let host and device slot layouts diverge.
+                self._dev_state = CFTDeviceState.from_bank(self.bank,
+                                                           self.forest)
         elif use_device_lookup:
             self.maintenance = None
             self._dev_state = CFTDeviceState.from_index(self.index)
@@ -96,6 +126,36 @@ class RAGPipeline:
                                 lookup_fn=cuckoo_lookup_arena_auto)
         if self.maintenance is not None:
             self.session.attach_maintenance(self.maintenance, self.forest)
+        if self.maintenance is not None and snapshot_dir is not None \
+                and snapshot_every > 0:
+            from ..core.snapshot import SnapshotWriter
+            from .faultinject import fault_point
+            self.session.configure_snapshots(SnapshotWriter(
+                snapshot_dir, every=snapshot_every, keep_last=snapshot_keep,
+                fault_hook=fault_point))
+
+    def _load_snapshot(self):
+        """Latest snapshot under ``snapshot_dir`` if it matches this
+        pipeline's deployment layout (flat vs sharded, shard count ==
+        mesh axis size); ``None`` — fresh build — otherwise, including
+        on a corrupt snapshot (crash recovery must never crash)."""
+        from ..core import ShardedBank
+        from ..core.snapshot import latest_snapshot, restore_snapshot
+        try:
+            if latest_snapshot(self.snapshot_dir) is None:
+                return None
+            snap = restore_snapshot(self.snapshot_dir)
+        except Exception:
+            return None
+        sharded = isinstance(snap.bank, ShardedBank)
+        if sharded != (self._mesh is not None):
+            return None
+        if sharded and snap.bank.num_shards != int(
+                self._mesh.shape[self._mesh_axis]):
+            return None
+        if not snap.state_leaves or not snap.row_alive:
+            return None
+        return snap
 
     # device state + restage lifecycle live on the session; keep the
     # historical attribute names as views so callers (and tests) that

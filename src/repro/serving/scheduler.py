@@ -56,14 +56,20 @@ def bucket_shapes(min_bucket: int = 16, max_batch: int = 256) -> List[int]:
 class PendingRetrieval:
     """One enqueued retrieval request: a (tree_ids, hashes) query group
     whose per-request slice resolves through ``future`` once the batch
-    it rode in completes."""
+    it rode in completes.  ``deadline_t`` is the absolute clock time
+    after which the request must fail fast with ``DeadlineExceeded``
+    instead of occupying a batch slot (``None`` = no deadline)."""
     tree_ids: Sequence[int]
     hashes: Sequence[int]
     arrive_t: float
     future: Future = dataclasses.field(default_factory=Future)
+    deadline_t: Optional[float] = None
 
     def __len__(self) -> int:
         return len(self.hashes)
+
+    def expired(self, now: float) -> bool:
+        return self.deadline_t is not None and now >= self.deadline_t
 
 
 class MicroBatcher:
@@ -97,6 +103,18 @@ class MicroBatcher:
         self._queue.append(req)
         self._pending_queries += len(req)
 
+    def expire(self, now: float) -> List[PendingRetrieval]:
+        """Remove and return every queued request whose deadline has
+        passed — the coalesce-time half of deadline enforcement.  The
+        caller (which owns the engine lock) fails the returned requests'
+        futures with ``DeadlineExceeded``; they never occupy a batch
+        slot.  Pure policy, like everything else here."""
+        expired = [r for r in self._queue if r.expired(now)]
+        if expired:
+            self._queue = [r for r in self._queue if not r.expired(now)]
+            self._pending_queries -= sum(len(r) for r in expired)
+        return expired
+
     def ready(self, now: float) -> bool:
         """Launch condition: bucket-full, or the head request's wait hit
         the latency budget."""
@@ -107,12 +125,19 @@ class MicroBatcher:
         return (now - self._queue[0].arrive_t) >= self.latency_budget
 
     def deadline(self) -> Optional[float]:
-        """Absolute time at which :meth:`ready` flips true by budget
-        expiry alone; ``None`` when the queue is empty.  The scheduler
-        thread sleeps until ``deadline() - now`` (or an arrival)."""
+        """Absolute time at which the scheduler must next act: budget
+        expiry of the head request, or the earliest request deadline
+        (so an expiring request fails fast instead of waiting out the
+        batching budget); ``None`` when the queue is empty.  The
+        scheduler thread sleeps until ``deadline() - now`` (or an
+        arrival)."""
         if not self._queue:
             return None
-        return self._queue[0].arrive_t + self.latency_budget
+        t = self._queue[0].arrive_t + self.latency_budget
+        for r in self._queue:
+            if r.deadline_t is not None and r.deadline_t < t:
+                t = r.deadline_t
+        return t
 
     def pop(self) -> List[PendingRetrieval]:
         """Dequeue the longest FIFO prefix whose total query count fits

@@ -1,0 +1,414 @@
+"""Fault-tolerant serving: deterministic fault injection, admission
+control, deadlines, maintenance quarantine/rollback/recovery, the
+circuit breaker, and shutdown drain semantics.
+
+Everything here is clock-free (fake clocks passed explicitly) and uses
+the :class:`FaultPlan` harness — "the second prepare raises", never
+"some prepare eventually raises" — so the chaos suite is exactly
+reproducible.  The module is marked ``chaos`` and runs in the slow CI
+job next to the distribution tier.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CFTDeviceState, MaintenanceBreaker,
+                        MaintenanceEngine, build_bank, build_forest)
+from repro.core import hashing
+from repro.obs import get_registry
+from repro.serving import (AsyncServeEngine, DeadlineExceeded, EngineClosed,
+                           EngineOverloaded, FAULT_SITES, FaultPlan,
+                           InjectedFault, PendingRetrieval, RetrievalSession,
+                           active_plan, fault_point, inject)
+
+pytestmark = pytest.mark.chaos
+
+
+def _forest(num_trees=4, entities_per_tree=10):
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def _session(maint=True, forest=None, breaker=None):
+    forest = forest or _forest()
+    bank = build_bank(forest)
+    session = RetrievalSession()
+    session.attach(CFTDeviceState.from_bank(bank, forest))
+    if maint:
+        session.attach_maintenance(MaintenanceEngine(bank), forest,
+                                   breaker=breaker)
+    return forest, bank, session
+
+
+def _queries(forest, bank, n):
+    hashes = hashing.hash_entities(forest.entity_names)
+    reqs = []
+    for i in range(n):
+        k = 1 + (i % 3)
+        rows = [(i * 7 + j) % len(bank.row_entity) for j in range(k)]
+        reqs.append(([int(bank.row_tree[r]) for r in rows],
+                     [int(hashes[bank.row_entity[r]]) for r in rows]))
+    return reqs
+
+
+def _engine(session, now, **kw):
+    kw.setdefault("latency_budget", 0.5)
+    kw.setdefault("max_batch", 32)
+    kw.setdefault("min_bucket", 4)
+    kw.setdefault("maintenance", "inline")
+    return AsyncServeEngine(session, clock=lambda: now[0], **kw)
+
+
+def _state_equal(state, bank, forest):
+    want = CFTDeviceState.from_bank(bank, forest)
+    for n in ("fingerprints", "temperature", "heads", "bucket_offsets",
+              "tree_nb", "csr_offsets", "csr_nodes"):
+        got = np.asarray(getattr(state, n))
+        exp = np.asarray(getattr(want, n))
+        if not (got.shape == exp.shape and np.array_equal(got, exp)):
+            return False
+    return True
+
+
+# ---------------------------------------------------------- fault harness
+
+def test_fault_plan_fires_exact_ordinals():
+    plan = FaultPlan({"prepare": 2, "commit": [1]})     # int = first-n
+    fired = []
+    for site in ("prepare", "prepare", "prepare", "commit", "commit"):
+        try:
+            plan.fire(site)
+        except InjectedFault as e:
+            fired.append((e.site, e.ordinal))
+    assert fired == [("prepare", 0), ("prepare", 1), ("commit", 1)]
+    assert plan.calls("prepare") == 3 and plan.calls("commit") == 2
+    assert plan.hits() == 3 and plan.hits("commit") == 1
+    assert plan.history == fired
+    assert isinstance(InjectedFault("x", 0), RuntimeError)
+
+
+def test_fault_point_is_noop_without_plan_and_nests():
+    assert active_plan() is None
+    for site in FAULT_SITES:
+        fault_point(site)                                # must not raise
+    outer, inner = FaultPlan({}), FaultPlan({"dispatch": [0]})
+    with inject(outer):
+        assert active_plan() is outer
+        fault_point("dispatch")                          # outer arms nothing
+        with inject(inner):
+            with pytest.raises(InjectedFault):
+                fault_point("dispatch")
+        assert active_plan() is outer                    # restored
+    assert active_plan() is None
+    assert outer.calls("dispatch") == 1
+
+
+def test_injected_faults_counted_by_site():
+    reg = get_registry()
+    c = reg.counter("faults.injected")
+    before = c.value(site="prepare")
+    with inject(FaultPlan({"prepare": [0]})):
+        with pytest.raises(InjectedFault):
+            fault_point("prepare")
+    assert c.value(site="prepare") == before + 1
+
+
+# ------------------------------------------------------- admission control
+
+def test_overload_rejects_whole_submit():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off", max_queue_requests=2)
+    reqs = _queries(forest, bank, 3)
+    eng.submit(*reqs[0])
+    eng.submit(*reqs[1])
+    before = len(eng.batcher)
+    with pytest.raises(EngineOverloaded) as ei:
+        eng.submit(*reqs[2])
+    assert ei.value.pending == 2 and ei.value.limit == 2
+    assert isinstance(ei.value, RuntimeError)
+    assert len(eng.batcher) == before                 # nothing half-admitted
+    # draining the queue re-opens admission
+    now[0] = 1.0
+    eng.flush()
+    f = eng.submit(*reqs[2])
+    eng.flush(now[0])
+    assert f.result().hit.shape[0] == len(reqs[2][1])
+    assert get_registry().counter("serve.rejected").value(
+        reason="overload") >= 1
+
+
+def test_overload_all_or_nothing_for_chunked_submit():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off", max_batch=8,
+                  max_queue_requests=3)
+    # 20 queries chunk into 3 requests of <= 8; admitting them fills the
+    # queue exactly
+    t, h = ([0] * 20, [0] * 20)
+    eng.submit(t, h)
+    assert len(eng.batcher) == 3
+    with pytest.raises(EngineOverloaded):
+        eng.submit([0], [0])
+    eng.flush(now[0])
+
+
+# ----------------------------------------------------------- deadlines
+
+def test_deadline_expires_in_queue():
+    forest, bank, session = _session(maint=False)
+    now = [10.0]
+    eng = _engine(session, now, maintenance="off")
+    t, h = _queries(forest, bank, 1)[0]
+    f_dead = eng.submit(t, h, timeout=1.0)
+    f_live = eng.submit(t, h)
+    now[0] = 12.0                        # past the deadline, past budget
+    eng.pump(now[0])
+    with pytest.raises(DeadlineExceeded) as ei:
+        f_dead.result(timeout=5)
+    assert ei.value.deadline_t == 11.0 and ei.value.now >= 12.0
+    r = f_live.result(timeout=5)         # the live request still served
+    assert r.hit.shape[0] == len(h)
+    assert get_registry().counter("serve.rejected").value(
+        reason="deadline") >= 1
+
+
+def test_deadline_enforced_at_dispatch():
+    """The launch-time recheck: a request that expires between the queue
+    sweep and the launch is failed, the rest of the batch serves."""
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off")
+    t, h = _queries(forest, bank, 1)[0]
+    live = PendingRetrieval(tree_ids=t, hashes=h, arrive_t=0.0)
+    dead = PendingRetrieval(tree_ids=t, hashes=h, arrive_t=0.0,
+                            deadline_t=0.5)
+    assert eng._launch([live, dead], now=1.0) is True
+    with pytest.raises(DeadlineExceeded):
+        dead.future.result(timeout=5)
+    assert live.future.result(timeout=5).hit.shape[0] == len(h)
+    # a batch left with no live request launches nothing
+    dead2 = PendingRetrieval(tree_ids=t, hashes=h, arrive_t=0.0,
+                             deadline_t=0.5)
+    assert eng._launch([dead2], now=1.0) is False
+    with pytest.raises(DeadlineExceeded):
+        dead2.future.result(timeout=5)
+
+
+def test_default_timeout_applies_to_every_submit():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off", default_timeout=0.25)
+    t, h = _queries(forest, bank, 1)[0]
+    f = eng.submit(t, h)
+    now[0] = 1.0
+    eng.pump(now[0])
+    with pytest.raises(DeadlineExceeded):
+        f.result(timeout=5)
+
+
+# ------------------------------------------------------------- shutdown
+
+def test_stop_drains_then_submit_raises_engine_closed():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off")
+    futs = [eng.submit(t, h) for t, h in _queries(forest, bank, 5)]
+    eng.stop()
+    for f in futs:                       # drain served everything queued
+        assert f.done() and f.exception() is None
+    with pytest.raises(EngineClosed):
+        eng.submit([0], [0])
+    assert get_registry().counter("serve.rejected").value(
+        reason="closed") >= 1
+
+
+def test_stop_fails_unlaunchable_pending_with_engine_closed(monkeypatch):
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off")
+    futs = [eng.submit(t, h) for t, h in _queries(forest, bank, 3)]
+    monkeypatch.setattr(eng, "flush", lambda *a, **k: 0)  # device is gone
+    eng.close()                          # close() is the stop() alias
+    for f in futs:
+        assert f.done()
+        with pytest.raises(EngineClosed):
+            f.result()
+
+
+def test_stop_with_dispatch_faults_still_resolves_everything():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off")
+    futs = [eng.submit(t, h) for t, h in _queries(forest, bank, 4)]
+    with inject(FaultPlan({"dispatch": 100})):
+        eng.stop()
+    for f in futs:
+        assert f.done()
+        with pytest.raises(InjectedFault):
+            f.result()
+
+
+# -------------------------------------------------------- oversized split
+
+def test_oversized_submit_splits_and_concatenates():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off", max_batch=16)
+    reqs = _queries(forest, bank, 40)
+    tids = [t for ts, _ in reqs for t in ts]
+    hs = [h for _, hss in reqs for h in hss]
+    assert len(hs) > 16
+    f = eng.submit(tids, hs)
+    eng.flush(now[0])
+    got = f.result(timeout=5)
+    want = session.retrieve(tids, hs)
+    assert got.hit.shape[0] == len(hs)
+    np.testing.assert_array_equal(got.hit, np.asarray(want.hit))
+    np.testing.assert_array_equal(got.locations, np.asarray(want.locations))
+    np.testing.assert_array_equal(got.up, np.asarray(want.up))
+    np.testing.assert_array_equal(got.down, np.asarray(want.down))
+
+
+def test_oversized_chunk_failure_fails_the_aggregate():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off", max_batch=4)
+    f = eng.submit([0] * 10, [0] * 10)          # 3 chunks
+    with inject(FaultPlan({"dispatch": [1]})):
+        eng.flush(now[0])
+    assert f.done()
+    with pytest.raises(InjectedFault):
+        f.result()
+
+
+# --------------------------------------------- maintenance fault domain
+
+def test_prepare_fault_quarantines_then_full_restage_recovers():
+    forest, bank, session = _session()
+    coord = session.coord
+    session.maint.queue_insert(0, "quarantined", [1])
+    with inject(FaultPlan({"prepare": [0]})) as plan:
+        with pytest.raises(InjectedFault):
+            session.prepare_maintenance()
+    assert plan.hits("prepare") == 1
+    assert coord.dirty and coord.pending is None
+    assert isinstance(coord.last_error, InjectedFault)
+    # the fault fired before the maintain pass: bank and serving state
+    # both still carry the pre-mutation content
+    assert _state_equal(session.state, bank, forest)
+    assert session.harvest() == 0                   # absorbs blocked
+    # recovery without the plan: prepare stages a FULL plan (shadow was
+    # invalidated), commit applies, and the state matches a fresh stage
+    report = session.prepare_maintenance()
+    assert report is not None
+    assert coord.pending is not None and coord.pending.kind == "full"
+    assert session.commit_maintenance()
+    assert not coord.dirty
+    assert coord.breaker.state == MaintenanceBreaker.CLOSED
+    assert _state_equal(session.state, bank, forest)
+    assert bank.lookup(0, int(hashing.hash_entities(["quarantined"])[0]))[0]
+
+
+def test_commit_fault_rolls_back_to_served_state():
+    forest, bank, session = _session()
+    before = np.asarray(session.state.fingerprints).copy()
+    session.maint.queue_insert(0, "late arrival", [1])
+    session.prepare_maintenance()
+    with inject(FaultPlan({"commit": [0]})):
+        with pytest.raises(InjectedFault):
+            session.commit_maintenance()
+    # rollback: the session still serves the pre-commit state even
+    # though the bank already advanced past it
+    np.testing.assert_array_equal(np.asarray(session.state.fingerprints),
+                                  before)
+    assert session.coord.dirty
+    session.prepare_maintenance()
+    assert session.commit_maintenance()
+    assert _state_equal(session.state, bank, forest)
+
+
+def test_breaker_lifecycle_and_gauge():
+    b = MaintenanceBreaker(threshold=2, cooldown=10.0, backoff=1.0)
+    g = get_registry().gauge("maint.breaker_state")
+    assert b.state == MaintenanceBreaker.CLOSED and b.allow(0.0)
+    b.record_failure(0.0, "prepare")
+    assert b.state == MaintenanceBreaker.CLOSED
+    assert not b.allow(0.5) and b.allow(1.5)        # exponential backoff
+    b.record_failure(2.0, "prepare")
+    assert b.state == MaintenanceBreaker.OPEN and g.value() == 2
+    assert not b.allow(11.0)                        # cooldown from t=2
+    assert b.allow(12.5)                            # -> half-open probe
+    assert b.state == MaintenanceBreaker.HALF_OPEN and g.value() == 1
+    b.record_failure(13.0, "commit")                # probe failed
+    assert b.state == MaintenanceBreaker.OPEN
+    assert b.allow(23.5)
+    b.record_success()
+    assert b.state == MaintenanceBreaker.CLOSED and g.value() == 0
+    assert get_registry().counter("maint.failures").value(
+        phase="prepare") >= 2
+
+
+def test_breaker_degrades_engine_to_serve_only_then_recovers():
+    breaker = MaintenanceBreaker(threshold=1, cooldown=5.0, backoff=0.1)
+    forest, bank, session = _session(breaker=breaker)
+    now = [0.0]
+    eng = _engine(session, now, commit_every=1)
+    reqs = _queries(forest, bank, 6)
+    session.maint.queue_insert(0, "blocked by breaker", [1])
+    with inject(FaultPlan({"prepare": 100})):       # every prepare raises
+        for i, (t, h) in enumerate(reqs[:3]):
+            f = eng.submit(t, h)
+            now[0] += 1.0
+            eng.pump(now[0])
+            assert f.result(timeout=5).hit.shape[0] == len(h)
+    # one failure tripped the breaker: serve-only mode
+    assert breaker.state == MaintenanceBreaker.OPEN
+    assert session.coord.degraded
+    assert isinstance(eng.last_maintenance_error, InjectedFault)
+    # while open, pump never attempts maintenance (no plan active, so an
+    # attempt would succeed and close the breaker — assert it stays open)
+    f = eng.submit(*reqs[3])
+    now[0] += 1.0
+    eng.pump(now[0])
+    f.result(timeout=5)
+    assert breaker.state == MaintenanceBreaker.OPEN
+    # past the cooldown the half-open probe succeeds and recovery lands
+    now[0] += 10.0
+    for t, h in reqs[4:]:
+        f = eng.submit(t, h)
+        now[0] += 1.0
+        eng.pump(now[0])
+        f.result(timeout=5)
+    assert breaker.state == MaintenanceBreaker.CLOSED
+    assert not session.coord.dirty
+    assert _state_equal(session.state, bank, forest)
+    eng.stop()
+
+
+def test_dispatch_fault_fails_one_batch_not_the_engine():
+    forest, bank, session = _session(maint=False)
+    now = [0.0]
+    eng = _engine(session, now, maintenance="off")
+    reqs = _queries(forest, bank, 3)
+    c_fail = get_registry().counter("serve.batch_failures")
+    before = c_fail.value()
+    results = []
+    with inject(FaultPlan({"dispatch": [1]})) as plan:
+        for t, h in reqs:
+            f = eng.submit(t, h)
+            now[0] += 1.0
+            eng.pump(now[0])
+            results.append(f)
+    assert plan.hits("dispatch") == 1
+    assert results[0].result(timeout=5).hit.shape[0] == len(reqs[0][1])
+    with pytest.raises(InjectedFault):
+        results[1].result(timeout=5)
+    r2 = results[2].result(timeout=5)               # engine kept serving
+    assert r2.hit.shape[0] == len(reqs[2][1])
+    assert c_fail.value() == before + 1
+    # outputs after the fault match an untouched reference session
+    _, _, ref = _session(maint=False, forest=forest)
+    want = ref.retrieve(*reqs[2])
+    np.testing.assert_array_equal(r2.hit, np.asarray(want.hit))
+    np.testing.assert_array_equal(r2.locations, np.asarray(want.locations))

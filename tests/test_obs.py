@@ -167,6 +167,51 @@ def test_tracer_spans_aggregate_into_histograms():
     assert json.dumps(spans)                   # ring entries are JSON
 
 
+def test_span_exception_path_records_stage_and_propagates():
+    """A raise inside a staged span (the dispatch-fault path) must not
+    swallow the exception — and the stage/span histograms still record,
+    so fault-window latencies show up in the same telemetry as healthy
+    ones."""
+    r = MetricsRegistry()
+    t = Tracer(r)
+    with pytest.raises(KeyError):
+        with t.span("serve.batch", bucket=8) as sp:
+            with sp.stage("dispatch"):
+                raise KeyError("boom")
+    assert r.histogram("trace.serve.batch").summary()["count"] == 1
+    assert r.histogram("trace.serve.batch.dispatch").summary()["count"] == 1
+    spans = t.recent()
+    assert len(spans) == 1
+    assert [s["stage"] for s in spans[0]["stages"]] == ["dispatch"]
+    # an explicit error attribute (what _launch sets) rides the ring
+    with pytest.raises(ValueError):
+        with t.span("serve.batch") as sp:
+            try:
+                raise ValueError("boom")
+            except ValueError as exc:
+                sp.set(error=type(exc).__name__)
+                raise
+    assert t.recent()[-1]["attrs"] == {"error": "ValueError"}
+
+
+def test_disabled_registry_exception_path_stays_silent():
+    """With metrics off, the error path must cost nothing and record
+    nothing — while still re-raising."""
+    r = MetricsRegistry(enabled=False)
+    t = Tracer(r)
+    c = r.counter("t.err")
+    with pytest.raises(ValueError):
+        with t.span("serve.batch") as sp:
+            with sp.stage("dispatch"):
+                c.inc(reason="x")              # the error-path counter
+                raise ValueError("boom")
+    assert t.recent() == []
+    assert c.value(reason="x") == 0
+    snap = r.snapshot()
+    assert snap["counters"] == {} and "trace.serve.batch" \
+        not in snap["histograms"]
+
+
 # --------------------------------------------------------------- sentinel
 
 def test_sentinel_watch_check_rebaseline_and_arm():

@@ -1,0 +1,250 @@
+"""Bank/state snapshots: atomic write discipline, bit-identical
+restore (tombstones included), elastic merge, commit-driven cadence,
+and the RAGPipeline restore-at-startup path."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (CFTDeviceState, MaintenanceEngine,
+                        ShardedMaintenanceEngine, SnapshotWriter,
+                        apply_maint_bookkeeping, build_bank, build_forest,
+                        cleanup_snapshots, latest_snapshot, list_snapshots,
+                        merge_sharded_bank, restore_snapshot, restore_state,
+                        save_snapshot, stage_sharded_bank)
+from repro.core import hashing
+from repro.core.snapshot import _bank_array_fields
+from repro.serving import FaultPlan, InjectedFault, fault_point, inject
+
+
+def _forest(num_trees=4, entities_per_tree=10):
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def _churned_bank(forest):
+    """A bank whose maintenance history left tombstones behind (deletes
+    stay below the compaction threshold, so dead rows persist)."""
+    bank = build_bank(forest)
+    maint = MaintenanceEngine(bank)
+    for t in range(2):
+        maint.queue_insert(t, f"snap extra {t}", [1])
+        maint.queue_delete(t, f"entity {t}_3")
+    maint.maintain()
+    assert not bool(maint.row_alive.all()), "expected tombstoned rows"
+    return bank, maint
+
+
+def _banks_equal(a, b) -> bool:
+    return (a.num_trees == b.num_trees and a.slots == b.slots
+            and all(np.array_equal(np.asarray(getattr(a, n)),
+                                   np.asarray(getattr(b, n)))
+                    for n in _bank_array_fields()))
+
+
+def _leaves_equal(a, b) -> bool:
+    names = [f.name for f in dataclasses.fields(CFTDeviceState)]
+    return all(np.array_equal(np.asarray(jax.device_get(getattr(a, n))),
+                              np.asarray(jax.device_get(getattr(b, n))))
+               for n in names)
+
+
+def test_replicated_roundtrip_bit_exact(tmp_path):
+    forest = _forest()
+    bank, maint = _churned_bank(forest)
+    state = CFTDeviceState.from_bank(bank, forest)
+    path = save_snapshot(str(tmp_path), 7, bank, state=state, maint=maint)
+    assert os.path.isdir(path) and list_snapshots(str(tmp_path)) == [7]
+
+    snap = restore_snapshot(str(tmp_path))
+    assert snap.step == 7
+    assert _banks_equal(snap.bank, bank)
+    assert snap.bank.build_stats == bank.build_stats
+    np.testing.assert_array_equal(snap.row_alive[0], maint.row_alive)
+    np.testing.assert_array_equal(snap.row_hash[0], maint.row_hash)
+    assert _leaves_equal(restore_state(snap), state)
+
+    # a fresh engine over the restored bank resurrects the tombstones —
+    # the saved bookkeeping is what keeps them dead
+    m2 = MaintenanceEngine(snap.bank)
+    assert bool(m2.row_alive.all())
+    apply_maint_bookkeeping(m2, snap)
+    np.testing.assert_array_equal(m2.row_alive, maint.row_alive)
+    np.testing.assert_array_equal(m2.row_hash, maint.row_hash)
+
+
+def test_bookkeeping_count_mismatch_rejected(tmp_path):
+    forest = _forest()
+    bank, maint = _churned_bank(forest)
+    save_snapshot(str(tmp_path), 1, bank, maint=maint)
+    snap = restore_snapshot(str(tmp_path))
+    with pytest.raises(ValueError):
+        apply_maint_bookkeeping(
+            ShardedMaintenanceEngine(bank.shard(2)), snap)
+    with pytest.raises(ValueError):
+        restore_state(snap)          # bank-only snapshot carries no state
+
+
+def test_write_fault_leaves_snapshot_set_intact(tmp_path):
+    forest = _forest()
+    bank, maint = _churned_bank(forest)
+    save_snapshot(str(tmp_path), 1, bank, maint=maint)
+    with inject(FaultPlan({"snapshot-write": [0]})):
+        with pytest.raises(InjectedFault):
+            save_snapshot(str(tmp_path), 2, bank, maint=maint,
+                          fault_hook=fault_point)
+    # the crash window is after the leaves, before the rename: the
+    # previous snapshot is untouched and no half-written one is visible
+    assert latest_snapshot(str(tmp_path)) == 1
+    snap = restore_snapshot(str(tmp_path))
+    assert _banks_equal(snap.bank, bank)
+    # the aborted tmp dir (removed on raise, swept by cleanup if a hard
+    # crash left it) never shadows a real snapshot
+    cleanup_snapshots(str(tmp_path), keep_last=3)
+    assert not [d for d in os.listdir(str(tmp_path))
+                if d.startswith("tmp.")]
+    save_snapshot(str(tmp_path), 2, bank, maint=maint,
+                  fault_hook=fault_point)          # no plan: lands
+    assert list_snapshots(str(tmp_path)) == [1, 2]
+    cleanup_snapshots(str(tmp_path), keep_last=1)
+    assert list_snapshots(str(tmp_path)) == [2]
+
+
+def test_writer_cadence_and_failure_swallowing(tmp_path):
+    forest = _forest()
+    bank, maint = _churned_bank(forest)
+    state = CFTDeviceState.from_bank(bank, forest)
+    w = SnapshotWriter(str(tmp_path), every=2, keep_last=2,
+                       fault_hook=fault_point)
+    assert w.note_commit(state, maint) is None         # commit 1: off-cadence
+    assert w.note_commit(state, maint) is not None     # commit 2: saved
+    assert w.saved == 1 and w.last_error is None
+    with inject(FaultPlan({"snapshot-write": [0]})):
+        assert w.note_commit(state, maint) is None     # commit 3: off-cadence
+        assert w.note_commit(state, maint) is None     # commit 4: crashes
+    assert w.saved == 1 and isinstance(w.last_error, InjectedFault)
+    assert latest_snapshot(str(tmp_path)) == 2         # set intact
+    w.note_commit(state, maint)
+    assert w.note_commit(state, maint) is not None     # commit 6: lands
+    assert w.saved == 2 and list_snapshots(str(tmp_path)) == [2, 6]
+    with pytest.raises(ValueError):
+        SnapshotWriter(str(tmp_path), every=0)
+
+
+def test_merge_sharded_bank_is_content_equivalent():
+    forest = _forest(num_trees=6, entities_per_tree=12)
+    bank, _ = _churned_bank(forest)
+    merged = merge_sharded_bank(bank.shard(3))
+    # shard() drops tombstones and renumbers rows, so compare what the
+    # ids point at, not the ids: hit/entity and the CSR node content
+    names = list(forest.entity_names) + ["snap extra 0", "snap extra 1"]
+    hs = hashing.hash_entities(names)
+    checked = 0
+    for name, h in zip(names, hs):
+        for t in range(bank.num_trees):
+            hit_a, row_a, ent_a = bank.lookup(t, int(h))
+            hit_b, row_b, ent_b = merged.lookup(t, int(h))
+            assert (hit_a, ent_a) == (hit_b, ent_b), (name, t)
+            if hit_a:
+                nodes_a = sorted(bank.csr_nodes[
+                    bank.csr_offsets[row_a]:bank.csr_offsets[row_a + 1]])
+                nodes_b = sorted(merged.csr_nodes[
+                    merged.csr_offsets[row_b]:merged.csr_offsets[row_b + 1]])
+                assert nodes_a == nodes_b, (name, t)
+                checked += 1
+    assert checked > 0
+
+
+def test_sharded_snapshot_roundtrip_on_matching_mesh(tmp_path):
+    forest = _forest()
+    bank = build_bank(forest).shard(1)
+    maint = ShardedMaintenanceEngine(bank)
+    mesh = jax.make_mesh((1,), ("model",))
+    state = stage_sharded_bank(bank, forest, mesh, "model")
+    save_snapshot(str(tmp_path), 3, bank, state=state, maint=maint)
+    snap = restore_snapshot(str(tmp_path))
+    assert snap.meta["kind"] == "sharded"
+    assert snap.state_meta == {"layout": "sharded", "axis": "model",
+                               "num_shards": 1}
+    assert len(snap.row_alive) == 1
+    with pytest.raises(ValueError):
+        restore_state(snap)                        # sharded needs a mesh
+    restored = restore_state(snap, mesh=mesh, axis="model")
+    for n in ("fingerprints", "temperature", "heads", "tree_nb",
+              "csr_offsets", "csr_nodes"):
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(getattr(restored, n))),
+            np.asarray(jax.device_get(getattr(state, n))))
+
+
+def test_pipeline_snapshots_on_commit_and_restores_at_startup(tmp_path):
+    from repro.data import hospital_corpus
+    from repro.serving import RAGPipeline
+    corpus = hospital_corpus(num_trees=6, num_queries=2)
+    snap_dir = str(tmp_path / "snaps")
+    p1 = RAGPipeline(corpus, None, use_bank=True, snapshot_dir=snap_dir)
+    assert p1.restored_step is None
+    node = int(p1.bank.csr_nodes[0])
+    p1.insert_entity(0, "snapshot probe", [node])
+    p1.maintain()                       # applied commit -> snapshot lands
+    assert latest_snapshot(snap_dir) is not None
+    q = corpus.queries[0]
+
+    p2 = RAGPipeline(corpus, None, use_bank=True, snapshot_dir=snap_dir)
+    assert p2.restored_step is not None
+    # compare before any retrieval: a retrieve harvests temperature
+    # bumps into its own bank, diverging the copies (by design)
+    assert _banks_equal(p2.bank, p1.bank)
+    np.testing.assert_array_equal(p2.maintenance.row_alive,
+                                  p1.maintenance.row_alive)
+    want = p1.retrieve(q)
+    got = p2.retrieve(q)
+    assert got.context == want.context
+    # the pre-crash insert survived the round trip inside the bank
+    h = int(hashing.hash_entities(["snapshot probe"])[0])
+    assert p2.bank.lookup(0, h)[0]
+
+    # a corrupt latest snapshot falls back to a fresh build, not a crash
+    step = latest_snapshot(snap_dir)
+    with open(os.path.join(snap_dir, "snap_%08d" % step,
+                           "manifest.json"), "w") as f:
+        f.write("{ not json")
+    p3 = RAGPipeline(corpus, None, use_bank=True, snapshot_dir=snap_dir)
+    assert p3.restored_step is None
+    assert p3.retrieve(q).context is not None
+
+
+def test_pipeline_rejects_layout_mismatched_snapshot(tmp_path):
+    from repro.data import hospital_corpus
+    from repro.serving import RAGPipeline
+    corpus = hospital_corpus(num_trees=6, num_queries=2)
+    snap_dir = str(tmp_path / "snaps")
+    # a *sharded* snapshot under the dir: the flat pipeline must ignore
+    # it (layout mismatch) and build fresh
+    forest = build_forest(corpus.trees)
+    sbank = build_bank(forest).shard(2)
+    save_snapshot(snap_dir, 5, sbank,
+                  maint=ShardedMaintenanceEngine(sbank))
+    p = RAGPipeline(corpus, None, use_bank=True, snapshot_dir=snap_dir)
+    assert p.restored_step is None
+    assert p.retrieve(corpus.queries[0]).context is not None
+
+
+def test_snapshot_manifest_is_json_clean(tmp_path):
+    forest = _forest()
+    bank, maint = _churned_bank(forest)
+    path = save_snapshot(str(tmp_path), 11, bank, maint=maint,
+                         extra={"note": "probe"})
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["step"] == 11
+    assert manifest["meta"]["extra"] == {"note": "probe"}
+    names = {l["name"] for l in manifest["leaves"]}
+    assert "bank0/fingerprints" in names and "maint0/row_alive" in names
+    for leaf in manifest["leaves"]:
+        assert os.path.exists(os.path.join(path, leaf["file"]))
