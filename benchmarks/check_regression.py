@@ -39,6 +39,8 @@ GATED_METRICS: Dict[str, str] = {
     "pause_reduction": "down",    # bench_pause
     "p99_ratio": "down",          # bench_async
     "goodput_ratio": "down",      # bench_faults (faulted / fault-free)
+    "healthy_goodput_ratio": "down",   # bench_tenant (healthy / clean)
+    "victim_goodput_ratio": "down",    # bench_tenant (victim / clean)
     "bytes_fraction": "up",       # bench_ragged / bench_distributed
 }
 

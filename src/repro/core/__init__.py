@@ -1,7 +1,7 @@
 """CFT-RAG core: improved cuckoo filter + entity-tree retrieval."""
-from .bank import (FilterBank, ShardedBank, build_bank,
-                   build_bank_from_rows, estimate_fpr, plan_partition,
-                   splice_arena_rows, splice_arena_segment)
+from .bank import (ColdTenant, FilterBank, ShardedBank, TenantRegistry,
+                   build_bank, build_bank_from_rows, estimate_fpr,
+                   plan_partition, splice_arena_rows, splice_arena_segment)
 from .baselines import BloomTRAG, BloomTRAG2, NaiveTRAG
 from .blocklist import BlockListArena, BlockListBuilder, CSRArena, build_csr
 from .context import (EntityContext, context_from_arena, context_from_csr,
@@ -19,19 +19,21 @@ from .maintenance import (BankDelta, MaintenanceBreaker, MaintenanceEngine,
                           commit_restage, warm_restage)
 from .snapshot import (RestoredSnapshot, SnapshotWriter,
                        apply_maint_bookkeeping, cleanup_snapshots,
-                       latest_snapshot, list_snapshots, merge_sharded_bank,
-                       restore_snapshot, restore_state, save_snapshot)
+                       latest_snapshot, list_snapshots, list_tenants,
+                       load_tenant, merge_sharded_bank, restore_snapshot,
+                       restore_state, save_snapshot, save_tenant)
 from .trag import (CFTRAG, CFTDeviceState, DeviceRetrieval, build_retriever,
                    gather_context, retrieve_device)
-from .distributed import (ShardedBankState, routing_counts, shard_bank,
-                          sharded_apply_delta, sharded_lookup,
-                          sharded_lookup_bank, sharded_retrieve_device,
-                          sharded_splice_segment, shard_filter_tables,
-                          stage_sharded_bank)
+from .distributed import (ShardedBankState, plan_tenant_partition,
+                          routing_counts, shard_bank, sharded_apply_delta,
+                          sharded_lookup, sharded_lookup_bank,
+                          sharded_retrieve_device, sharded_splice_segment,
+                          shard_filter_tables, stage_sharded_bank)
 from .tree import EntityForest, build_forest
 
 __all__ = [
-    "FilterBank", "ShardedBank", "build_bank", "build_bank_from_rows",
+    "ColdTenant", "FilterBank", "ShardedBank", "TenantRegistry",
+    "build_bank", "build_bank_from_rows",
     "estimate_fpr", "plan_partition", "splice_arena_rows",
     "splice_arena_segment",
     "BankDelta", "MaintenanceBreaker", "MaintenanceEngine",
@@ -40,9 +42,10 @@ __all__ = [
     "commit_restage", "warm_restage",
     "RestoredSnapshot", "SnapshotWriter", "apply_maint_bookkeeping",
     "cleanup_snapshots", "latest_snapshot", "list_snapshots",
-    "merge_sharded_bank", "restore_snapshot", "restore_state",
-    "save_snapshot",
-    "ShardedBankState", "routing_counts", "shard_bank",
+    "list_tenants", "load_tenant", "merge_sharded_bank",
+    "restore_snapshot", "restore_state", "save_snapshot", "save_tenant",
+    "ShardedBankState", "plan_tenant_partition", "routing_counts",
+    "shard_bank",
     "sharded_apply_delta", "sharded_lookup", "sharded_lookup_bank",
     "sharded_retrieve_device", "sharded_splice_segment",
     "shard_filter_tables", "stage_sharded_bank", "gather_context",

@@ -293,6 +293,232 @@ class FilterBank:
             arr[...] = np.take_along_axis(arr, order, axis=1)
 
 
+# ---------------------------------------------------------------- tenants
+
+_ARENA_TABLES = ("fingerprints", "temperature", "heads", "entity_ids",
+                 "stored_hash")
+
+
+def _blank_tables(rows: int, slots: int) -> Dict[str, np.ndarray]:
+    """Empty arena-table segment (misses on every probe)."""
+    return dict(
+        fingerprints=np.full((rows, slots), hashing.EMPTY_FP, np.uint32),
+        temperature=np.zeros((rows, slots), np.int32),
+        heads=np.full((rows, slots), NULL, np.int32),
+        entity_ids=np.full((rows, slots), NULL, np.int32),
+        stored_hash=np.zeros((rows, slots), np.uint32))
+
+
+def _extract_tree_range(bank: FilterBank, lo: int, hi: int
+                        ) -> Dict[str, np.ndarray]:
+    """Copy of the arena-table rows owned by trees ``[lo, hi)``."""
+    alo, ahi = int(bank.bucket_offsets[lo]), int(bank.bucket_offsets[hi])
+    return {n: getattr(bank, n)[alo:ahi].copy() for n in _ARENA_TABLES}
+
+
+def _replace_tree_range(bank: FilterBank, lo: int, hi: int,
+                        tree_nb: np.ndarray, num_items: np.ndarray,
+                        tables: Dict[str, np.ndarray]) -> None:
+    """Replace trees ``[lo, hi)``'s arena segments and layout in place.
+
+    The same splice shape as ``MaintenanceEngine._restage_tree`` but over
+    a tree *range*: tables outside the range keep their bytes, CSR rows
+    are never renumbered (cold heads stay valid), ``bucket_offsets``
+    recomputes from the new per-tree counts."""
+    alo, ahi = int(bank.bucket_offsets[lo]), int(bank.bucket_offsets[hi])
+    for name in _ARENA_TABLES:
+        old = getattr(bank, name)
+        setattr(bank, name, np.concatenate([old[:alo], tables[name],
+                                            old[ahi:]]))
+    bank.tree_nb[lo:hi] = np.asarray(tree_nb, np.int32)
+    off = np.zeros(bank.num_trees + 1, np.int64)
+    np.cumsum(bank.tree_nb.astype(np.int64), out=off[1:])
+    bank.bucket_offsets = off
+    bank.num_items[lo:hi] = np.asarray(num_items, np.int32)
+
+
+@dataclasses.dataclass
+class ColdTenant:
+    """Host-resident copy of one evicted tenant's bank content.
+
+    ``tables`` hold the five arena tables of the tenant's tree range in
+    global tree order (for a sharded bank: shard-local head payloads,
+    concatenated across owning shards).  The CSR rows the heads reference
+    stay in the live bank — tombstone compaction is pinned off while any
+    tenant is cold — so a reload is a pure segment splice, bit-exact."""
+    name: str
+    lo: int                        # global tree range [lo, hi)
+    hi: int
+    tree_nb: np.ndarray            # (hi - lo,) int32
+    num_items: np.ndarray          # (hi - lo,) int32
+    tables: Dict[str, np.ndarray]  # five (sum(tree_nb), S) arena tables
+
+    @property
+    def arena_rows(self) -> int:
+        return int(self.tree_nb.sum())
+
+
+class TenantRegistry:
+    """Tenant → contiguous tree-range map over one bank — the thin layer
+    that generalizes the ragged arena (``bucket_offsets`` CSR) to a
+    multi-tenant forest.
+
+    Ranges must be disjoint; every fault-tolerance primitive upstream
+    (admission quotas, per-tenant breakers, cold eviction) keys on the
+    names registered here.  The registry owns the cold store: ``evict``
+    copies a tenant's arena segments to host and blanks them in the live
+    bank (its queries then miss — graceful degradation under arena
+    memory pressure), ``reload``/``onboard`` splice content back.  Works
+    identically over a replicated :class:`FilterBank` and a
+    :class:`ShardedBank` (per owning shard, local coordinates)."""
+
+    def __init__(self, ranges):
+        items = (list(ranges.items()) if isinstance(ranges, dict)
+                 else [(n, (lo, hi)) for n, lo, hi in ranges])
+        items.sort(key=lambda kv: kv[1][0])
+        prev = 0
+        for name, (lo, hi) in items:
+            if not 0 <= lo < hi:
+                raise ValueError(f"tenant {name!r}: bad range [{lo}, {hi})")
+            if lo < prev:
+                raise ValueError(f"tenant {name!r} range [{lo}, {hi}) "
+                                 "overlaps its predecessor")
+            prev = hi
+        self._ranges = {n: (int(lo), int(hi)) for n, (lo, hi) in items}
+        self._starts = np.asarray([lo for lo, _ in self._ranges.values()],
+                                  np.int64)
+        self._names = list(self._ranges)
+        self._cold: Dict[str, ColdTenant] = {}
+        self._offboarded: set = set()
+
+    # ------------------------------------------------------------- lookup
+    @property
+    def names(self) -> List[str]:
+        return list(self._names)
+
+    def trees(self, name: str) -> Tuple[int, int]:
+        return self._ranges[name]
+
+    def tenant_of(self, tree: int) -> Optional[str]:
+        """Owning tenant of a global tree id, or None for unowned trees."""
+        i = int(np.searchsorted(self._starts, int(tree), side="right")) - 1
+        if i < 0:
+            return None
+        name = self._names[i]
+        lo, hi = self._ranges[name]
+        return name if lo <= int(tree) < hi else None
+
+    def tenant_of_batch(self, tree_ids) -> Optional[str]:
+        """Single owning tenant of a query batch; raises on a batch that
+        straddles tenants (isolation would be unattributable)."""
+        owners = {self.tenant_of(int(t)) for t in np.asarray(
+            tree_ids, np.int64).ravel()}
+        if len(owners) > 1:
+            raise ValueError(f"batch spans tenants {sorted(map(str, owners))}")
+        return next(iter(owners)) if owners else None
+
+    # -------------------------------------------------------------- state
+    def resident(self, name: str) -> bool:
+        self.trees(name)               # raises on unknown tenant
+        return name not in self._cold and name not in self._offboarded
+
+    def cold(self, name: str) -> Optional[ColdTenant]:
+        return self._cold.get(name)
+
+    @property
+    def any_cold(self) -> bool:
+        return bool(self._cold)
+
+    # ------------------------------------------------------------ surgery
+    def _shard_pieces(self, bank, lo: int, hi: int):
+        """(sub-bank, local lo, local hi) per owning shard, tree order."""
+        if isinstance(bank, ShardedBank):
+            out = []
+            for d, b in enumerate(bank.banks):
+                slo = int(bank.tree_starts[d])
+                shi = int(bank.tree_starts[d + 1])
+                a, z = max(lo, slo), min(hi, shi)
+                if a < z:
+                    out.append((b, a - slo, z - slo))
+            return out
+        return [(bank, lo, hi)]
+
+    def evict(self, bank, name: str) -> ColdTenant:
+        """Copy ``name``'s tree-range content to host and blank it in the
+        live bank (each tree becomes an empty ``EMPTY_TREE_NB`` segment;
+        its queries miss, its CSR rows are untouched).  The caller
+        restages the device state and must pin compaction off while any
+        tenant is cold."""
+        if not self.resident(name):
+            raise ValueError(f"tenant {name!r} is not resident")
+        lo, hi = self.trees(name)
+        pieces = self._shard_pieces(bank, lo, hi)
+        tree_nb, num_items, tabs = [], [], []
+        for b, llo, lhi in pieces:
+            tree_nb.append(b.tree_nb[llo:lhi].copy())
+            num_items.append(b.num_items[llo:lhi].copy())
+            tabs.append(_extract_tree_range(b, llo, lhi))
+        cold = ColdTenant(
+            name=name, lo=lo, hi=hi,
+            tree_nb=np.concatenate(tree_nb),
+            num_items=np.concatenate(num_items),
+            tables={n: np.concatenate([t[n] for t in tabs])
+                    for n in _ARENA_TABLES})
+        for b, llo, lhi in pieces:
+            n = lhi - llo
+            _replace_tree_range(
+                b, llo, lhi,
+                np.full(n, EMPTY_TREE_NB, np.int32), np.zeros(n, np.int32),
+                _blank_tables(n * EMPTY_TREE_NB, b.slots))
+        self._cold[name] = cold
+        return cold
+
+    def reload(self, bank, name: str,
+               cold: Optional[ColdTenant] = None) -> None:
+        """Splice an evicted (or externally restored) tenant's content
+        back into its tree range — the exact inverse of :meth:`evict`."""
+        cold = cold if cold is not None else self._cold.get(name)
+        if cold is None:
+            raise ValueError(f"tenant {name!r} has no cold copy")
+        if (cold.lo, cold.hi) != self.trees(name):
+            raise ValueError(
+                f"cold copy of {name!r} covers trees [{cold.lo}, "
+                f"{cold.hi}) but the registry maps {self.trees(name)}")
+        row_off = np.zeros(cold.hi - cold.lo + 1, np.int64)
+        np.cumsum(cold.tree_nb.astype(np.int64), out=row_off[1:])
+        t0 = 0
+        for b, llo, lhi in self._shard_pieces(bank, cold.lo, cold.hi):
+            n = lhi - llo
+            a, z = int(row_off[t0]), int(row_off[t0 + n])
+            _replace_tree_range(
+                b, llo, lhi, cold.tree_nb[t0:t0 + n],
+                cold.num_items[t0:t0 + n],
+                {k: v[a:z] for k, v in cold.tables.items()})
+            t0 += n
+        self._cold.pop(name, None)
+        self._offboarded.discard(name)
+
+    def offboard(self, bank, name: str) -> ColdTenant:
+        """Evict and drop residency permanently: the tree range stays
+        allocated (tree ids never shift under other tenants) but empty;
+        the returned cold copy is the caller's to snapshot or discard."""
+        cold = self.evict(bank, name)
+        del self._cold[name]
+        self._offboarded.add(name)
+        return cold
+
+    def onboard(self, bank, name: str, cold: ColdTenant) -> None:
+        """Bring a tenant live into its (currently empty) tree range from
+        a cold copy — e.g. one restored via ``core.snapshot``.  Only legal
+        while the tenant is offboarded (or was never made resident after
+        an offboard); a resident tenant must be evicted first."""
+        if self.resident(name):
+            raise ValueError(f"tenant {name!r} is already resident")
+        self._offboarded.add(name)      # reload() clears both flags
+        self._cold.pop(name, None)
+        self.reload(bank, name, cold)
+
+
 # --------------------------------------------------------------- sharding
 
 def plan_partition(weights: np.ndarray, num_shards: int) -> np.ndarray:

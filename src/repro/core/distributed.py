@@ -231,6 +231,30 @@ def shard_bank(bank: FilterBank, forest: EntityForest, mesh: Mesh,
     return sbank, stage_sharded_bank(sbank, forest, mesh, axis)
 
 
+def plan_tenant_partition(weights: np.ndarray, registry,
+                          num_shards: int) -> np.ndarray:
+    """Shard ``tree_starts`` balanced by per-tree weight but snapped to
+    the registry's tenant boundaries, so no tenant straddles two shards.
+
+    A straddling tenant would make its eviction/reload a cross-shard
+    transaction and its fault attribution ambiguous; with aligned
+    boundaries every tenant lifecycle op stays a per-shard segment
+    splice.  Needs at least ``num_shards`` boundary-delimited segments
+    (tenant ranges plus any unowned gaps)."""
+    from .bank import plan_partition
+    w = np.asarray(weights, np.float64).ravel()
+    cuts = {0, w.size}
+    for name in registry.names:
+        lo, hi = registry.trees(name)
+        cuts.update((int(lo), int(hi)))
+    bounds = np.asarray(sorted(cuts), np.int64)
+    if bounds[0] < 0 or bounds[-1] > w.size:
+        raise ValueError("tenant ranges exceed the tree count")
+    seg_w = np.add.reduceat(np.maximum(w, 1e-9), bounds[:-1])
+    seg_starts = plan_partition(seg_w, num_shards)
+    return bounds[seg_starts.astype(np.int64)].astype(np.int32)
+
+
 # ----------------------------------------------- incremental arena update
 #
 # The donated-buffer commit ops of the double-buffered restage

@@ -144,17 +144,25 @@ class MaintenanceBreaker:
     Time is always passed in (``now``) so a fake clock drives the state
     machine deterministically in tests.  Not locked — the coordinator
     already serializes the maintenance lifecycle under its own lock.
+
+    ``tenant`` scopes the breaker to one tenant's maintenance fault
+    domain: its state surfaces as ``tenant.breaker_state{tenant=}`` and
+    its failures label ``maint.failures{tenant=,phase=}``, so one noisy
+    tenant degrading to serve-only is attributable from the metrics
+    snapshot alone.
     """
 
     CLOSED, HALF_OPEN, OPEN = "closed", "half_open", "open"
     _GAUGE = {CLOSED: 0, HALF_OPEN: 1, OPEN: 2}
 
     def __init__(self, threshold: int = 3, cooldown: float = 5.0,
-                 backoff: float = 0.05, backoff_max: float = 2.0):
+                 backoff: float = 0.05, backoff_max: float = 2.0,
+                 tenant: Optional[str] = None):
         self.threshold = threshold
         self.cooldown = cooldown
         self.backoff = backoff
         self.backoff_max = backoff_max
+        self.tenant = tenant
         self.failures = 0                       # consecutive
         self.state = self.CLOSED
         self._last_failure_t: Optional[float] = None
@@ -162,10 +170,17 @@ class MaintenanceBreaker:
 
     def _set_state(self, state: str) -> None:
         self.state = state
-        get_registry().gauge(
-            "maint.breaker_state",
-            "maintenance breaker: 0 closed, 1 half-open, 2 open").set(
-                self._GAUGE[state])
+        if self.tenant is None:
+            get_registry().gauge(
+                "maint.breaker_state",
+                "maintenance breaker: 0 closed, 1 half-open, 2 open").set(
+                    self._GAUGE[state])
+        else:
+            get_registry().gauge(
+                "tenant.breaker_state",
+                "per-tenant maintenance breaker: 0 closed, 1 half-open, "
+                "2 open (serve-only)").set(self._GAUGE[state],
+                                           tenant=self.tenant)
 
     def retry_delay(self) -> float:
         """Current exponential-backoff delay (closed state, after k
@@ -192,11 +207,25 @@ class MaintenanceBreaker:
     def record_failure(self, now: float, phase: str) -> None:
         self.failures += 1
         self._last_failure_t = now
-        get_registry().counter(
+        c = get_registry().counter(
             "maint.failures",
-            "maintenance prepare/commit failures by phase").inc(phase=phase)
+            "maintenance prepare/commit failures by phase (and tenant, "
+            "when attributable)")
+        if self.tenant is None:
+            c.inc(phase=phase)
+        else:
+            c.inc(phase=phase, tenant=self.tenant)
         if self.state == self.HALF_OPEN or self.failures >= self.threshold:
             self._set_state(self.OPEN)
+
+    def spawn(self, tenant: str) -> "MaintenanceBreaker":
+        """A fresh breaker with this one's schedule, scoped to a tenant —
+        how the coordinator derives per-tenant fault domains from its
+        template breaker."""
+        return MaintenanceBreaker(
+            threshold=self.threshold, cooldown=self.cooldown,
+            backoff=self.backoff, backoff_max=self.backoff_max,
+            tenant=tenant)
 
     def record_success(self) -> None:
         self.failures = 0
@@ -345,6 +374,11 @@ class MaintenanceEngine:
         occ = bank.fingerprints != hashing.EMPTY_FP
         self.row_hash[bank.heads[occ]] = bank.stored_hash[occ]
         self._shadow: Optional[_Shadow] = None
+        # pinned trees (a cold tenant's range): their CSR rows are
+        # referenced from host-evicted tables, so mutations are rejected
+        # and compaction — which renumbers CSR rows — is disabled while
+        # any tree is pinned
+        self.pinned = np.zeros(bank.num_trees, dtype=bool)
 
     # ------------------------------------------------------------ plumbing
     def _tables(self):
@@ -370,7 +404,16 @@ class MaintenanceEngine:
         if not 0 <= tree < self.bank.num_trees:
             raise ValueError(f"tree {tree} out of range "
                              f"[0, {self.bank.num_trees})")
+        if self.pinned[tree]:
+            raise ValueError(f"tree {tree} is pinned (cold tenant): "
+                             "reload the tenant before mutating it")
         return tree
+
+    def pin_tree_range(self, lo: int, hi: int, pinned: bool = True) -> None:
+        """Pin (or unpin) trees ``[lo, hi)`` — a cold tenant's range.
+        Pinned trees reject queued mutations and keep compaction off
+        bank-wide (their evicted slots reference live CSR row ids)."""
+        self.pinned[lo:hi] = pinned
 
     def queue_insert(self, tree: int, key: Key, nodes: Sequence[int],
                      entity_id: int = NULL) -> None:
@@ -550,6 +593,9 @@ class MaintenanceEngine:
         temperatures are preserved; rows that are alive but currently
         homeless (a mid-insert remainder) are placed too.
         """
+        if self.pinned[tree]:
+            raise RuntimeError(f"restage of pinned tree {tree} (cold "
+                               "tenant): reload the tenant first")
         b = self.bank
         lo, hi = b.segment(tree)
         s = b.slots
@@ -599,6 +645,12 @@ class MaintenanceEngine:
         compact the CSR arena to live rows, re-place every live row
         (temperatures preserved), and adopt the new tables into the
         existing bank object so external references stay valid."""
+        if self.pinned.any():
+            # a cold tenant's evicted tables reference CSR rows by id and
+            # its rows are still marked alive here — a rebuild would both
+            # renumber the former and resurrect the latter
+            raise RuntimeError("bank rebuild while trees are pinned "
+                               "(cold tenant): reload tenants first")
         b = self.bank
         occ = b.fingerprints != hashing.EMPTY_FP
         temp_r = np.zeros(max(b.num_rows, 1), np.int32)
@@ -723,6 +775,8 @@ class MaintenanceEngine:
         return True
 
     def maybe_compact(self) -> bool:
+        if self.pinned.any():
+            return False               # cold tenants pin CSR numbering
         dead = self.num_dead_rows
         total = max(1, self.bank.num_rows)
         if dead >= self.compact_min_dead and \
@@ -954,6 +1008,16 @@ class ShardedMaintenanceEngine:
     def queue_delete(self, tree: int, key: Key) -> None:
         d, lt = self._owner(tree)
         self.engines[d].queue_delete(lt, key)
+
+    def pin_tree_range(self, lo: int, hi: int, pinned: bool = True) -> None:
+        """Pin (or unpin) global trees ``[lo, hi)`` in their owning
+        shards' engines (see :meth:`MaintenanceEngine.pin_tree_range`)."""
+        starts = self.sbank.tree_starts
+        for d, e in enumerate(self.engines):
+            a = max(lo, int(starts[d])) - int(starts[d])
+            z = min(hi, int(starts[d + 1])) - int(starts[d])
+            if a < z:
+                e.pin_tree_range(a, z, pinned)
 
     def insert(self, tree: int, key: Key, nodes: Sequence[int],
                entity_id: int = NULL) -> None:
@@ -1358,7 +1422,7 @@ class RestageCoordinator:
     """
 
     def __init__(self, engine, forest, breaker: Optional[
-            "MaintenanceBreaker"] = None, fault_hook=None):
+            "MaintenanceBreaker"] = None, fault_hook=None, registry=None):
         self.engine = engine            # Maintenance- or Sharded- engine
         self.forest = forest
         self.pending = None
@@ -1375,6 +1439,16 @@ class RestageCoordinator:
             MaintenanceBreaker()
         self._fault = fault_hook if fault_hook is not None \
             else (lambda site: None)
+        # registry: a core.bank.TenantRegistry makes the fault domain
+        # *per-tenant*: a failure whose cycle carried one tenant's
+        # mutations feeds that tenant's breaker (template: breaker.spawn)
+        # instead of the global one, and a blocked tenant's queued ops are
+        # held back — only that tenant degrades to serve-only while every
+        # other tenant keeps full maintenance service.
+        self.registry = registry
+        self.tenant_breakers: Dict[str, MaintenanceBreaker] = {}
+        self._fault_tenants: set = set()     # blamed by the last failure
+        self._pending_tenants: set = set()   # carried by the staged plan
         # dirty: a prepare/commit failed after the bank may have advanced
         # past the device content — the next successful prepare must stage
         # a (full) plan even if that cycle's maintain() reports no change,
@@ -1426,20 +1500,104 @@ class RestageCoordinator:
         breaker's backoff/cooldown schedule."""
         return self.breaker.allow(now)
 
+    # ------------------------------------- per-tenant fault domains
+    def tenant_breaker(self, name: str) -> "MaintenanceBreaker":
+        """The (lazily spawned) breaker scoping ``name``'s maintenance
+        fault domain.  Spawned from the global breaker's schedule; only
+        tenants a failure has ever been attributed to get one."""
+        b = self.tenant_breakers.get(name)
+        if b is None:
+            b = self.tenant_breakers[name] = self.breaker.spawn(name)
+        return b
+
+    @property
+    def degraded_tenants(self) -> List[str]:
+        """Tenants whose breaker is open — their mutations are held back
+        (serve-only for them) while every other tenant keeps full
+        service."""
+        return sorted(n for n, b in self.tenant_breakers.items()
+                      if b.state == MaintenanceBreaker.OPEN)
+
+    def _engine_views(self):
+        """``[(engine, global-tree base)]`` — one view per shard-local
+        engine, with the offset that maps its delta's tree ids back to
+        the registry's global numbering."""
+        eng = self.engine
+        if hasattr(eng, "engines"):            # ShardedMaintenanceEngine
+            starts = eng.sbank.tree_starts
+            return [(e, int(starts[d])) for d, e in enumerate(eng.engines)]
+        return [(eng, 0)]
+
+    def _hold_blocked(self, now: float):
+        """Partition the queued deltas by tenant breaker: ops of tenants
+        whose breaker disallows an attempt at ``now`` are pulled out of
+        the engines' deltas (re-queued after the cycle, see
+        ``_requeue``), so one tenant's quarantine never blocks the ops
+        this cycle *does* carry.  Returns ``(held, involved)`` — the
+        held-back ``(engine, BankDelta)`` pairs and the tenant names
+        whose ops remain in flight (the blame set if this cycle fails)."""
+        held: List[Tuple[object, BankDelta]] = []
+        involved: set = set()
+        if self.registry is None:
+            return held, involved
+        allowed: Dict[Optional[str], bool] = {None: True}
+        for e, base in self._engine_views():
+            if not e.delta:
+                continue
+            keep, hold = BankDelta(), BankDelta()
+            for kind in ("inserts", "deletes"):
+                for op in getattr(e.delta, kind):
+                    name = self.registry.tenant_of(op[0] + base)
+                    if name not in allowed:
+                        b = self.tenant_breakers.get(name)
+                        allowed[name] = b is None or b.allow(now)
+                    if allowed[name]:
+                        getattr(keep, kind).append(op)
+                        if name is not None:
+                            involved.add(name)
+                    else:
+                        getattr(hold, kind).append(op)
+            if hold:
+                e.delta = keep
+                held.append((e, hold))
+        return held, involved
+
+    @staticmethod
+    def _requeue(held) -> None:
+        """Put held-back ops at the front of the (possibly fresh) deltas
+        so a recovered tenant's mutations apply in their queued order
+        relative to anything queued while it was degraded."""
+        for e, hold in held:
+            e.delta.inserts[:0] = hold.inserts
+            e.delta.deletes[:0] = hold.deletes
+
     def _quarantine(self, phase: str, now: Optional[float],
-                    exc: BaseException) -> None:
+                    exc: BaseException, tenants=()) -> None:
         """A prepare/commit raised: drop the failed plan, invalidate the
         diff shadow (next successful prepare restages full, from the
         always-consistent host bank — the rollback target is whatever the
         device currently serves, which the failure never touched), mark
-        the lifecycle dirty, and feed the breaker."""
+        the lifecycle dirty, and feed the breaker.
+
+        ``tenants`` is the blame set — the tenants whose mutations were
+        in flight this cycle.  When non-empty (or when the last failure's
+        blame carries over through an op-less recovery cycle), *their*
+        breakers record the failure and the global breaker stays closed:
+        the fault domain is the tenant, not the engine."""
         self.pending = None
         self.plan_time = None
+        self._pending_tenants = set()
         self._dirty = True
         self.last_error = exc
         self.engine.invalidate_shadow()
-        self.breaker.record_failure(
-            time.monotonic() if now is None else now, phase)
+        t = time.monotonic() if now is None else now
+        blame = set(tenants) or self._fault_tenants
+        if blame:
+            self._fault_tenants = blame
+            for name in blame:
+                self.tenant_breaker(name).record_failure(t, phase)
+        else:
+            self.breaker.record_failure(t, phase)
 
     def absorb(self, state) -> int:
         """Best-effort temperature harvest: skipped (returns 0) while a
@@ -1457,8 +1615,8 @@ class RestageCoordinator:
         finally:
             self._lock.release()
 
-    def prepare(self, state, now: Optional[float] = None
-                ) -> MaintenanceReport:
+    def prepare(self, state, now: Optional[float] = None,
+                force: bool = False) -> MaintenanceReport:
         """Host maintenance pass + plan + payload staging + splice
         compilation — all overlappable with in-flight serving on the
         (still untouched) ``state``.
@@ -1468,16 +1626,28 @@ class RestageCoordinator:
         device state was never touched, so serving continues on the last
         committed content.  After a dirty failure the pass skips the
         absorb (layouts may disagree) and always stages a plan — the full
-        restage from the host bank is the recovery."""
+        restage from the host bank is the recovery.
+
+        ``force=True`` stages a plan even on a no-change report and skips
+        the absorb — the tenant lifecycle ops use it right after host-
+        bank surgery, when the bank's arena geometry already disagrees
+        with the device's.
+
+        With a tenant registry attached, ops of tenants whose breaker
+        disallows an attempt are held back for this cycle and re-queued
+        after it (success or failure) — a degraded tenant is serve-only
+        while every other tenant's mutations keep flowing."""
         with self._lock:
             assert self.pending is None, "commit the pending plan first"
+            t = time.monotonic() if now is None else now
+            held, involved = self._hold_blocked(t)
             try:
                 self._fault("prepare")
                 with self.tracer.span("maint.prepare") as sp:
                     with sp.stage("maintain"):
                         report = self.engine.maintain(
-                            None if self._dirty else state)
-                    if (report.changed or self._dirty) \
+                            None if (self._dirty or force) else state)
+                    if (report.changed or self._dirty or force) \
                             and state is not None:
                         with sp.stage("plan"):
                             self.pending = self.engine.plan_restage()
@@ -1488,9 +1658,16 @@ class RestageCoordinator:
                            changed=report.changed)
                     self._packing_gauges()
             except Exception as exc:
-                self._quarantine("prepare", now, exc)
+                self._quarantine("prepare", now, exc, involved)
                 raise
+            finally:
+                self._requeue(held)
+            self._pending_tenants = involved
             self.breaker.record_success()
+            for name in involved:
+                b = self.tenant_breakers.get(name)
+                if b is not None:
+                    b.record_success()
             return report
 
     def commit(self, state, blocking: bool = True,
@@ -1524,12 +1701,19 @@ class RestageCoordinator:
                     "exclusive serve-blocked commit window").observe(
                         time.perf_counter() - t0)
             except Exception as exc:
-                self._quarantine("commit", now, exc)
+                self._quarantine("commit", now, exc,
+                                 self._pending_tenants)
                 raise
             self.pending = None
             self.plan_time = None
             self._dirty = False
             self.breaker.record_success()
+            for name in self._pending_tenants:
+                b = self.tenant_breakers.get(name)
+                if b is not None:
+                    b.record_success()
+            self._pending_tenants = set()
+            self._fault_tenants = set()   # the recovery cycle landed
             return state, True
         finally:
             self._lock.release()

@@ -43,7 +43,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..obs import get_registry
 from . import hashing
-from .bank import FilterBank, ShardedBank
+from .bank import ColdTenant, FilterBank, ShardedBank
 from .cuckoo import NULL
 from .distributed import ShardedBankState
 from .trag import CFTDeviceState
@@ -170,6 +170,79 @@ def list_snapshots(snap_dir: str) -> List[int]:
 def latest_snapshot(snap_dir: str) -> Optional[int]:
     steps = list_snapshots(snap_dir)
     return steps[-1] if steps else None
+
+
+_TENANT_PREFIX = "tenant_"
+
+
+def save_tenant(snap_dir: str, cold: ColdTenant,
+                fault_hook: Optional[Callable[[str], None]] = None
+                ) -> str:
+    """Persist one evicted/offboarded tenant's :class:`ColdTenant`
+    atomically (same tmp-then-rename discipline as :func:`save_snapshot`,
+    same ``snapshot-write`` fault window) — the durable half of
+    offboarding: ``offboard_tenant`` → ``save_tenant`` now,
+    ``load_tenant`` → ``onboard_tenant`` later, possibly in another
+    process.  The ``tenant_<name>`` directory sits beside the ``snap_*``
+    ones; :func:`list_snapshots` never confuses the two, and
+    :func:`cleanup_snapshots`' tmp sweep covers crashed tenant writes
+    too."""
+    os.makedirs(snap_dir, exist_ok=True)
+    final = os.path.join(snap_dir, _TENANT_PREFIX + cold.name)
+    tmp = os.path.join(snap_dir, f"{_TMP_PREFIX}tenant.{cold.name}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    try:
+        arrays = {"tree_nb": cold.tree_nb, "num_items": cold.num_items}
+        arrays.update({f"tables/{k}": v for k, v in cold.tables.items()})
+        leaves = []
+        for name, arr in arrays.items():
+            fn = name.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fn), np.ascontiguousarray(arr))
+            leaves.append({"name": name, "file": fn})
+        manifest = {"tenant": cold.name, "lo": int(cold.lo),
+                    "hi": int(cold.hi), "leaves": leaves}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if fault_hook is not None:
+            fault_hook("snapshot-write")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    get_registry().counter("snapshot.tenants_saved",
+                           "per-tenant cold snapshots written").inc(
+                               tenant=cold.name)
+    return final
+
+
+def load_tenant(snap_dir: str, name: str) -> ColdTenant:
+    """Load a :func:`save_tenant` snapshot back to a host
+    :class:`ColdTenant`, ready for ``onboard_tenant`` /
+    ``TenantRegistry.reload``."""
+    path = os.path.join(snap_dir, _TENANT_PREFIX + name)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = {l["name"]: np.load(os.path.join(path, l["file"]))
+              for l in manifest["leaves"]}
+    tables = {n.split("/", 1)[1]: a for n, a in arrays.items()
+              if n.startswith("tables/")}
+    return ColdTenant(name=manifest["tenant"], lo=int(manifest["lo"]),
+                      hi=int(manifest["hi"]),
+                      tree_nb=arrays["tree_nb"].astype(np.int32),
+                      num_items=arrays["num_items"].astype(np.int32),
+                      tables=tables)
+
+
+def list_tenants(snap_dir: str) -> List[str]:
+    """Names with a persisted :func:`save_tenant` snapshot."""
+    if not os.path.isdir(snap_dir):
+        return []
+    return sorted(d[len(_TENANT_PREFIX):] for d in os.listdir(snap_dir)
+                  if d.startswith(_TENANT_PREFIX))
 
 
 def cleanup_snapshots(snap_dir: str, keep_last: int = 3) -> None:

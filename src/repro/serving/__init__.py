@@ -3,7 +3,8 @@ front end, the CFT-RAG pipeline, typed serving errors, and the
 deterministic fault-injection harness."""
 from .async_engine import AsyncServeEngine, AsyncStats, RetrievalSlice
 from .engine import Request, RetrievalSession, ServeEngine, kv_cache_bytes
-from .errors import DeadlineExceeded, EngineClosed, EngineOverloaded
+from .errors import (DeadlineExceeded, EngineClosed, EngineOverloaded,
+                     TenantEvicted)
 from .faultinject import (FAULT_SITES, FaultPlan, InjectedFault,
                           active_plan, fault_point, inject)
 from .rag import RAGAnswer, RAGPipeline
@@ -15,5 +16,6 @@ __all__ = ["AsyncServeEngine", "AsyncStats", "RetrievalSlice", "Request",
            "RAGPipeline", "CommitPolicy", "MicroBatcher", "PendingRetrieval",
            "bucket_batch", "bucket_shapes",
            "DeadlineExceeded", "EngineClosed", "EngineOverloaded",
+           "TenantEvicted",
            "FAULT_SITES", "FaultPlan", "InjectedFault", "active_plan",
            "fault_point", "inject"]

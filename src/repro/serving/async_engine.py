@@ -49,6 +49,16 @@ Failure model (see README "Failure model" for the full contract):
   (``max_queue_requests``); a submit past the bound raises
   :class:`~repro.serving.errors.EngineOverloaded` instead of growing
   the queue (and the tail latency) without limit.
+* **tenant isolation** — with a ``TenantRegistry`` attached to the
+  session, each tenant gets a queue-share quota (``tenant_quota``,
+  default an equal split of ``max_queue_requests``): one tenant's
+  burst raises ``EngineOverloaded(tenant=...)`` for *that tenant only*
+  while the global bound still protects the engine; the batcher
+  coalesces tenant-fair (round-robin across tenants, per-tenant FIFO);
+  a cold/offboarded tenant's submits shed with
+  :class:`~repro.serving.errors.TenantEvicted`; and every batch span
+  carries its tenants so a slow tenant is attributable from the
+  metrics snapshot alone.
 * **deadlines** — ``submit(..., timeout=s)`` stamps an absolute
   deadline; expired requests fail fast with
   :class:`~repro.serving.errors.DeadlineExceeded` at coalesce time
@@ -80,7 +90,8 @@ import numpy as np
 
 from ..obs import HotPathRecompileError
 from .engine import RetrievalSession
-from .errors import DeadlineExceeded, EngineClosed, EngineOverloaded
+from .errors import (DeadlineExceeded, EngineClosed, EngineOverloaded,
+                     TenantEvicted)
 from .faultinject import fault_point
 from .scheduler import (CommitPolicy, MicroBatcher, PendingRetrieval,
                         bucket_shapes)
@@ -132,7 +143,8 @@ class AsyncServeEngine:
                  commit_every: int = 4, commit_deadline: float = 0.25,
                  clock=time.monotonic, maintenance: str = "inline",
                  max_queue_requests: int = 1024,
-                 default_timeout: Optional[float] = None):
+                 default_timeout: Optional[float] = None,
+                 tenant_quota=None):
         self.session: RetrievalSession = getattr(engine, "retrieval", engine)
         if maintenance not in ("inline", "thread", "off"):
             raise ValueError(f"unknown maintenance mode {maintenance!r}")
@@ -143,6 +155,10 @@ class AsyncServeEngine:
         # admission control: pending *requests* (split chunks included)
         # above this bound shed with EngineOverloaded at submit time
         self.max_queue_requests = max_queue_requests
+        # per-tenant queue share: an int (same quota for every tenant),
+        # a {tenant: quota} dict, or None — an equal split of the global
+        # bound across the registry's tenants when one is attached
+        self.tenant_quota = tenant_quota
         # deadline stamped on submits that pass no explicit timeout
         self.default_timeout = default_timeout
         self.batcher = MicroBatcher(latency_budget=latency_budget,
@@ -174,6 +190,8 @@ class AsyncServeEngine:
             "serve.batch_failures",
             "batches whose dispatch/serve path raised (futures failed, "
             "engine kept scheduling)")
+        self._c_tenant_queries = m.counter(
+            "serve.tenant_queries", "true queries served per tenant")
         self._base = self._counter_values()
 
         # last maintenance exception the background lifecycle swallowed
@@ -243,8 +261,24 @@ class AsyncServeEngine:
         except InvalidStateError:
             pass
 
+    def _quota_for(self, tenant: str) -> Optional[int]:
+        """The queue-share quota (in pending requests) for one tenant —
+        ``tenant_quota`` as given, or an equal split of the global bound
+        across the registry's tenants; ``None`` disables the check."""
+        tq = self.tenant_quota
+        if tq is None:
+            reg = self.session.tenants
+            if reg is None:
+                return None
+            return max(1, self.max_queue_requests // max(1, len(reg.names)))
+        if isinstance(tq, dict):
+            q = tq.get(tenant)
+            return None if q is None else int(q)
+        return int(tq)
+
     def submit(self, tree_ids: Sequence[int], hashes: Sequence[int],
-               *, timeout: Optional[float] = None) -> Future:
+               *, timeout: Optional[float] = None,
+               tenant: Optional[str] = None) -> Future:
         """Enqueue one retrieval request; the future resolves to a
         :class:`RetrievalSlice` once the batch it rides in completes.
         Thread-safe.
@@ -252,6 +286,14 @@ class AsyncServeEngine:
         ``timeout`` (seconds, default :attr:`default_timeout`) stamps an
         absolute deadline: a request still queued — or popped but not yet
         dispatched — past it fails with :class:`DeadlineExceeded`.
+
+        ``tenant`` labels the request for quota accounting and trace
+        attribution; when omitted and the session carries a
+        ``TenantRegistry``, it resolves from the queried tree ids (a
+        batch must not span tenants).  A non-resident tenant's submit
+        raises :class:`TenantEvicted`; a submit past the tenant's queue
+        share raises :class:`EngineOverloaded` *with that tenant* —
+        other tenants keep submitting up to their own shares.
 
         Raises :class:`EngineClosed` after ``stop()``, and
         :class:`EngineOverloaded` when the bounded queue is full (the
@@ -262,6 +304,13 @@ class AsyncServeEngine:
         """
         if len(tree_ids) != len(hashes):
             raise ValueError("tree_ids and hashes length mismatch")
+        reg = self.session.tenants
+        if tenant is None and reg is not None:
+            tenant = reg.tenant_of_batch(tree_ids)
+        if tenant is not None and reg is not None \
+                and not reg.resident(tenant):
+            self._c_rejected.inc(reason="evicted", tenant=tenant)
+            raise TenantEvicted(tenant)
         now = self.clock()
         timeout = self.default_timeout if timeout is None else timeout
         deadline_t = None if timeout is None else now + timeout
@@ -269,7 +318,7 @@ class AsyncServeEngine:
         chunks = [PendingRetrieval(
             tree_ids=list(tree_ids[i:i + mb]),
             hashes=list(hashes[i:i + mb]),
-            arrive_t=now, deadline_t=deadline_t)
+            arrive_t=now, deadline_t=deadline_t, tenant=tenant)
             for i in range(0, max(len(hashes), 1), mb)]
         with self._work:
             if self._stop:
@@ -279,9 +328,21 @@ class AsyncServeEngine:
             if len(chunks) > room:
                 # all-or-nothing: a partially enqueued split request
                 # could never resolve its aggregate future coherently
-                self._c_rejected.inc(reason="overload")
+                if tenant is None:
+                    self._c_rejected.inc(reason="overload")
+                else:
+                    self._c_rejected.inc(reason="overload", tenant=tenant)
                 raise EngineOverloaded(pending=len(self.batcher),
                                        limit=self.max_queue_requests)
+            if tenant is not None:
+                quota = self._quota_for(tenant)
+                held = self.batcher.pending_for(tenant)
+                if quota is not None and held + len(chunks) > quota:
+                    # the tenant's share is exhausted — shed *its*
+                    # traffic while the rest of the queue keeps admitting
+                    self._c_rejected.inc(reason="overload", tenant=tenant)
+                    raise EngineOverloaded(pending=held, limit=quota,
+                                           tenant=tenant)
             for c in chunks:
                 self.batcher.add(c)
             self._work.notify()
@@ -326,11 +387,12 @@ class AsyncServeEngine:
 
     async def retrieve_async(self, tree_ids: Sequence[int],
                              hashes: Sequence[int],
-                             timeout: Optional[float] = None
+                             timeout: Optional[float] = None,
+                             tenant: Optional[str] = None
                              ) -> RetrievalSlice:
         """Event-loop flavor of :meth:`submit`."""
         return await asyncio.wrap_future(
-            self.submit(tree_ids, hashes, timeout=timeout))
+            self.submit(tree_ids, hashes, timeout=timeout, tenant=tenant))
 
     def warmup(self) -> int:
         """Pre-compile every bucket geometry the batcher can produce so
@@ -419,6 +481,11 @@ class AsyncServeEngine:
 
         sp = self.session.tracer.span("serve.batch", bucket=bucket,
                                       requests=len(batch))
+        # per-tenant attribution: which tenants ride in this batch — a
+        # slow tenant is identifiable from the span stream alone
+        tenants = sorted({r.tenant for r in batch if r.tenant is not None})
+        if tenants:
+            sp.set(tenant=",".join(tenants))
         # the oldest request's queue wait is the coalescing cost this
         # batch imposed — measured from its arrival stamp, not timed here
         sp.add_stage("coalesce", max(0.0, now - arrive_t))
@@ -475,6 +542,9 @@ class AsyncServeEngine:
         self._c_queries.inc(b)
         self._c_padded.inc(bucket - b)
         self._c_bucket.inc(bucket=bucket)
+        for req in batch:
+            if req.tenant is not None:
+                self._c_tenant_queries.inc(len(req), tenant=req.tenant)
         # post-batch sentinel tick: any serve-step compile after warmup
         # is attributed (and fatal when armed)
         self.session.observe()

@@ -60,6 +60,7 @@ class RetrievalSession:
         self.maint: Optional[MaintenanceEngine] = None
         self.coord: Optional[RestageCoordinator] = None
         self.snapshots = None                  # Optional[SnapshotWriter]
+        self.tenants = None                    # Optional[TenantRegistry]
         self.batch_pad = 64
         self._step = None
         # observability: process-wide registry, per-session tracer and
@@ -95,18 +96,33 @@ class RetrievalSession:
                 lookup_fn=lookup_fn))
             self.sentinel.watch("serve.step", self._step)
 
-    def attach_maintenance(self, maint, forest, breaker=None) -> None:
+    def attach_maintenance(self, maint, forest, breaker=None,
+                           registry=None) -> None:
         """Attach a host-side maintenance engine over the bank backing
         the attached state — which must have just been staged from that
         bank (the engine's restage shadow initializes to its content).
         ``breaker`` overrides the coordinator's fault-domain circuit
-        breaker (tests pass one with a tight threshold/cooldown).  The
+        breaker (tests pass one with a tight threshold/cooldown);
+        ``registry`` (a :class:`~repro.core.bank.TenantRegistry`) makes
+        the fault domain per-tenant — see :meth:`attach_tenants`.  The
         fault-injection hook is wired here so ``repro.core`` never
         imports the serving layer."""
         from .faultinject import fault_point
         self.maint = maint
         self.coord = RestageCoordinator(maint, forest, breaker=breaker,
-                                        fault_hook=fault_point)
+                                        fault_hook=fault_point,
+                                        registry=registry)
+        if registry is not None:
+            self.tenants = registry
+
+    def attach_tenants(self, registry) -> None:
+        """Attach (or swap in) a :class:`~repro.core.bank.TenantRegistry`
+        over the already-attached bank: tenant quotas, per-tenant
+        maintenance fault domains, and the evict/reload/onboard lifecycle
+        all key off it."""
+        self.tenants = registry
+        if self.coord is not None:
+            self.coord.registry = registry
 
     def configure_snapshots(self, writer) -> None:
         """Attach a :class:`repro.core.snapshot.SnapshotWriter`: every
@@ -195,8 +211,9 @@ class RetrievalSession:
         return self.sentinel.check()
 
     # -------------------------------------------------------- maintenance
-    def prepare_maintenance(self, state=None,
-                            now=None) -> Optional[MaintenanceReport]:
+    def prepare_maintenance(self, state=None, now=None,
+                            force: bool = False
+                            ) -> Optional[MaintenanceReport]:
         """Phase one of the zero-pause restage: run the host-side
         maintenance pass (absorb → delta → compact → shrink → sort) and
         stage the restage plan's payload — only the changed bytes.
@@ -213,7 +230,7 @@ class RetrievalSession:
             return None
         self.commit_maintenance()
         return self.coord.prepare(self.state if state is None else state,
-                                  now=now)
+                                  now=now, force=force)
 
     def commit_maintenance(self, blocking: bool = True,
                            now: Optional[float] = None) -> bool:
@@ -270,6 +287,102 @@ class RetrievalSession:
         if engines is None:
             engines = [self.maint]
         return sum(len(e.delta) for e in engines)
+
+    # ----------------------------------------------- tenant lifecycle
+    def _tenant_registry(self):
+        if self.tenants is None:
+            raise RuntimeError("attach a TenantRegistry first "
+                               "(attach_tenants)")
+        if self.maint is None:
+            raise RuntimeError("tenant lifecycle needs an attached "
+                               "maintenance engine")
+        return self.tenants
+
+    def _host_bank(self):
+        """The host bank the registry operates on — the sharded bank for
+        a sharded engine, the flat one otherwise."""
+        sb = getattr(self.maint, "sbank", None)
+        return sb if sb is not None else self.maint.bank
+
+    def _tenant_restage(self, lo: int, hi: int, pinned: bool) -> None:
+        """Finish a registry surgery: set the tenant's pin state, then
+        force a prepare/commit cycle so the surgically edited bank
+        restages onto device (``force`` because the bank's arena geometry
+        already disagrees with the device's — a plain absorb would
+        raise)."""
+        self.maint.pin_tree_range(lo, hi, pinned)
+        self.prepare_maintenance(force=True)
+        self.commit_maintenance()
+
+    def evict_tenant(self, name: str):
+        """Evict ``name`` to host under arena memory pressure: flush the
+        pending maintenance cycle (bank == device), copy the tenant's
+        arena rows into a :class:`~repro.core.bank.ColdTenant`, blank its
+        tree range in place, pin it (cold rows reference live CSR ids —
+        compaction/rebuild must not renumber them), and splice the
+        blanked segments onto device.  Queries against its trees miss
+        safely; the admission path sheds them with
+        :class:`~repro.serving.errors.TenantEvicted` instead.  The
+        ``evict`` fault site fires before the surgery — an injected
+        fault leaves bank and device exactly as served."""
+        from .faultinject import fault_point
+        reg = self._tenant_registry()
+        self.maintain()                    # bank == device for the copy
+        fault_point("evict")
+        cold = reg.evict(self._host_bank(), name)
+        self._tenant_restage(cold.lo, cold.hi, pinned=True)
+        self.metrics.counter(
+            "tenant.evictions",
+            "cold-tenant evictions to host").inc(tenant=name)
+        return cold
+
+    def reload_tenant(self, name: str, cold=None) -> None:
+        """Splice an evicted tenant back in — the exact inverse of
+        :meth:`evict_tenant`, bit-exact because eviction never mutates
+        the cold copy or its CSR rows (the pin guarantees the ids still
+        resolve).  ``cold`` overrides the registry's retained copy (the
+        snapshot-restore path)."""
+        from .faultinject import fault_point
+        reg = self._tenant_registry()
+        self.maintain()
+        fault_point("reload")
+        reg.reload(self._host_bank(), name, cold)
+        lo, hi = reg.trees(name)
+        self._tenant_restage(lo, hi, pinned=False)
+        self.metrics.counter(
+            "tenant.reloads",
+            "cold-tenant reloads from host").inc(tenant=name)
+
+    def offboard_tenant(self, name: str):
+        """Live offboarding: evict ``name`` and drop it from the
+        registry's residency — its trees stay as pinned empty segments
+        (the range is reusable via :meth:`onboard_tenant`).  Returns the
+        :class:`ColdTenant` so the caller can persist it
+        (``save_tenant``)."""
+        from .faultinject import fault_point
+        reg = self._tenant_registry()
+        self.maintain()
+        fault_point("evict")
+        cold = reg.offboard(self._host_bank(), name)
+        self._tenant_restage(cold.lo, cold.hi, pinned=True)
+        self.metrics.counter(
+            "tenant.offboards", "tenants offboarded live").inc(tenant=name)
+        return cold
+
+    def onboard_tenant(self, name: str, cold) -> None:
+        """Live onboarding into an offboarded range: splice ``cold``'s
+        trees (typically from :func:`~repro.core.snapshot.load_tenant`)
+        into the blank range and restage — no restart, no full
+        rebuild."""
+        from .faultinject import fault_point
+        reg = self._tenant_registry()
+        self.maintain()
+        fault_point("onboard")
+        reg.onboard(self._host_bank(), name, cold)
+        lo, hi = reg.trees(name)
+        self._tenant_restage(lo, hi, pinned=False)
+        self.metrics.counter(
+            "tenant.onboards", "tenants onboarded live").inc(tenant=name)
 
 
 class ServeEngine:

@@ -13,19 +13,29 @@ working) carrying enough context to act on:
 * :class:`EngineClosed` — the engine was stopped (or never started);
   the request cannot be served by this engine instance.  Outstanding
   futures at ``stop()`` resolve with this instead of hanging forever.
+* :class:`TenantEvicted` — the request's tenant is not resident (cold
+  or offboarded); reload/onboard the tenant, or route elsewhere.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 
 class EngineOverloaded(RuntimeError):
-    """Admission control rejected a submit: the request queue is full."""
+    """Admission control rejected a submit: the request queue is full.
 
-    def __init__(self, pending: int, limit: int):
+    ``tenant`` is set when a per-tenant quota (not the global bound)
+    rejected — one tenant's overload sheds only that tenant's traffic."""
+
+    def __init__(self, pending: int, limit: int,
+                 tenant: Optional[str] = None):
+        scope = f"tenant {tenant!r}" if tenant else "engine"
         super().__init__(
-            f"engine overloaded: {pending} pending requests at the "
+            f"{scope} overloaded: {pending} pending requests at the "
             f"queue bound {limit}")
         self.pending = pending
         self.limit = limit
+        self.tenant = tenant
 
 
 class DeadlineExceeded(RuntimeError):
@@ -45,3 +55,14 @@ class EngineClosed(RuntimeError):
 
     def __init__(self, msg: str = "engine is stopped"):
         super().__init__(msg)
+
+
+class TenantEvicted(RuntimeError):
+    """The request's tenant is cold (evicted to host) or offboarded —
+    its trees are resident as empty segments and every lookup would
+    miss, so the submit sheds instead of serving a silent all-miss."""
+
+    def __init__(self, tenant: str):
+        super().__init__(f"tenant {tenant!r} is not resident "
+                         "(evicted or offboarded)")
+        self.tenant = tenant

@@ -18,7 +18,10 @@ CONTRIBUTING.md:
   dispatches on device;
 * ``snapshot-write`` — in ``core.snapshot`` after the leaves are written
   but *before* the atomic rename (proves a crashed write never corrupts
-  the previous snapshot).
+  the previous snapshot);
+* ``evict`` / ``reload`` / ``onboard`` — in the tenant lifecycle ops of
+  ``RetrievalSession``, before the registry mutates the host bank (a
+  fault leaves both bank and device state exactly as served).
 
 Core modules never import this one — the serving layer injects
 :func:`fault_point` as a ``fault_hook`` callable where core code needs a
@@ -33,7 +36,8 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 from ..obs import get_registry
 
 #: the closed set of named fault sites production code exposes
-FAULT_SITES = ("prepare", "commit", "dispatch", "snapshot-write")
+FAULT_SITES = ("prepare", "commit", "dispatch", "snapshot-write",
+               "evict", "reload", "onboard")
 
 
 class InjectedFault(RuntimeError):

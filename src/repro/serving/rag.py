@@ -54,7 +54,8 @@ class RAGPipeline:
                  use_device_lookup: bool = False, use_bank: bool = False,
                  mesh=None, mesh_axis: str = "model",
                  snapshot_dir: Optional[str] = None,
-                 snapshot_every: int = 1, snapshot_keep: int = 3):
+                 snapshot_every: int = 1, snapshot_keep: int = 3,
+                 tenants=None):
         self.corpus = corpus
         self.forest = build_forest(corpus.trees)
         self.index = build_index(self.forest, num_buckets=num_buckets)
@@ -77,6 +78,15 @@ class RAGPipeline:
         # incompatible snapshots fall back to a fresh build)
         self.snapshot_dir = snapshot_dir
         self.restored_step: Optional[int] = None
+        if snapshot_dir:
+            # startup sweep: a crash (or injected fault) mid-snapshot
+            # leaves a tmp.* dir behind — sweep it here so restarts never
+            # accumulate leaked disk (keep_last <= 0 means "keep all
+            # snapshots", so the sweep then only removes tmp dirs)
+            from ..core.snapshot import cleanup_snapshots, list_snapshots
+            keep = snapshot_keep if snapshot_keep > 0 \
+                else max(1, len(list_snapshots(snapshot_dir)))
+            cleanup_snapshots(snapshot_dir, keep_last=keep)
         snap = self._load_snapshot() if use_bank and snapshot_dir else None
         if use_bank and mesh is not None:
             from ..core.snapshot import apply_maint_bookkeeping, \
@@ -126,6 +136,14 @@ class RAGPipeline:
                                 lookup_fn=cuckoo_lookup_arena_auto)
         if self.maintenance is not None:
             self.session.attach_maintenance(self.maintenance, self.forest)
+        if tenants is not None:
+            # tenant -> tree-range registry: quotas, per-tenant fault
+            # domains, and the evict/reload lifecycle key off it
+            from ..core.bank import TenantRegistry
+            reg = tenants if isinstance(tenants, TenantRegistry) \
+                else TenantRegistry(tenants)
+            self.session.attach_tenants(reg)
+        self.tenants = self.session.tenants
         if self.maintenance is not None and snapshot_dir is not None \
                 and snapshot_every > 0:
             from ..core.snapshot import SnapshotWriter

@@ -58,12 +58,15 @@ class PendingRetrieval:
     whose per-request slice resolves through ``future`` once the batch
     it rode in completes.  ``deadline_t`` is the absolute clock time
     after which the request must fail fast with ``DeadlineExceeded``
-    instead of occupying a batch slot (``None`` = no deadline)."""
+    instead of occupying a batch slot (``None`` = no deadline).
+    ``tenant`` labels the request for quota accounting, fair coalescing
+    and the per-tenant trace attribution (``None`` = unscoped)."""
     tree_ids: Sequence[int]
     hashes: Sequence[int]
     arrive_t: float
     future: Future = dataclasses.field(default_factory=Future)
     deadline_t: Optional[float] = None
+    tenant: Optional[str] = None
 
     def __len__(self) -> int:
         return len(self.hashes)
@@ -73,8 +76,9 @@ class PendingRetrieval:
 
 
 class MicroBatcher:
-    """FIFO arrival coalescer.  Not thread-safe — the engine serializes
-    access under its own lock and this class stays pure policy."""
+    """FIFO arrival coalescer — tenant-fair when requests carry tenant
+    labels.  Not thread-safe — the engine serializes access under its own
+    lock and this class stays pure policy."""
 
     def __init__(self, latency_budget: float = 2e-3,
                  max_batch: int = 256, min_bucket: int = 16):
@@ -85,6 +89,7 @@ class MicroBatcher:
         self.min_bucket = min_bucket
         self._queue: List[PendingRetrieval] = []
         self._pending_queries = 0
+        self._tenant_pending: dict = {}    # tenant -> queued request count
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -92,6 +97,19 @@ class MicroBatcher:
     @property
     def pending_queries(self) -> int:
         return self._pending_queries
+
+    def pending_for(self, tenant: Optional[str]) -> int:
+        """Queued request count for one tenant — the admission-control
+        input for per-tenant quotas."""
+        return self._tenant_pending.get(tenant, 0)
+
+    def _drop_count(self, reqs: Sequence[PendingRetrieval]) -> None:
+        for r in reqs:
+            n = self._tenant_pending.get(r.tenant, 0) - 1
+            if n > 0:
+                self._tenant_pending[r.tenant] = n
+            else:
+                self._tenant_pending.pop(r.tenant, None)
 
     def add(self, req: PendingRetrieval) -> None:
         if len(req) == 0:
@@ -102,6 +120,8 @@ class MicroBatcher:
                 f"{self.max_batch}")
         self._queue.append(req)
         self._pending_queries += len(req)
+        self._tenant_pending[req.tenant] = \
+            self._tenant_pending.get(req.tenant, 0) + 1
 
     def expire(self, now: float) -> List[PendingRetrieval]:
         """Remove and return every queued request whose deadline has
@@ -113,6 +133,7 @@ class MicroBatcher:
         if expired:
             self._queue = [r for r in self._queue if not r.expired(now)]
             self._pending_queries -= sum(len(r) for r in expired)
+            self._drop_count(expired)
         return expired
 
     def ready(self, now: float) -> bool:
@@ -140,16 +161,46 @@ class MicroBatcher:
         return t
 
     def pop(self) -> List[PendingRetrieval]:
-        """Dequeue the longest FIFO prefix whose total query count fits
-        ``max_batch``.  Requests never split across batches — per-request
-        futures resolve atomically."""
+        """Dequeue up to ``max_batch`` queries' worth of requests.
+        Requests never split across batches — per-request futures resolve
+        atomically.
+
+        With at most one distinct tenant queued this is the longest FIFO
+        prefix that fits.  With several it is a tenant-fair round-robin:
+        tenants rotate in order of their oldest request, each contributing
+        its own head-of-line request per turn — one tenant's burst can
+        fill the queue without monopolizing the batch, while per-tenant
+        FIFO order is preserved exactly."""
+        tenants: List[Optional[str]] = []
+        for r in self._queue:
+            if r.tenant not in tenants:
+                tenants.append(r.tenant)
         batch: List[PendingRetrieval] = []
         total = 0
-        while self._queue and total + len(self._queue[0]) <= self.max_batch:
-            req = self._queue.pop(0)
-            total += len(req)
-            batch.append(req)
+        if len(tenants) <= 1:
+            while self._queue and \
+                    total + len(self._queue[0]) <= self.max_batch:
+                req = self._queue.pop(0)
+                total += len(req)
+                batch.append(req)
+        else:
+            by: dict = {t: [] for t in tenants}
+            for r in self._queue:
+                by[r.tenant].append(r)
+            took = True
+            while took:
+                took = False
+                for t in tenants:
+                    q = by[t]
+                    if q and total + len(q[0]) <= self.max_batch:
+                        req = q.pop(0)
+                        total += len(req)
+                        batch.append(req)
+                        took = True
+            picked = {id(r) for r in batch}
+            self._queue = [r for r in self._queue if id(r) not in picked]
         self._pending_queries -= total
+        self._drop_count(batch)
         return batch
 
     def bucket(self, batch: Sequence[PendingRetrieval]) -> int:

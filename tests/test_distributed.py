@@ -643,3 +643,95 @@ def test_mini_dryrun_multi_pod_mesh():
     assert c.memory_analysis() is not None
     print("mini multi-pod dryrun OK")
     """, devices=8)
+
+
+def test_sharded_tenant_evict_reload_bit_exact():
+    """Cold-tenant eviction over a bank-axis sharded deployment: evicting
+    a single-shard tenant touches only its owning shard (every other
+    shard byte-identical), a tenant spanning two shards splices per
+    owning piece, and reload restores every shard's tables bit-exactly —
+    the sharded device lookup answers match the pre-eviction baseline
+    field for field.  Shard boundaries come from the tenant-aligned
+    planner, so no tenant straddles a shard it doesn't own outright."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import (TenantRegistry, build_forest, build_bank,
+                            ShardedMaintenanceEngine, plan_tenant_partition,
+                            sharded_lookup_bank, stage_sharded_bank)
+    from repro.core import hashing
+
+    T, D = 8, 4
+    trees = [[(f"r{t}", f"e{t}_{i}") for i in range(10)] for t in range(T)]
+    forest = build_forest(trees)
+    bank = build_bank(forest)
+    reg = TenantRegistry({"a": (0, 2), "b": (2, 4), "c": (4, 6),
+                          "d": (6, 8)})
+    starts = plan_tenant_partition(bank.tree_nb, reg, D)
+    for name in reg.names:                 # planner honors every boundary
+        lo, hi = reg.trees(name)
+        assert not any(int(lo) < int(s) < int(hi) for s in starts), name
+    sbank = bank.shard(tree_starts=starts)
+    mesh = jax.make_mesh((D,), ("model",))
+    TABLES = ("fingerprints", "temperature", "heads", "entity_ids",
+              "stored_hash")
+
+    def shard_bytes(d):
+        return tuple(getattr(sbank.banks[d], f).tobytes() for f in TABLES)
+
+    def answers():
+        state = stage_sharded_bank(sbank, forest, mesh, "model")
+        got = sharded_lookup_bank(state, jnp.asarray(qt), jnp.asarray(qh))
+        return {f: np.asarray(getattr(got, f)).copy()
+                for f in ("hit", "head", "bucket", "slot")}
+
+    qt = np.asarray([t for t in range(T) for _ in range(10)], np.int32)
+    qh = np.asarray([int(hashing.entity_hash(f"e{t}_{i}"))
+                     for t in range(T) for i in range(10)], np.uint32)
+    base = answers()
+    assert base["hit"].all()
+    snap = {d: shard_bytes(d) for d in range(D)}
+
+    # --- single-shard tenant: surgery stays inside the owning shard
+    blo, bhi = reg.trees("b")
+    owners = [d for d in range(D)
+              if max(blo, int(starts[d])) < min(bhi, int(starts[d + 1]))]
+    assert len(owners) == 1
+    cold = reg.evict(sbank, "b")
+    eng = ShardedMaintenanceEngine(sbank)
+    eng.pin_tree_range(blo, bhi, True)
+    try:
+        eng.queue_insert(blo, "blocked", [0])
+        raise SystemExit("pinned insert must raise")
+    except ValueError:
+        pass
+    for d in range(D):
+        if d not in owners:
+            assert shard_bytes(d) == snap[d], f"shard {d} mutated"
+    mid = answers()
+    sel = (qt >= blo) & (qt < bhi)
+    assert not mid["hit"][sel].any()       # the cold tenant misses
+    for f in ("hit", "head", "bucket", "slot"):   # everyone else exact
+        np.testing.assert_array_equal(mid[f][~sel], base[f][~sel],
+                                      err_msg=f)
+    reg.reload(sbank, "b")
+    eng.pin_tree_range(blo, bhi, False)
+    for d in range(D):
+        assert shard_bytes(d) == snap[d], f"shard {d} not restored"
+
+    # --- a tenant spanning two shards splices per owning piece
+    wide = TenantRegistry({"w": (0, 4), "c": (4, 6), "d": (6, 8)})
+    cold_w = wide.evict(sbank, "w")
+    assert cold_w.arena_rows > 0
+    changed = [d for d in range(D) if shard_bytes(d) != snap[d]]
+    assert changed == [d for d in range(D)
+                       if max(0, int(starts[d])) < min(4, int(starts[d + 1]))]
+    assert len(changed) == 2
+    assert not answers()["hit"][qt < 4].any()
+    wide.reload(sbank, "w")
+    for d in range(D):
+        assert shard_bytes(d) == snap[d], f"shard {d} not restored (wide)"
+    post = answers()
+    for f in ("hit", "head", "bucket", "slot"):
+        np.testing.assert_array_equal(post[f], base[f], err_msg=f)
+    print("sharded tenant evict/reload OK")
+    """, devices=4)

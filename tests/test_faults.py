@@ -12,7 +12,8 @@ import numpy as np
 import pytest
 
 from repro.core import (CFTDeviceState, MaintenanceBreaker,
-                        MaintenanceEngine, build_bank, build_forest)
+                        MaintenanceEngine, TenantRegistry, build_bank,
+                        build_forest)
 from repro.core import hashing
 from repro.obs import get_registry
 from repro.serving import (AsyncServeEngine, DeadlineExceeded, EngineClosed,
@@ -29,14 +30,14 @@ def _forest(num_trees=4, entities_per_tree=10):
          for t in range(num_trees)])
 
 
-def _session(maint=True, forest=None, breaker=None):
+def _session(maint=True, forest=None, breaker=None, registry=None):
     forest = forest or _forest()
     bank = build_bank(forest)
     session = RetrievalSession()
     session.attach(CFTDeviceState.from_bank(bank, forest))
     if maint:
         session.attach_maintenance(MaintenanceEngine(bank), forest,
-                                   breaker=breaker)
+                                   breaker=breaker, registry=registry)
     return forest, bank, session
 
 
@@ -412,3 +413,146 @@ def test_dispatch_fault_fails_one_batch_not_the_engine():
     want = ref.retrieve(*reqs[2])
     np.testing.assert_array_equal(r2.hit, np.asarray(want.hit))
     np.testing.assert_array_equal(r2.locations, np.asarray(want.locations))
+
+
+# ------------------------------------------------ per-tenant fault domain
+
+_RANGES = {"acme": (0, 2), "bravo": (2, 4)}
+
+
+def test_tenant_fault_domain_isolates_victim():
+    """A prepare fault while only the victim tenant has queued work trips
+    the *victim's* breaker; the global breaker stays closed, the healthy
+    tenant's maintenance keeps landing, and its answers stay
+    bit-identical to a fault-free run of the same ops."""
+    breaker = MaintenanceBreaker(threshold=1, cooldown=5.0, backoff=1.0)
+    forest, bank, session = _session(breaker=breaker,
+                                     registry=TenantRegistry(_RANGES))
+    coord = session.coord
+    session.maint.queue_insert(0, "victim write", [1])
+    with inject(FaultPlan({"prepare": [0]})):
+        with pytest.raises(InjectedFault):
+            session.prepare_maintenance(now=0.0)
+    # blame is attributed to the involved tenant, not the whole forest
+    assert coord.degraded_tenants == ["acme"]
+    assert coord.tenant_breakers["acme"].state == MaintenanceBreaker.OPEN
+    assert "bravo" not in coord.tenant_breakers
+    assert breaker.state == MaintenanceBreaker.CLOSED
+    assert coord.allow(0.1)            # the global pump keeps preparing
+    # dirty recovery flows with the victim's ops held back
+    session.prepare_maintenance(now=1.0)
+    session.commit_maintenance(now=1.0)
+    assert not coord.dirty
+    h_victim = int(hashing.hash_entities(["victim write"])[0])
+    assert not bank.lookup(0, h_victim)[0]          # still held back
+    # the healthy tenant's maintenance lands through the open window
+    session.maint.queue_insert(2, "healthy write", [1])
+    session.prepare_maintenance(now=2.0)
+    session.commit_maintenance(now=2.0)
+    h_healthy = int(hashing.hash_entities(["healthy write"])[0])
+    assert bank.lookup(2, h_healthy)[0]
+    assert _state_equal(session.state, bank, forest)
+    # healthy answers bit-identical to a never-faulted run of the same op
+    _, ref_bank, ref = _session(forest=forest)
+    ref.maint.queue_insert(2, "healthy write", [1])
+    ref.maintain()
+    q = ([2, 3, 2], [h_healthy,
+                     int(hashing.hash_entities(["entity 3_0"])[0]),
+                     int(hashing.hash_entities(["entity 2_4"])[0])])
+    got, want = session.retrieve(*q), ref.retrieve(*q)
+    for n in ("hit", "locations", "up", "down"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, n)),
+                                      np.asarray(getattr(want, n)))
+    # past the cooldown the half-open probe releases the held ops and a
+    # clean cycle closes the victim's breaker — full service restored
+    session.prepare_maintenance(now=10.0)
+    session.commit_maintenance(now=10.0)
+    assert bank.lookup(0, h_victim)[0]
+    assert coord.degraded_tenants == []
+    assert coord.tenant_breakers["acme"].state == MaintenanceBreaker.CLOSED
+    assert _state_equal(session.state, bank, forest)
+    reg = get_registry()
+    assert reg.counter("maint.failures").value(
+        phase="prepare", tenant="acme") >= 1
+    assert reg.gauge("tenant.breaker_state").value(tenant="acme") == 0
+
+
+def test_breaker_half_open_recovery_under_repeated_commit_faults():
+    """Pins the half-open protocol end to end at the coordinator level
+    under repeated commit faults: open -> cooldown -> half-open probe
+    whose commit faults -> open again -> second probe lands clean ->
+    closed, with the queued mutation applied exactly once at the end.
+
+    A successful prepare records a breaker success (pre-existing
+    semantics: the closed-state failure streak resets every clean
+    prepare), so commit faults trip the breaker through the threshold=1
+    path and re-trip it straight from the probe cycle's failure."""
+    breaker = MaintenanceBreaker(threshold=1, cooldown=5.0, backoff=1.0)
+    forest, bank, session = _session(breaker=breaker)
+    coord = session.coord
+    session.maint.queue_insert(0, "slow landing", [1])
+    with inject(FaultPlan({"commit": 2})):
+        session.prepare_maintenance(now=0.0)
+        with pytest.raises(InjectedFault):
+            session.commit_maintenance(now=0.0)
+        assert breaker.state == MaintenanceBreaker.OPEN
+        assert coord.dirty
+        assert not coord.allow(4.9)           # cooling down
+        assert coord.allow(5.1)               # -> half-open probe window
+        assert breaker.state == MaintenanceBreaker.HALF_OPEN
+        session.prepare_maintenance(now=5.1)  # the probe's prepare is ok
+        with pytest.raises(InjectedFault):
+            session.commit_maintenance(now=5.1)   # ...but its commit isn't
+        assert breaker.state == MaintenanceBreaker.OPEN   # probe failed
+        assert not coord.allow(9.0)           # cooldown counts from t=5.1
+    assert coord.allow(10.5)
+    assert breaker.state == MaintenanceBreaker.HALF_OPEN
+    session.prepare_maintenance(now=10.5)
+    assert session.commit_maintenance(now=10.5)
+    assert breaker.state == MaintenanceBreaker.CLOSED
+    assert not coord.dirty
+    assert bank.lookup(0, int(hashing.hash_entities(
+        ["slow landing"])[0]))[0]
+    assert _state_equal(session.state, bank, forest)
+
+
+def test_tenant_lifecycle_fault_sites_fire_before_surgery():
+    """Each lifecycle fault site fires *before* its state transition: an
+    injected fault leaves bank, device state and registry residency
+    exactly as served, and a clean retry completes the operation."""
+    forest, bank, session = _session(registry=TenantRegistry(_RANGES))
+    session.maintain()
+    img = {n: getattr(bank, n).copy()
+           for n in ("fingerprints", "heads", "tree_nb", "num_items")}
+    with inject(FaultPlan({"evict": [0]})) as plan:
+        with pytest.raises(InjectedFault):
+            session.evict_tenant("acme")
+    assert plan.hits("evict") == 1
+    assert session.tenants.resident("acme")
+    assert not session.maint.pinned.any()
+    for n, want in img.items():
+        np.testing.assert_array_equal(getattr(bank, n), want)
+    assert _state_equal(session.state, bank, forest)
+    session.evict_tenant("acme")                      # clean retry
+    # reload: a fault leaves the tenant cold and pinned
+    with inject(FaultPlan({"reload": [0]})):
+        with pytest.raises(InjectedFault):
+            session.reload_tenant("acme")
+    assert not session.tenants.resident("acme")
+    assert session.maint.pinned[0:2].all()
+    session.reload_tenant("acme")
+    assert session.tenants.resident("acme")
+    assert _state_equal(session.state, bank, forest)
+    # offboard shares the evict site; onboard has its own
+    with inject(FaultPlan({"evict": [0]})):
+        with pytest.raises(InjectedFault):
+            session.offboard_tenant("bravo")
+    assert session.tenants.resident("bravo")
+    cold = session.offboard_tenant("bravo")
+    with inject(FaultPlan({"onboard": [0]})):
+        with pytest.raises(InjectedFault):
+            session.onboard_tenant("bravo", cold)
+    assert not session.tenants.resident("bravo")
+    session.onboard_tenant("bravo", cold)
+    assert session.tenants.resident("bravo")
+    assert _state_equal(session.state, bank, forest)

@@ -1,0 +1,395 @@
+"""Multi-tenant forest serving: the tenant -> tree-range registry,
+per-tenant admission quotas and fair coalescing, cold-tenant eviction
+with bit-exact reload, pinned-range maintenance guards, per-tenant
+snapshots, and the tenant-aligned shard planner.
+
+Fast tier — everything here is replicated (single device) and
+clock-free; the sharded evict/reload round-trip and the chaos-grade
+isolation proofs live in ``test_distributed.py`` / ``test_faults.py``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (CFTDeviceState, ColdTenant, MaintenanceEngine,
+                        TenantRegistry, build_bank, build_forest,
+                        list_tenants, load_tenant, plan_partition,
+                        plan_tenant_partition, save_tenant)
+from repro.core import hashing
+from repro.core.bank import _ARENA_TABLES
+from repro.obs import get_registry
+from repro.serving import (AsyncServeEngine, EngineOverloaded, MicroBatcher,
+                           PendingRetrieval, RAGPipeline, RetrievalSession,
+                           TenantEvicted)
+
+
+def _forest(num_trees=4, entities_per_tree=8):
+    return build_forest(
+        [[(f"root {t}", f"entity {t}_{i}") for i in range(entities_per_tree)]
+         for t in range(num_trees)])
+
+
+def _session(ranges, maint=True):
+    forest = _forest()
+    bank = build_bank(forest)
+    session = RetrievalSession()
+    session.attach(CFTDeviceState.from_bank(bank, forest))
+    if maint:
+        session.attach_maintenance(MaintenanceEngine(bank), forest,
+                                   registry=TenantRegistry(ranges))
+    else:
+        session.attach_tenants(TenantRegistry(ranges))
+    return forest, bank, session
+
+
+def _tenant_queries(forest, bank, lo, hi):
+    """One (tree_ids, hashes) batch covering every entity of trees
+    ``[lo, hi)`` — all present, so every query hits while resident."""
+    hashes = hashing.hash_entities(forest.entity_names)
+    rows = [r for r in range(len(bank.row_entity))
+            if lo <= int(bank.row_tree[r]) < hi]
+    return ([int(bank.row_tree[r]) for r in rows],
+            [int(hashes[bank.row_entity[r]]) for r in rows])
+
+
+def _answers(session, q):
+    r = session.retrieve(*q)
+    return {n: np.asarray(getattr(r, n)).copy()
+            for n in ("hit", "locations", "up", "down")}
+
+
+def _bank_image(bank):
+    img = {n: getattr(bank, n).copy() for n in _ARENA_TABLES}
+    img["tree_nb"] = bank.tree_nb.copy()
+    img["num_items"] = bank.num_items.copy()
+    img["bucket_offsets"] = bank.bucket_offsets.copy()
+    return img
+
+
+def _assert_bank_equals(bank, img, victim=None):
+    """Bank content matches the pre-eviction image bit-for-bit.
+
+    ``temperature`` is serving feedback — co-resident tenants that kept
+    serving during the victim's cold window legitimately advance it — so
+    it is compared only over the victim's arena range (restored exactly
+    from the cold copy) when a ``(lo, hi)`` tree range is given."""
+    for n, want in img.items():
+        got = getattr(bank, n)
+        assert got.shape == want.shape, n
+        if n == "temperature":
+            if victim is not None:
+                alo = int(img["bucket_offsets"][victim[0]])
+                ahi = int(img["bucket_offsets"][victim[1]])
+                np.testing.assert_array_equal(got[alo:ahi], want[alo:ahi])
+            continue
+        assert np.array_equal(got, want), n
+
+
+def _assert_same(got, want):
+    for n in ("hit", "locations", "up", "down"):
+        np.testing.assert_array_equal(got[n], want[n])
+
+
+RANGES = {"acme": (0, 2), "bravo": (2, 4)}
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_lookup_and_residency():
+    reg = TenantRegistry(RANGES)
+    assert reg.names == ["acme", "bravo"]
+    assert reg.trees("acme") == (0, 2) and reg.trees("bravo") == (2, 4)
+    assert [reg.tenant_of(t) for t in range(4)] == \
+        ["acme", "acme", "bravo", "bravo"]
+    assert reg.tenant_of(99) is None
+    assert reg.tenant_of_batch([2, 3, 2]) == "bravo"
+    assert reg.tenant_of_batch([]) is None
+    with pytest.raises(ValueError, match="spans tenants"):
+        reg.tenant_of_batch([1, 2])
+    assert reg.resident("acme") and not reg.any_cold
+    with pytest.raises(KeyError):
+        reg.resident("nobody")
+    # tuple-list construction form and validation
+    assert TenantRegistry([("b", 2, 4), ("a", 0, 2)]).names == ["a", "b"]
+    with pytest.raises(ValueError, match="overlaps"):
+        TenantRegistry({"a": (0, 3), "b": (2, 4)})
+    with pytest.raises(ValueError, match="bad range"):
+        TenantRegistry({"a": (3, 3)})
+
+
+# ------------------------------------------------- evict/reload lifecycle
+
+def test_evict_then_reload_is_bit_exact():
+    forest, bank, session = _session(RANGES)
+    qa = _tenant_queries(forest, bank, 0, 2)
+    qb = _tenant_queries(forest, bank, 2, 4)
+    want_a, want_b = _answers(session, qa), _answers(session, qb)
+    assert want_a["hit"].all() and want_b["hit"].all()
+    session.maintain()          # absorb the baseline temperature bumps
+    img = _bank_image(bank)
+
+    cold = session.evict_tenant("acme")
+    assert isinstance(cold, ColdTenant)
+    assert (cold.lo, cold.hi) == (0, 2) and cold.arena_rows > 0
+    assert not session.tenants.resident("acme")
+    assert session.tenants.cold("acme") is cold and session.tenants.any_cold
+    # the victim's queries miss safely; the co-resident tenant is
+    # byte-identical to its pre-eviction answers
+    assert not _answers(session, qa)["hit"].any()
+    _assert_same(_answers(session, qb), want_b)
+    # the cold range is pinned: mutations reject at queue time, CSR
+    # compaction stays off bank-wide (cold heads reference live rows)
+    assert session.maint.pinned[0:2].all()
+    assert not session.maint.pinned[2:4].any()
+    with pytest.raises(ValueError, match="pinned"):
+        session.maint.queue_insert(0, "late", [1])
+    with pytest.raises(ValueError, match="pinned"):
+        session.maint.queue_delete(1, "late")
+    assert session.maint.maybe_compact() is False
+
+    session.reload_tenant("acme")
+    assert session.tenants.resident("acme")
+    assert not session.maint.pinned.any()
+    _assert_bank_equals(bank, img, victim=(0, 2))   # host: bit-exact
+    want = CFTDeviceState.from_bank(bank, forest)   # device: bit-exact
+    for n in ("fingerprints", "temperature", "heads", "bucket_offsets",
+              "tree_nb", "csr_offsets", "csr_nodes"):
+        np.testing.assert_array_equal(np.asarray(getattr(session.state, n)),
+                                      np.asarray(getattr(want, n)))
+    _assert_same(_answers(session, qa), want_a)
+    _assert_same(_answers(session, qb), want_b)
+    reg = get_registry()
+    assert reg.counter("tenant.evictions").value(tenant="acme") >= 1
+    assert reg.counter("tenant.reloads").value(tenant="acme") >= 1
+
+
+def test_evict_survives_pending_mutations_and_double_evict_raises():
+    forest, bank, session = _session(RANGES)
+    # queued work flushes through maintain() before the surgery, so the
+    # cold copy carries it and the round trip keeps it
+    session.maint.queue_insert(1, "pre-evict arrival", [1])
+    session.evict_tenant("acme")
+    with pytest.raises(ValueError, match="not resident"):
+        session.evict_tenant("acme")
+    session.reload_tenant("acme")
+    h = int(hashing.hash_entities(["pre-evict arrival"])[0])
+    assert _answers(session, ([1], [h]))["hit"].all()
+
+
+def test_offboard_then_onboard_round_trip():
+    forest, bank, session = _session(RANGES)
+    qb = _tenant_queries(forest, bank, 2, 4)
+    want_b = _answers(session, qb)
+    session.maintain()
+    img = _bank_image(bank)
+    cold = session.offboard_tenant("bravo")
+    assert not session.tenants.resident("bravo")
+    assert session.tenants.cold("bravo") is None    # registry dropped it
+    assert not _answers(session, qb)["hit"].any()
+    # the tree range stays allocated and empty; other tenants unaffected
+    qa = _tenant_queries(forest, bank, 0, 2)
+    assert _answers(session, qa)["hit"].all()
+    session.onboard_tenant("bravo", cold)
+    assert session.tenants.resident("bravo")
+    _assert_bank_equals(bank, img, victim=(2, 4))
+    _assert_same(_answers(session, qb), want_b)
+    with pytest.raises(ValueError, match="already resident"):
+        session.onboard_tenant("bravo", cold)
+
+
+# ------------------------------------------------------ tenant snapshots
+
+def test_tenant_snapshot_round_trip(tmp_path):
+    forest, bank, session = _session(RANGES)
+    qa = _tenant_queries(forest, bank, 0, 2)
+    want_a = _answers(session, qa)
+    cold = session.offboard_tenant("acme")
+    save_tenant(str(tmp_path), cold)
+    assert list_tenants(str(tmp_path)) == ["acme"]
+    loaded = load_tenant(str(tmp_path), "acme")
+    assert (loaded.name, loaded.lo, loaded.hi) == ("acme", 0, 2)
+    np.testing.assert_array_equal(loaded.tree_nb, cold.tree_nb)
+    np.testing.assert_array_equal(loaded.num_items, cold.num_items)
+    for n in _ARENA_TABLES:
+        np.testing.assert_array_equal(loaded.tables[n], cold.tables[n])
+    # onboarding from the restored copy serves the original answers
+    session.onboard_tenant("acme", loaded)
+    _assert_same(_answers(session, qa), want_a)
+    assert get_registry().counter("snapshot.tenants_saved").value(
+        tenant="acme") >= 1
+    with pytest.raises(FileNotFoundError):
+        load_tenant(str(tmp_path), "nobody")
+
+
+def test_cleanup_keeps_tenant_dirs(tmp_path):
+    forest, bank, session = _session(RANGES)
+    cold = session.offboard_tenant("acme")
+    save_tenant(str(tmp_path), cold)
+    os.makedirs(tmp_path / "tmp.tenant.ghost")
+    os.makedirs(tmp_path / "tmp.7")
+    from repro.core import cleanup_snapshots
+    cleanup_snapshots(str(tmp_path), keep_last=1)
+    assert list_tenants(str(tmp_path)) == ["acme"]   # survives the sweep
+    left = sorted(os.listdir(tmp_path))
+    assert not any(d.startswith("tmp.") for d in left)
+
+
+# -------------------------------------------- admission quotas + fairness
+
+def _quota_engine(session, now, **kw):
+    kw.setdefault("latency_budget", 0.5)
+    kw.setdefault("max_batch", 32)
+    kw.setdefault("min_bucket", 4)
+    kw.setdefault("maintenance", "off")
+    return AsyncServeEngine(session, clock=lambda: now[0], **kw)
+
+
+def test_per_tenant_quota_isolates_overload():
+    forest, bank, session = _session(RANGES, maint=False)
+    now = [0.0]
+    eng = _quota_engine(session, now, tenant_quota=2, max_queue_requests=16)
+    reg = get_registry()
+    before = reg.counter("serve.rejected").value(reason="overload",
+                                                 tenant="acme")
+    # the tenant resolves from the batch's trees — no explicit label
+    f1 = eng.submit([0], [0])
+    f2 = eng.submit([1], [0])
+    with pytest.raises(EngineOverloaded) as ei:
+        eng.submit([0], [0])
+    assert ei.value.tenant == "acme"
+    assert ei.value.pending == 2 and ei.value.limit == 2
+    assert reg.counter("serve.rejected").value(
+        reason="overload", tenant="acme") == before + 1
+    # acme's burst never touches bravo's share
+    f3 = eng.submit([2], [0])
+    eng.flush(now[0])
+    for f in (f1, f2, f3):
+        assert f.result(timeout=5).hit.shape[0] == 1
+    # queue drained -> acme admits again
+    eng.submit([0], [0])
+    eng.flush(now[0])
+    assert reg.counter("serve.tenant_queries").value(tenant="acme") >= 3
+    eng.stop()
+
+
+def test_default_quota_splits_global_bound():
+    forest, bank, session = _session(RANGES, maint=False)
+    now = [0.0]
+    # 8 requests / 2 tenants -> 4 each without any explicit quota
+    eng = _quota_engine(session, now, max_queue_requests=8)
+    assert eng._quota_for("acme") == 4
+    for _ in range(4):
+        eng.submit([0], [0])
+    with pytest.raises(EngineOverloaded) as ei:
+        eng.submit([1], [0])
+    assert ei.value.tenant == "acme" and ei.value.limit == 4
+    eng.submit([3], [0])                    # bravo still admits
+    eng.flush(now[0])
+    eng.stop()
+
+
+def test_evicted_tenant_sheds_with_tenant_evicted():
+    forest, bank, session = _session(RANGES)
+    now = [0.0]
+    eng = _quota_engine(session, now, maintenance="inline")
+    session.evict_tenant("acme")
+    with pytest.raises(TenantEvicted) as ei:
+        eng.submit([0], [0])
+    assert ei.value.tenant == "acme"
+    assert isinstance(ei.value, RuntimeError)
+    assert get_registry().counter("serve.rejected").value(
+        reason="evicted", tenant="acme") >= 1
+    f = eng.submit([2], [0])                # the resident tenant serves
+    eng.flush(now[0])
+    assert f.result(timeout=5).hit.shape[0] == 1
+    session.reload_tenant("acme")
+    f = eng.submit([0], [0])
+    eng.flush(now[0])
+    assert f.result(timeout=5).hit.shape[0] == 1
+    eng.stop()
+
+
+def test_pop_is_tenant_fair_round_robin():
+    mb = MicroBatcher(max_batch=4, min_bucket=2)
+
+    def req(tenant, tag):
+        return PendingRetrieval(tree_ids=[0], hashes=[tag], arrive_t=0.0,
+                                tenant=tenant)
+
+    # a monopolizing burst from one tenant, one late request from another
+    for i in range(5):
+        mb.add(req("acme", i))
+    mb.add(req("bravo", 100))
+    assert mb.pending_for("acme") == 5 and mb.pending_for("bravo") == 1
+    batch = mb.pop()
+    # round-robin: bravo rides the first batch despite arriving last;
+    # per-tenant FIFO order is preserved
+    assert [(r.tenant, r.hashes[0]) for r in batch] == \
+        [("acme", 0), ("bravo", 100), ("acme", 1), ("acme", 2)]
+    assert [(r.tenant, r.hashes[0]) for r in mb.pop()] == \
+        [("acme", 3), ("acme", 4)]
+    assert len(mb) == 0 and mb.pending_for("acme") == 0
+    # single-tenant queues keep the legacy FIFO-prefix behavior
+    for i in range(3):
+        mb.add(req(None, i))
+    assert [r.hashes[0] for r in mb.pop()] == [0, 1, 2]
+
+
+# ------------------------------------------------------------- pipeline
+
+class _Corpus:
+    trees = [[("root a", "child a1"), ("root a", "child a2")],
+             [("root b", "child b1")]]
+
+
+def test_rag_pipeline_wires_tenants():
+    rag = RAGPipeline(_Corpus(), engine=None, use_bank=True,
+                      tenants={"a": (0, 1), "b": (1, 2)})
+    assert isinstance(rag.tenants, TenantRegistry)
+    assert rag.session.tenants is rag.tenants
+    assert rag.session.coord.registry is rag.tenants
+    base = rag.answer("tell me about child b1").prompt
+    rag.session.evict_tenant("a")
+    assert rag.answer("tell me about child b1").prompt == base
+    rag.session.reload_tenant("a")
+    assert rag.answer("tell me about child a1").prompt
+
+
+def test_rag_pipeline_startup_sweeps_orphan_tmp(tmp_path):
+    """Satellite: a crash mid-snapshot leaves a ``tmp.*`` dir behind;
+    pipeline startup sweeps it even with pruning effectively off."""
+    orphan = tmp_path / "tmp.42"
+    os.makedirs(orphan)
+    (orphan / "junk.npy").write_bytes(b"\x00" * 16)
+    orphan2 = tmp_path / "tmp.tenant.ghost"
+    os.makedirs(orphan2)
+    rag = RAGPipeline(_Corpus(), engine=None, use_bank=True,
+                      snapshot_dir=str(tmp_path), snapshot_keep=0)
+    assert not orphan.exists() and not orphan2.exists()
+    assert rag.restored_step is None
+
+
+# ------------------------------------------------- tenant-aligned shards
+
+def test_plan_tenant_partition_never_splits_a_tenant():
+    reg = TenantRegistry({"a": (0, 3), "b": (3, 8)})
+    # heavily skewed weights would put the naive quantile cut inside b
+    w = np.asarray([1, 1, 1, 1, 1, 1, 50, 50], np.float64)
+    naive = plan_partition(w, 2)
+    assert 3 < int(naive[1]) < 8                     # would split b
+    starts = plan_tenant_partition(w, reg, 2)
+    assert starts[0] == 0 and starts[-1] == 8
+    cuts = set(int(s) for s in starts)
+    for name in reg.names:
+        lo, hi = reg.trees(name)
+        owner = {d for d in range(2)
+                 if max(lo, int(starts[d])) < min(hi, int(starts[d + 1]))}
+        assert len(owner) == 1, f"tenant {name} straddles shards"
+        assert all(not (lo < c < hi) for c in cuts)
+    # single-tree tenants leave every boundary available: the plan
+    # degrades to the plain weight-balanced planner
+    fine = TenantRegistry({f"t{i}": (i, i + 1) for i in range(8)})
+    np.testing.assert_array_equal(
+        plan_tenant_partition(np.ones(8), fine, 4),
+        plan_partition(np.ones(8), 4))
