@@ -42,12 +42,13 @@ GATED_METRICS: Dict[str, str] = {
     "healthy_goodput_ratio": "down",   # bench_tenant (healthy / clean)
     "victim_goodput_ratio": "down",    # bench_tenant (victim / clean)
     "bytes_fraction": "up",       # bench_ragged / bench_distributed
+    "fused_speedup": "down",      # bench_kernels (fused vs unfused)
 }
 
 # keys that identify a row's scenario — a mismatch means the bench's
 # shape changed and the baseline must be refreshed, not diffed
 IDENTITY_KEYS = ("layout", "trees", "devices", "batch", "hot_factor",
-                 "n_requests")
+                 "n_requests", "hit_rate")
 
 
 def _row_lists(payload: Dict) -> List[Tuple[str, List[Dict]]]:

@@ -139,9 +139,10 @@ def main() -> None:
                     r["db_max_pause_ms"] * 1e3, r["pause_reduction"]))
 
     print("\n== Kernel microbenchmarks (vs jnp oracle) ==")
-    for name, work, derived in bench_kernels.run():
-        print(f"  {name:34s} work~{work:10.1f}  derived {derived:.3e}")
-        csv.append((f"kernels/{name}", work, derived))
+    for r in bench_kernels.micro_rows():
+        print(f"  {r['name']:34s} work~{r['work']:10.1f}  "
+              f"derived {r['derived']:.3e}")
+        csv.append((f"kernels/{r['name']}", r["work"], r["derived"]))
 
     if not fast:
         rows = bench_serving.run()

@@ -23,7 +23,8 @@ from .snapshot import (RestoredSnapshot, SnapshotWriter,
                        load_tenant, merge_sharded_bank, restore_snapshot,
                        restore_state, save_snapshot, save_tenant)
 from .trag import (CFTRAG, CFTDeviceState, DeviceRetrieval, build_retriever,
-                   gather_context, retrieve_device)
+                   csr_window, finish_context, gather_context,
+                   retrieve_device)
 from .distributed import (ShardedBankState, plan_tenant_partition,
                           routing_counts, shard_bank, sharded_apply_delta,
                           sharded_lookup, sharded_lookup_bank,
@@ -49,6 +50,7 @@ __all__ = [
     "sharded_apply_delta", "sharded_lookup", "sharded_lookup_bank",
     "sharded_retrieve_device", "sharded_splice_segment",
     "shard_filter_tables", "stage_sharded_bank", "gather_context",
+    "csr_window", "finish_context",
     "BloomTRAG", "BloomTRAG2", "NaiveTRAG",
     "BlockListArena", "BlockListBuilder", "CSRArena", "build_csr",
     "EntityContext", "context_from_arena", "context_from_csr",

@@ -52,7 +52,8 @@ from . import hashing
 from .bank import FilterBank, ShardedBank, pad_csr
 from .lookup import LookupResult, lookup_arena, sort_buckets_arena
 from .tree import EntityForest
-from .trag import CFTDeviceState, DeviceRetrieval, gather_context
+from .trag import (CFTDeviceState, DeviceRetrieval, finish_context,
+                   gather_context)
 
 NULL = -1
 
@@ -98,6 +99,14 @@ def _route_back(x: jax.Array, dest: jax.Array, rank: jax.Array,
                 axis: str, num_shards: int) -> jax.Array:
     """Send per-slot probe results home and unscatter to query order."""
     recv = _exchange(x.reshape(num_shards, -1), axis)
+    return recv[dest, rank]
+
+
+def _route_back_wide(x: jax.Array, dest: jax.Array, rank: jax.Array,
+                     axis: str, num_shards: int) -> jax.Array:
+    """Route-back for per-query *row* payloads ``(D*C, W)`` — the fused
+    owner probe sends whole CSR location windows home, not scalars."""
+    recv = _exchange(x.reshape(num_shards, -1, x.shape[-1]), axis)
     return recv[dest, rank]
 
 
@@ -383,6 +392,82 @@ def _bank_local_fn(axis: str, num_shards: int, num_trees: int, slots: int,
     return local
 
 
+def _bank_local_fused_fn(axis: str, num_shards: int, num_trees: int,
+                         capacity: int, max_locs: int):
+    """Shard-local body for the *fused* owner probe: route -> one Pallas
+    launch (probe + temperature bump + CSR location window, from the
+    replicated CSR tables) on the owning shard -> route ``(hit,
+    locations)`` home.  The hierarchy walk stays on the source shard
+    (``finish_context`` over the replicated forest), so the route-back
+    payload grows only by ``max_locs`` ints per query."""
+    from ..kernels.cuckoo_lookup.ops import on_tpu
+    from ..kernels.fused_retrieve.ops import (context_resident_bytes,
+                                              fused_probe_locs,
+                                              fused_row_tile)
+
+    def local(fps_b, temp_b, heads_b, tree_shard, tree_off, tree_nb,
+              csr_offsets, csr_nodes, tid, h):
+        tq = jnp.clip(tid, 0, num_trees - 1)
+        valid = (tid >= 0) & (tid < num_trees)
+        dest = jnp.where(valid, tree_shard[tq], 0).astype(jnp.int32)
+        aoff = jnp.where(valid, tree_off[tq], 0).astype(jnp.int32)
+        msk = jnp.where(valid, (tree_nb[tq] - 1).astype(jnp.uint32),
+                        jnp.uint32(0))
+        rank, (bh, bo, bm, bv) = _bucket_queries(
+            dest, num_shards, capacity,
+            ((h.astype(jnp.uint32), jnp.uint32(0)),
+             (aoff, jnp.int32(0)), (msk, jnp.uint32(0)), (valid, False)))
+        qh = _exchange(bh, axis).reshape(-1)
+        qo = _exchange(bo, axis).reshape(-1)
+        qm = _exchange(bm, axis).reshape(-1)
+        qv = _exchange(bv, axis).reshape(-1)
+        interpret = not on_tpu()
+        a, s = fps_b.shape
+        rt = 0 if interpret else fused_row_tile(
+            a, context_resident_bytes(a, s, csr_offsets.shape[0] - 1,
+                                      csr_nodes.shape[0], 0, 0, True))
+        hit, locs, temp_b = fused_probe_locs(
+            fps_b, temp_b, heads_b, qo, qm, qv, qh, csr_offsets,
+            csr_nodes, max_locs=max_locs, interpret=interpret, row_tile=rt,
+            mxu=not interpret)
+        back = functools.partial(_route_back, dest=dest, rank=rank,
+                                 axis=axis, num_shards=num_shards)
+        locs_home = _route_back_wide(locs, dest, rank, axis, num_shards)
+        return back(hit), locs_home, temp_b
+
+    return local
+
+
+def _fused_lookup_core(state: ShardedBankState, tree_ids: jax.Array,
+                       h: jax.Array, capacity: Optional[int],
+                       max_locs: int
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sharded fused probe core: returns ``(hit, locations, temperature)``
+    with the CSR window already gathered on the owner shards."""
+    mesh, axis = state.mesh, state.axis
+    d = state.num_shards
+    b = h.shape[0]
+    pad = (-b) % d
+    bl = (b + pad) // d
+    cap = bl if capacity is None else min(capacity, bl)
+    tid = jnp.pad(tree_ids.astype(jnp.int32), (0, pad),
+                  constant_values=NULL)            # pad queries always miss
+    hp = jnp.pad(h.astype(jnp.uint32), (0, pad))
+    local = _bank_local_fused_fn(axis, d, state.num_trees, cap, max_locs)
+    spec_b = P(axis, None)
+    fn = _shard_map(
+        local, mesh=mesh,
+        in_specs=(spec_b, spec_b, spec_b, P(), P(), P(), P(), P(),
+                  P(axis), P(axis)),
+        out_specs=(P(axis), P(axis, None), spec_b),
+        check_rep=False)                   # pallas_call: no replication rule
+    hit, locs, temp = fn(state.fingerprints, state.temperature,
+                         state.heads, state.tree_shard, state.tree_offset,
+                         state.tree_nb, state.csr_offsets, state.csr_nodes,
+                         tid, hp)
+    return hit[:b], locs[:b], temp
+
+
 def _lookup_core(state: ShardedBankState, tree_ids: jax.Array,
                  h: jax.Array, bump: bool, lookup_fn,
                  capacity: Optional[int]
@@ -527,14 +612,21 @@ def sharded_lookup_bank(state: ShardedBankState, tree_ids: jax.Array,
 
 @functools.partial(jax.jit,
                    static_argnames=("max_locs", "n", "lookup_fn",
-                                    "capacity"))
+                                    "capacity", "fused"))
 def _sharded_retrieve_jit(state: ShardedBankState,
                           query_hashes: jax.Array,
                           query_trees: jax.Array,
                           max_locs: int = 4, n: int = 3,
                           lookup_fn=None,
-                          capacity: Optional[int] = None
+                          capacity: Optional[int] = None,
+                          fused: bool = False
                           ) -> DeviceRetrieval:
+    if fused:
+        hit, locs, temp = _fused_lookup_core(
+            state, query_trees, query_hashes, capacity=capacity,
+            max_locs=max_locs)
+        return finish_context(state, hit, locs, temp,
+                              max_locs=max_locs, n=n)
     res, temp = _lookup_core(state, query_trees, query_hashes, bump=True,
                              lookup_fn=lookup_fn, capacity=capacity)
     return gather_context(state, res, temp, max_locs=max_locs, n=n)
@@ -545,8 +637,8 @@ def sharded_retrieve_device(state: ShardedBankState,
                             query_trees: Optional[jax.Array] = None,
                             max_locs: int = 4, n: int = 3,
                             lookup_fn=None,
-                            capacity_factor: Optional[float] = None
-                            ) -> DeviceRetrieval:
+                            capacity_factor: Optional[float] = None,
+                            fused: bool = False) -> DeviceRetrieval:
     """Bank-axis sharded analogue of ``repro.core.retrieve_device``.
 
     The lookup routes through the all-to-all; temperature bumps land in
@@ -554,13 +646,24 @@ def sharded_retrieve_device(state: ShardedBankState,
     ``temperature`` keeps the sharded layout — thread it forward with
     ``state.with_temperature``); the CSR location gather and hierarchy
     windows run on the replicated arrays exactly as the replicated path.
+
+    ``fused=True`` fuses probe + temperature bump + CSR location gather
+    into one Pallas launch *on the owner shard* before the route-back
+    all-to-all (the replicated CSR tables make the owner-side gather
+    free of extra communication); only ``(hit, locations)`` travel home,
+    and the hierarchy walk finishes on the source shard.  Bit-identical
+    to the unfused path; mutually exclusive with ``lookup_fn``.
     """
+    if fused and lookup_fn is not None:
+        raise ValueError("fused=True embeds the probe; lookup_fn "
+                         "cannot be combined with it")
     if query_trees is None:
         query_trees = jnp.zeros(query_hashes.shape, jnp.int32)
     capacity = _pick_capacity(state, query_trees, capacity_factor)
     return _sharded_retrieve_jit(state, query_hashes, query_trees,
                                  max_locs=max_locs, n=n,
-                                 lookup_fn=lookup_fn, capacity=capacity)
+                                 lookup_fn=lookup_fn, capacity=capacity,
+                                 fused=fused)
 
 
 # ------------------------------------------- legacy single-filter wrappers

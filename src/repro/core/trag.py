@@ -202,7 +202,7 @@ class CFTDeviceState:
 def retrieve_device(state: CFTDeviceState, query_hashes: jax.Array,
                     query_trees: Optional[jax.Array] = None,
                     max_locs: int = 4, n: int = 3,
-                    lookup_fn=None) -> DeviceRetrieval:
+                    lookup_fn=None, fused: bool = False) -> DeviceRetrieval:
     """Batched CFT-RAG retrieval, jit-compatible end to end.
 
     Queries are ``(tree_id, hash)`` pairs; ``query_trees`` defaults to all
@@ -213,7 +213,24 @@ def retrieve_device(state: CFTDeviceState, query_hashes: jax.Array,
     arena — defaults to the pure-jnp :func:`repro.core.lookup.
     lookup_arena`; the serving engine passes the Pallas arena kernel
     wrapper (identical signature/semantics).
+
+    ``fused=True`` routes the whole step (probe + bump + CSR window +
+    hierarchy walks) through the single-pass
+    :mod:`repro.kernels.fused_retrieve` kernel instead — bit-identical
+    outputs, one launch.  Mutually exclusive with ``lookup_fn`` (the fused
+    kernel *is* the probe).
     """
+    if fused:
+        if lookup_fn is not None:
+            raise ValueError("fused=True embeds the probe; lookup_fn "
+                             "cannot be combined with it")
+        from ..kernels.fused_retrieve import fused_retrieve_state_auto
+        out = fused_retrieve_state_auto(state, query_hashes, query_trees,
+                                        max_locs=max_locs, n=n)
+        if out is not None:
+            return out
+        # resident blocks overflow the VMEM budget (huge arena on TPU):
+        # fall through to the unfused oracle path
     if lookup_fn is None:
         lookup_fn = lookup_arena
     if query_trees is None:
@@ -242,15 +259,44 @@ def gather_context(state, res: LookupResult, temperature: jax.Array,
     CSR rows, and ``temperature`` (whatever layout the lookup maintains) is
     threaded through untouched.
     """
-    eid = jnp.where(res.hit, res.head, 0)                    # (B,) CSR rows
-    lo = state.csr_offsets[eid]                              # (B,)
-    count = state.csr_offsets[eid + 1] - lo
+    nodes = csr_window(state.csr_offsets, state.csr_nodes,
+                       res.hit, res.head, max_locs)
+    return finish_context(state, res.hit, nodes, temperature,
+                          max_locs=max_locs, n=n)
+
+
+def csr_window(csr_offsets: jax.Array, csr_nodes: jax.Array,
+               hit: jax.Array, head: jax.Array,
+               max_locs: int) -> jax.Array:
+    """Per-query CSR location window ``(B, max_locs)``, NULL-padded.
+
+    Misses route to the *empty sentinel row* ``R = len(csr_offsets) - 1``:
+    the terminal offset is a valid row index whose window ``[terminal,
+    min(R+1, R)) = [terminal, terminal)`` is empty by construction, so a
+    low-hit-rate batch gathers nothing for its misses instead of pulling
+    CSR row 0's full window plus hierarchy walks and masking it after the
+    fact.  Bit-identical to the old clamp-to-0 form (the window mask
+    already ANDed with ``hit``); no pad row is required, so it holds for
+    both ``pad_csr``-staged and raw ``from_index`` states.
+    """
+    r = csr_offsets.shape[0] - 1
+    eid = jnp.where(hit, head, r)                            # (B,) CSR rows
+    lo = csr_offsets[eid]                                    # (B,)
+    count = csr_offsets[jnp.minimum(eid + 1, r)] - lo
     k = jnp.arange(max_locs, dtype=jnp.int32)                # (max_locs,)
     idx = lo[:, None] + k[None, :]
-    valid = (k[None, :] < count[:, None]) & res.hit[:, None]
-    safe = jnp.clip(idx, 0, state.csr_nodes.shape[0] - 1)
-    nodes = jnp.where(valid, state.csr_nodes[safe], NULL)    # (B, max_locs)
+    valid = (k[None, :] < count[:, None]) & hit[:, None]
+    safe = jnp.clip(idx, 0, csr_nodes.shape[0] - 1)
+    return jnp.where(valid, csr_nodes[safe], NULL)           # (B, max_locs)
 
+
+def finish_context(state, hit: jax.Array, nodes: jax.Array,
+                   temperature: jax.Array, max_locs: int = 4,
+                   n: int = 3) -> DeviceRetrieval:
+    """Hierarchy windows for an already-gathered location window — the
+    forest-walk tail shared by :func:`gather_context` and the sharded
+    owner-fused path (which routes ``(hit, locations)`` back through the
+    all-to-all and walks the replicated forest locally)."""
     flat = nodes.reshape(-1)
     up = gather_hierarchy(state.parent, state.entity_id,
                           jnp.maximum(flat, 0), n)
@@ -258,9 +304,9 @@ def gather_context(state, res: LookupResult, temperature: jax.Array,
     down = gather_descendants(state.child_offsets, state.child_index,
                               state.entity_id, jnp.maximum(flat, 0), n)
     down = jnp.where(flat[:, None] == NULL, NULL, down)
-    B = res.hit.shape[0]
+    B = hit.shape[0]
     return DeviceRetrieval(
-        hit=res.hit, locations=nodes,
+        hit=hit, locations=nodes,
         up=up.reshape(B, max_locs, n), down=down.reshape(B, max_locs, n),
         temperature=temperature)
 

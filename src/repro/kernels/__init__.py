@@ -8,7 +8,8 @@ Each kernel lives in its own subpackage with the mandated trio:
 On this CPU container kernels execute under ``interpret=True``; model code
 selects kernel vs. reference implementation via config (TPU -> kernel).
 """
-from . import cuckoo_lookup, decode_attention, flash_attention, linear_scan
+from . import (cuckoo_lookup, decode_attention, flash_attention,
+               fused_retrieve, linear_scan, vmem)
 
 __all__ = ["cuckoo_lookup", "decode_attention", "flash_attention",
-           "linear_scan"]
+           "fused_retrieve", "linear_scan", "vmem"]

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.lookup import LookupResult
+from .. import vmem
 from .kernel import (TILE, cuckoo_lookup_arena_pallas,
                      cuckoo_lookup_bank_pallas, cuckoo_lookup_pallas,
                      cuckoo_lookup_ragged_pallas)
@@ -49,29 +50,73 @@ def cuckoo_lookup_auto(fingerprints, heads, h) -> LookupResult:
 
 # Past SINGLE_BLOCK_MAX_ROWS flat bucket rows the bank/arena kernels tile
 # the row axis so the VMEM-resident working set stays bounded instead of
-# growing with the bank.  The bound is derived from an explicit VMEM
-# budget rather than guessed: per grid step the kernel keeps
+# growing with the bank.  The budget derivation lives in
+# ``repro.kernels.vmem`` (shared with the fused retrieval kernel): half of
+# a 16 MiB core for the streamed tiles, per-row cost from the documented
+# closed form — 4 * (4*S + 2*TILE) bytes: fp+head blocks, their (rows, 2S)
+# concat, and two (TILE, rows) one-hot gather operands.
 #
-#   fp + head table blocks          2 * rows * S * 4   bytes (f32)
-#   their (rows, 2S) concat             rows * 2S * 4
-#   two one-hot gather operands     2 * TILE * rows * 4
-#
-# i.e. 4 * (4*S + 2*TILE) bytes per row; query/output vectors are O(TILE)
-# and ignored.  The budget is half of a conservative 16 MiB per-core
-# VMEM, leaving headroom for Pallas double-buffering of the streamed
-# table blocks.
-LOOKUP_VMEM_BUDGET = 8 * 1024 * 1024
-
-
+# SINGLE_BLOCK_MAX_ROWS is the *closed-form* cap and is resolved at
+# import (the tiling threshold must not compile kernels, and the jitted
+# wrappers auto-pick tiles at trace time where lowering a second kernel is
+# off limits).  The non-traced ``*_auto`` serving entries refine the tile
+# *size* with the measured derivation — ``memory_analysis()`` on the
+# compiled probe, lazily, once — which typically roughly doubles the tile
+# (XLA fuses the concat and one-hots, so the true slope is about half the
+# closed form).
 def max_rows_for_vmem(slots: int = 4, tile: int = TILE,
-                      budget: int = LOOKUP_VMEM_BUDGET) -> int:
-    """Largest per-step row-tile (a TILE multiple) fitting the documented
-    VMEM budget for the one-hot-matmul lookup working set."""
-    per_row = 4 * (4 * slots + 2 * tile)
-    return max(tile, budget // per_row // tile * tile)
+                      budget: int = 0) -> int:
+    """Largest per-step row-tile (a TILE multiple) fitting the VMEM budget
+    for the one-hot-matmul lookup working set (closed form; pass a budget
+    to override the shared default)."""
+    bd = vmem.VmemBudget(
+        budget or int(vmem.DEFAULT_VMEM_BYTES * vmem.BUDGET_FRACTION),
+        vmem.closed_form_row_bytes(slots, tile), "closed_form")
+    return vmem.max_rows_for_vmem(bd, tile)
 
 
 SINGLE_BLOCK_MAX_ROWS = max_rows_for_vmem()
+
+
+def _probe_lower(rows: int):
+    """Lower the single-block arena probe at ``rows`` arena rows — the
+    measurement target for the shared VMEM derivation."""
+    s = 4
+    h = jnp.zeros((TILE,), jnp.uint32)
+    off = jnp.zeros((TILE,), jnp.int32)
+    mask = jnp.zeros((TILE,), jnp.uint32)
+    fp = jnp.zeros((rows, s), jnp.float32)
+    hd = jnp.zeros((rows, s), jnp.float32)
+    fn = jax.jit(functools.partial(cuckoo_lookup_arena_pallas,
+                                   interpret=not on_tpu(), row_tile=0))
+    return fn.lower(h, off, mask, fp, hd)
+
+
+def lookup_vmem_budget() -> "vmem.VmemBudget":
+    """The arena kernels' VMEM budget: measured per-row slope where the
+    backend exposes compiled memory stats, documented closed form else.
+    Cached after the first call (one probe compile)."""
+    return vmem.derive_budget(slots=4, tile=TILE, measure=_probe_lower)
+
+
+_measured_max_rows: int = 0
+
+
+def _max_rows() -> int:
+    """Measured-budget row cap for the auto entries, derived lazily."""
+    global _measured_max_rows
+    if not _measured_max_rows:
+        _measured_max_rows = vmem.max_rows_for_vmem(lookup_vmem_budget(),
+                                                    TILE)
+    return _measured_max_rows
+
+
+def _auto_row_tile(a: int) -> int:
+    """Row tile for the non-traced auto entries: single block below the
+    closed-form threshold, measured-budget tiles above it."""
+    if a <= SINGLE_BLOCK_MAX_ROWS:
+        return 0
+    return min(_max_rows(), (a + TILE - 1) // TILE * TILE)
 
 
 def _pick_tree_tile(t: int, nb: int) -> int:
@@ -166,9 +211,11 @@ def cuckoo_lookup_arena_auto(fingerprints, heads, row_offsets, masks, h
                              ) -> LookupResult:
     """Kernel on TPU, interpret elsewhere — serving's ragged-arena entry
     (the ``lookup_fn`` shape ``retrieve_device`` and the sharded probe
-    consume)."""
+    consume).  Tile size refined by the measured VMEM budget."""
     return cuckoo_lookup_arena(fingerprints, heads, row_offsets, masks, h,
-                               interpret=not on_tpu())
+                               interpret=not on_tpu(),
+                               row_tile=_auto_row_tile(
+                                   fingerprints.shape[0]))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "row_tile"))
@@ -209,10 +256,13 @@ def cuckoo_lookup_ragged(fingerprints: jax.Array, heads: jax.Array,
 
 def cuckoo_lookup_ragged_auto(fingerprints, heads, bucket_offsets, tree_nb,
                               tree_ids, h) -> LookupResult:
-    """Kernel on TPU, interpret elsewhere — tree-routed ragged entry."""
+    """Kernel on TPU, interpret elsewhere — tree-routed ragged entry.
+    Tile size refined by the measured VMEM budget."""
     return cuckoo_lookup_ragged(fingerprints, heads, bucket_offsets,
                                 tree_nb, tree_ids, h,
-                                interpret=not on_tpu())
+                                interpret=not on_tpu(),
+                                row_tile=_auto_row_tile(
+                                    fingerprints.shape[0]))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

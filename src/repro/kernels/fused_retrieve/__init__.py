@@ -1,0 +1,14 @@
+from .kernel import (TILE, fused_retrieve_pallas, fused_retrieve_ragged_pallas)
+from .ops import (fused_probe_locs, fused_retrieve_arena,
+                  fused_retrieve_arena_auto, fused_retrieve_ragged,
+                  fused_retrieve_state_auto, fused_row_tile,
+                  fused_vmem_budget, stage_context_tables)
+from .ref import (fused_retrieve_ref, gather_descendants_unrolled,
+                  gather_hierarchy_unrolled)
+
+__all__ = ["TILE", "fused_retrieve_pallas", "fused_retrieve_ragged_pallas",
+           "fused_retrieve_arena", "fused_retrieve_arena_auto",
+           "fused_retrieve_ragged", "fused_retrieve_state_auto",
+           "fused_probe_locs", "fused_row_tile", "fused_vmem_budget",
+           "stage_context_tables", "fused_retrieve_ref",
+           "gather_hierarchy_unrolled", "gather_descendants_unrolled"]

@@ -1,0 +1,377 @@
+"""Pallas TPU kernel: fused CFT-RAG retrieval — one pass from query hash to
+context rows.
+
+Dataflow per query tile (TILE=128 lanes), all stages on-chip:
+
+    hash -> arena probe (shared ``_arena_probe`` accumulators, arena rows
+    streamed in ``row_tile`` blocks over the inner grid axis, double-
+    buffered by the Pallas pipeline) -> temperature bump -> CSR location
+    window (sentinel-row miss routing) -> ancestor / descendant hierarchy
+    windows (static ``n``-step unrolled walks)
+
+No ``(B,)``-shaped intermediate (hit/head/bucket/slot) ever round-trips
+HBM: the probe accumulators live in the output blocks, and the context
+tail consumes them in-register on the *last* arena tile, when the
+cross-tile priority merge has settled.  The CSR/forest tables and the
+temperature table ride as whole VMEM blocks with constant index maps
+(resident for the launch, consecutively revisited — the budget in
+``ops.fused_row_tile`` accounts for them).
+
+Two static gather strategies (``mxu``):
+  * ``mxu=True``  — one-hot matmul gathers on the MXU (TPU; exact in f32
+    for values < 2^24, which the wrapper asserts from the table shapes).
+  * ``mxu=False`` — direct clipped vector gathers (interpret mode, where
+    one-hot matmuls would lower to giant dense XLA ops).
+Both produce bit-identical results; tests pin them against each other and
+against the unfused oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:                      # TPU grid specs (scalar prefetch); optional on
+    from jax.experimental.pallas import tpu as pltpu   # CPU-only installs
+except ImportError:       # pragma: no cover - depends on the jax build
+    pltpu = None
+
+from ..cuckoo_lookup.kernel import TILE, _arena_probe
+
+NULL = -1
+_HIGHEST = jax.lax.Precision.HIGHEST
+
+
+def _gather_rows(tab, idx, gate, mxu):
+    """Gather rows of ``tab`` (R, C) f32 at ``idx`` (TILE,) int32; lanes
+    with ``gate`` False yield zero rows (callers re-mask with their own
+    sentinel).  mxu: one-hot matmul; else clipped direct indexing."""
+    rows = tab.shape[0]
+    if mxu:
+        it = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], rows), 1)
+        oh = ((it == idx[:, None]) & gate[:, None]).astype(jnp.float32)
+        return jax.lax.dot(oh, tab, precision=_HIGHEST)
+    safe = jnp.clip(idx, 0, rows - 1)
+    return jnp.where(gate[:, None], tab[safe], jnp.float32(0))
+
+
+def _up_walk(nodes, pe_tab, n, mxu):
+    """Ancestor window (TILE, n) — mirrors ``gather_hierarchy_unrolled``
+    on the packed (N, 2) [parent | entity_id] table."""
+    cur = nodes
+    outs = []
+    for _ in range(n):
+        g = cur != NULL
+        prow = _gather_rows(pe_tab, jnp.maximum(cur, 0), g, mxu)
+        p = jnp.where(g, prow[:, 0].astype(jnp.int32), NULL)
+        g2 = p != NULL
+        erow = _gather_rows(pe_tab, jnp.maximum(p, 0), g2, mxu)
+        outs.append(jnp.where(g2, erow[:, 1].astype(jnp.int32), NULL))
+        cur = p
+    return jnp.stack(outs, axis=1)
+
+
+def _down_walk(nodes, child_lc_tab, child_index_tab, pe_tab, n, mxu):
+    """Descendant window (TILE, n) — mirrors
+    ``gather_descendants_unrolled`` on packed tables: child_lc (N, 2)
+    [child_lo | child_count], child_index (C, 1), entity ids from the
+    (N, 2) parent/entity table's second column."""
+    ci = child_index_tab.shape[0]
+    buf = jnp.full((TILE, n), NULL, jnp.int32)
+    w = jnp.zeros((TILE,), jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (TILE, n), 1)
+
+    def push(buf, w, src):
+        g = src != NULL
+        lc = _gather_rows(child_lc_tab, jnp.maximum(src, 0), g, mxu)
+        lo = lc[:, 0].astype(jnp.int32)
+        hi = lo + lc[:, 1].astype(jnp.int32)
+        for k in range(n):
+            idx = lo + k
+            valid = g & (idx < hi) & (w < n)
+            crow = _gather_rows(child_index_tab, jnp.minimum(idx, ci - 1),
+                                valid, mxu)
+            c = jnp.where(valid, crow[:, 0].astype(jnp.int32), NULL)
+            oh = (lane == jnp.minimum(w, n - 1)[:, None]) & valid[:, None]
+            buf = jnp.where(oh, c[:, None], buf)
+            w = jnp.where(valid, w + 1, w)
+        return buf, w
+
+    buf, w = push(buf, w, nodes)
+    out = jnp.full((TILE, n), NULL, jnp.int32)
+    for i in range(n):
+        cur = buf[:, i]
+        valid = (i < w) & (cur != NULL)
+        erow = _gather_rows(pe_tab, jnp.maximum(cur, 0), valid, mxu)
+        out = out.at[:, i].set(
+            jnp.where(valid, erow[:, 1].astype(jnp.int32), out[:, i]))
+        buf, w = push(buf, w, jnp.where(valid, cur, NULL))
+    return out
+
+
+def _context_tail(qoff, valid, csr_lc_ref, csr_nodes_ref, parent_eid_ref,
+                  child_lc_ref, child_index_ref, hit_ref, head_ref,
+                  bucket_ref, slot_ref, loc_ref, up_ref, down_ref,
+                  temp_in_ref, temp_ref, qi, *, slots, max_locs, n, mxu,
+                  locs_only):
+    """Consume the settled probe accumulators: bump temperature, gather the
+    CSR window, walk the hierarchy — all from VMEM-resident tables."""
+    vhit = (hit_ref[...] > 0) & valid               # = unfused hit&in_range
+    hit_ref[...] = vhit.astype(jnp.int32)           # the emitted hit
+    bucket = bucket_ref[...]
+    slot = slot_ref[...]
+
+    @pl.when(qi == 0)
+    def _init_temp():
+        temp_ref[...] = temp_in_ref[...]
+
+    arena_rows = temp_ref.shape[0]
+    rows = qoff + bucket                            # always < arena_rows
+    if mxu:
+        it = jax.lax.broadcasted_iota(jnp.int32, (TILE, arena_rows), 1)
+        rows_oh = ((it == rows[:, None]) &
+                   vhit[:, None]).astype(jnp.float32)
+        st = jax.lax.broadcasted_iota(jnp.int32, (TILE, slots), 1)
+        slot_oh = (st == slot[:, None]).astype(jnp.float32)
+        contrib = jax.lax.dot_general(                     # (A, S) counts
+            rows_oh, slot_oh, (((0,), (0,)), ((), ())), precision=_HIGHEST)
+        temp_ref[...] += contrib.astype(temp_ref.dtype)
+    else:
+        t = temp_ref[...]
+        temp_ref[...] = t.at[jnp.clip(rows, 0, arena_rows - 1),
+                             slot].add(vhit.astype(t.dtype))
+
+    # CSR location window; misses route to the empty sentinel row R
+    r_sent = csr_lc_ref.shape[0] - 1
+    eid = jnp.where(vhit, head_ref[...], r_sent)
+    lc = _gather_rows(csr_lc_ref[...], eid, vhit, mxu)
+    lo = lc[:, 0].astype(jnp.int32)
+    count = lc[:, 1].astype(jnp.int32)
+    csr_nodes = csr_nodes_ref[...]
+    node_cols = []
+    for k in range(max_locs):
+        idx = lo + k
+        validk = (k < count) & vhit
+        nrow = _gather_rows(csr_nodes, jnp.clip(idx, 0,
+                                                csr_nodes.shape[0] - 1),
+                            validk, mxu)
+        node_cols.append(jnp.where(validk, nrow[:, 0].astype(jnp.int32),
+                                   NULL))
+    loc_ref[...] = jnp.stack(node_cols, axis=1)
+    if locs_only:
+        return
+
+    pe_tab = parent_eid_ref[...]
+    child_lc = child_lc_ref[...]
+    child_index = child_index_ref[...]
+    up_cols, down_cols = [], []
+    for k in range(max_locs):
+        node_k = node_cols[k]
+        src = jnp.maximum(node_k, 0)
+        upk = _up_walk(src, pe_tab, n, mxu)
+        up_cols.append(jnp.where(node_k[:, None] == NULL, NULL, upk))
+        downk = _down_walk(src, child_lc, child_index, pe_tab, n, mxu)
+        down_cols.append(jnp.where(node_k[:, None] == NULL, NULL, downk))
+    up_ref[...] = jnp.concatenate(up_cols, axis=1)
+    down_ref[...] = jnp.concatenate(down_cols, axis=1)
+
+
+def _split_out_refs(refs, locs_only):
+    """(hit, head, bucket, slot, prio, loc[, up, down], temp) — the
+    locs_only variant (sharded owner probe) omits the hierarchy blocks."""
+    if locs_only:
+        hit, head, bucket, slot, prio, loc, temp = refs
+        return hit, head, bucket, slot, prio, loc, None, None, temp
+    return refs
+
+
+def _fused_kernel(h_ref, off_ref, mask_ref, valid_ref, fp_tab_ref,
+                  head_tab_ref, temp_in_ref, csr_lc_ref, csr_nodes_ref,
+                  parent_eid_ref, child_lc_ref, child_index_ref,
+                  *out_refs, slots, row_tile, num_tiles, max_locs, n, mxu,
+                  locs_only):
+    """Pre-routed fused kernel: probe every arena tile, run the context
+    tail once the last tile's priority merge has settled."""
+    (hit_ref, head_ref, bucket_ref, slot_ref, prio_ref, loc_ref, up_ref,
+     down_ref, temp_ref) = _split_out_refs(out_refs, locs_only)
+    qi = pl.program_id(0)
+    ti = pl.program_id(1)
+    h = h_ref[...].astype(jnp.uint32)
+    qoff = off_ref[...].astype(jnp.int32)
+    qmask = mask_ref[...].astype(jnp.uint32)
+    _arena_probe(h, qoff, qmask, ti, fp_tab_ref, head_tab_ref, hit_ref,
+                 head_ref, bucket_ref, slot_ref, prio_ref, slots=slots,
+                 row_tile=row_tile)
+
+    @pl.when(ti == num_tiles - 1)
+    def _tail():
+        _context_tail(qoff, valid_ref[...] > 0, csr_lc_ref, csr_nodes_ref,
+                      parent_eid_ref, child_lc_ref, child_index_ref,
+                      hit_ref, head_ref, bucket_ref, slot_ref, loc_ref,
+                      up_ref, down_ref, temp_in_ref, temp_ref, qi,
+                      slots=slots, max_locs=max_locs, n=n, mxu=mxu,
+                      locs_only=locs_only)
+
+
+def _fused_kernel_sp(off_ref, nb_ref, tid_ref, h_ref, valid_ref,
+                     fp_tab_ref, head_tab_ref, temp_in_ref, csr_lc_ref,
+                     csr_nodes_ref, parent_eid_ref, child_lc_ref,
+                     child_index_ref, *out_refs, slots, row_tile,
+                     num_tiles, num_trees, max_locs, n, mxu, locs_only):
+    """Tree-routed fused kernel: ``bucket_offsets``/``tree_nb`` ride as
+    SMEM scalar-prefetch operands (PR 5's routing tables) and the
+    per-lane (offset, mask) gather happens in-kernel — then the shared
+    probe + context tail."""
+    (hit_ref, head_ref, bucket_ref, slot_ref, prio_ref, loc_ref, up_ref,
+     down_ref, temp_ref) = _split_out_refs(out_refs, locs_only)
+    qi = pl.program_id(0)
+    ti = pl.program_id(1)
+    h = h_ref[...].astype(jnp.uint32)
+    tid = tid_ref[...].astype(jnp.int32)                    # clamped valid
+    offs = off_ref[...].astype(jnp.int32)                   # (T + 1,) SMEM
+    nbs = nb_ref[...].astype(jnp.int32)                     # (T,) SMEM
+    t_iota = jax.lax.broadcasted_iota(jnp.int32, (TILE, num_trees), 1)
+    sel = t_iota == tid[:, None]
+    qoff = jnp.sum(jnp.where(sel, offs[None, :num_trees], 0), axis=1)
+    qnb = jnp.sum(jnp.where(sel, nbs[None, :], 0), axis=1)
+    qmask = (qnb - 1).astype(jnp.uint32)
+    _arena_probe(h, qoff, qmask, ti, fp_tab_ref, head_tab_ref, hit_ref,
+                 head_ref, bucket_ref, slot_ref, prio_ref, slots=slots,
+                 row_tile=row_tile)
+
+    @pl.when(ti == num_tiles - 1)
+    def _tail():
+        _context_tail(qoff, valid_ref[...] > 0, csr_lc_ref, csr_nodes_ref,
+                      parent_eid_ref, child_lc_ref, child_index_ref,
+                      hit_ref, head_ref, bucket_ref, slot_ref, loc_ref,
+                      up_ref, down_ref, temp_in_ref, temp_ref, qi,
+                      slots=slots, max_locs=max_locs, n=n, mxu=mxu,
+                      locs_only=locs_only)
+
+
+def _out_shapes(b, arena_rows, slots, temp_dtype, max_locs, n, locs_only):
+    shapes = [jax.ShapeDtypeStruct((b,), jnp.int32) for _ in range(5)]
+    shapes.append(jax.ShapeDtypeStruct((b, max_locs), jnp.int32))
+    if not locs_only:
+        shapes.append(jax.ShapeDtypeStruct((b, max_locs * n), jnp.int32))
+        shapes.append(jax.ShapeDtypeStruct((b, max_locs * n), jnp.int32))
+    shapes.append(jax.ShapeDtypeStruct((arena_rows, slots), temp_dtype))
+    return shapes
+
+
+def _out_specs(qspec, wide, tempspec, max_locs, n, locs_only):
+    specs = [qspec] * 5 + [wide(max_locs)]
+    if not locs_only:
+        specs += [wide(max_locs * n), wide(max_locs * n)]
+    return specs + [tempspec]
+
+
+def fused_retrieve_pallas(h, row_offsets, masks, valid, fp_table_f32,
+                          head_table_f32, temperature, csr_lc, csr_nodes,
+                          parent_eid, child_lc, child_index,
+                          max_locs: int = 4, n: int = 3,
+                          interpret: bool = True, row_tile: int = 0,
+                          mxu: bool = False, locs_only: bool = False):
+    """Pre-routed fused retrieval.  h/row_offsets/masks/valid: (B,) with
+    B % TILE == 0; fp/head tables (A, S) f32 (A a multiple of row_tile
+    when tiling); temperature (A, S); context tables packed by
+    ``ops.stage_context_tables``.  Returns (hit, head, bucket, slot, prio,
+    locations[, up, down], temperature) — the wrapper drops the probe
+    internals."""
+    rows_total, slots = fp_table_f32.shape
+    b = h.shape[0]
+    rt = rows_total if row_tile <= 0 else row_tile
+    assert rows_total % rt == 0, \
+        "pad the arena to a multiple of row_tile before calling"
+    nt = rows_total // rt
+    grid = (b // TILE, nt)                     # arena axis innermost
+    qspec = pl.BlockSpec((TILE,), lambda qi, ti: (qi,))
+    tabspec = pl.BlockSpec((rt, slots), lambda qi, ti: (ti, 0))
+
+    def wide(w):
+        return pl.BlockSpec((TILE, w), lambda qi, ti: (qi, 0))
+
+    def const(arr):
+        return pl.BlockSpec(arr.shape, lambda qi, ti: (0,) * arr.ndim)
+
+    outs = pl.pallas_call(
+        functools.partial(_fused_kernel, slots=slots, row_tile=rt,
+                          num_tiles=nt, max_locs=max_locs, n=n, mxu=mxu,
+                          locs_only=locs_only),
+        grid=grid,
+        in_specs=[qspec, qspec, qspec, qspec, tabspec, tabspec,
+                  const(temperature), const(csr_lc), const(csr_nodes),
+                  const(parent_eid), const(child_lc), const(child_index)],
+        out_specs=_out_specs(qspec, wide, const(temperature), max_locs, n,
+                             locs_only),
+        out_shape=_out_shapes(b, rows_total, slots, temperature.dtype,
+                              max_locs, n, locs_only),
+        interpret=interpret,
+    )(h, row_offsets, masks, valid, fp_table_f32, head_table_f32,
+      temperature, csr_lc, csr_nodes, parent_eid, child_lc, child_index)
+    return outs
+
+
+def fused_retrieve_ragged_pallas(h, tree_ids, valid, bucket_offsets,
+                                 tree_nb, fp_table_f32, head_table_f32,
+                                 temperature, csr_lc, csr_nodes,
+                                 parent_eid, child_lc, child_index,
+                                 max_locs: int = 4, n: int = 3,
+                                 interpret: bool = True, row_tile: int = 0,
+                                 mxu: bool = False,
+                                 locs_only: bool = False):
+    """Tree-routed fused retrieval with SMEM scalar-prefetched routing
+    tables (tree_ids pre-clamped to [0, T-1], ``valid`` carrying the
+    in-range mask).  Falls back to the pre-routed kernel when the jax
+    build exposes no TPU grid-spec module."""
+    if pltpu is None:                      # pragma: no cover - build-dep
+        off = bucket_offsets[tree_ids]
+        mask = (tree_nb[tree_ids] - 1).astype(jnp.uint32)
+        return fused_retrieve_pallas(
+            h, off, mask, valid, fp_table_f32, head_table_f32, temperature,
+            csr_lc, csr_nodes, parent_eid, child_lc, child_index,
+            max_locs=max_locs, n=n, interpret=interpret, row_tile=row_tile,
+            mxu=mxu, locs_only=locs_only)
+    rows_total, slots = fp_table_f32.shape
+    b = h.shape[0]
+    rt = rows_total if row_tile <= 0 else row_tile
+    assert rows_total % rt == 0, \
+        "pad the arena to a multiple of row_tile before calling"
+    nt = rows_total // rt
+    num_trees = tree_nb.shape[0]
+    grid = (b // TILE, nt)                     # arena axis innermost
+    # index maps receive the scalar-prefetch refs after the grid indices
+    qspec = pl.BlockSpec((TILE,), lambda qi, ti, off, nb: (qi,))
+    tabspec = pl.BlockSpec((rt, slots), lambda qi, ti, off, nb: (ti, 0))
+
+    def wide(w):
+        return pl.BlockSpec((TILE, w), lambda qi, ti, off, nb: (qi, 0))
+
+    def const(arr):
+        return pl.BlockSpec(arr.shape,
+                            lambda qi, ti, off, nb: (0,) * arr.ndim)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[qspec, qspec, qspec, tabspec, tabspec,
+                  const(temperature), const(csr_lc), const(csr_nodes),
+                  const(parent_eid), const(child_lc), const(child_index)],
+        out_specs=_out_specs(qspec, wide, const(temperature), max_locs, n,
+                             locs_only),
+    )
+    outs = pl.pallas_call(
+        functools.partial(_fused_kernel_sp, slots=slots, row_tile=rt,
+                          num_tiles=nt, num_trees=num_trees,
+                          max_locs=max_locs, n=n, mxu=mxu,
+                          locs_only=locs_only),
+        grid_spec=grid_spec,
+        out_shape=_out_shapes(b, rows_total, slots, temperature.dtype,
+                              max_locs, n, locs_only),
+        interpret=interpret,
+    )(bucket_offsets.astype(jnp.int32), tree_nb.astype(jnp.int32),
+      tree_ids, h, valid, fp_table_f32, head_table_f32, temperature,
+      csr_lc, csr_nodes, parent_eid, child_lc, child_index)
+    return outs

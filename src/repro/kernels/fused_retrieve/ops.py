@@ -1,0 +1,293 @@
+"""Public jit'd wrappers for the fused retrieval kernel.
+
+Handles: query padding to the TILE multiple, f32 staging of the arena and
+the packed CSR/forest context tables, arena-row padding for tiled grids,
+VMEM-budget tile selection (shared derivation with ``cuckoo_lookup``), the
+interpret/mxu switch off the backend, and repackaging into
+``core.trag.DeviceRetrieval``.  Observability (``serve.fused_batches``,
+``kernel.tile_rows``) is emitted from the non-traced auto entries so the
+counters tick per call, not per trace.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.trag import NULL, DeviceRetrieval
+from ...obs import get_registry
+from .. import vmem
+from ..cuckoo_lookup.kernel import TILE
+from ..cuckoo_lookup.ops import lookup_vmem_budget, on_tpu, stage_tables
+from .kernel import fused_retrieve_pallas, fused_retrieve_ragged_pallas
+
+#: One-hot matmul gathers are exact in f32 only below this value bound;
+#: wrappers assert every table dimension (node/CSR/arena counts) under it.
+F32_EXACT_MAX = 1 << 24
+
+
+def stage_context_tables(csr_offsets, csr_nodes, parent, entity_id,
+                         child_offsets, child_index
+                         ) -> Tuple[jax.Array, ...]:
+    """Pack the CSR/forest tables into the kernel's f32 gather layout:
+
+    csr_lc      (R+1, 2)  [row start | row count], final row the empty
+                          miss sentinel [terminal, 0]
+    csr_nodes   (L, 1)
+    parent_eid  (N, 2)    [parent node | entity id]
+    child_lc    (N, 2)    [children start | child count]
+    child_index (C, 1)
+    """
+    lo = csr_offsets[:-1]
+    cnt = csr_offsets[1:] - lo
+    csr_lc = jnp.stack(
+        [jnp.concatenate([lo, csr_offsets[-1:]]),
+         jnp.concatenate([cnt, jnp.zeros((1,), cnt.dtype)])],
+        axis=1).astype(jnp.float32)
+    nodes2 = csr_nodes.astype(jnp.float32)[:, None]
+    if nodes2.shape[0] == 0:
+        nodes2 = jnp.zeros((1, 1), jnp.float32)
+    parent_eid = jnp.stack([parent, entity_id], axis=1).astype(jnp.float32)
+    child_lc = jnp.stack(
+        [child_offsets[:-1], child_offsets[1:] - child_offsets[:-1]],
+        axis=1).astype(jnp.float32)
+    cidx2 = child_index.astype(jnp.float32)[:, None]
+    if cidx2.shape[0] == 0:
+        cidx2 = jnp.zeros((1, 1), jnp.float32)
+    return csr_lc, nodes2, parent_eid, child_lc, cidx2
+
+
+def _check_f32_exact(*dims: int) -> None:
+    for d in dims:
+        if d >= F32_EXACT_MAX:
+            raise ValueError(
+                f"table dimension {d} >= 2^24 breaks f32-exact one-hot "
+                "gathers; shard the bank (core.distributed) first")
+
+
+def fused_vmem_budget() -> vmem.VmemBudget:
+    """The fused kernel shares the probe's measured VMEM derivation."""
+    return lookup_vmem_budget()
+
+
+def context_resident_bytes(arena_rows: int, slots: int, num_csr_rows: int,
+                           num_csr_nodes: int, num_nodes: int,
+                           num_children: int, mxu: bool) -> int:
+    """VMEM pinned for the whole launch: temperature in+out blocks, the
+    packed context tables, and (mxu) the (TILE, A) bump one-hot."""
+    resident = 2 * arena_rows * slots * 4          # temperature in + out
+    resident += (num_csr_rows + 1) * 2 * 4         # csr_lc (+ sentinel)
+    resident += max(num_csr_nodes, 1) * 4
+    resident += num_nodes * 4 * 4                  # parent_eid + child_lc
+    resident += max(num_children, 1) * 4
+    if mxu:
+        resident += TILE * arena_rows * 4          # bump one-hot operand
+    return resident
+
+
+def fused_supported(arena_rows: int, slots: int, resident_bytes: int,
+                    mxu: bool) -> bool:
+    """Whether the fused kernel's resident working set fits the budget.
+    Interpret mode has no VMEM constraint; on TPU, arenas whose resident
+    blocks (temperature + context tables + bump one-hot) overflow the
+    budget fall back to the unfused oracle path."""
+    if not mxu:
+        return True
+    budget = fused_vmem_budget()
+    return resident_bytes + TILE * budget.per_row_bytes \
+        <= budget.budget_bytes
+
+
+def fused_row_tile(arena_rows: int, resident_bytes: int) -> int:
+    """0 = whole arena as one block; else the probe-tile row count (TILE
+    multiple) fitting the measured budget after the resident blocks."""
+    budget = fused_vmem_budget()
+    cap = vmem.max_rows_for_vmem(budget, TILE, resident_bytes)
+    return 0 if arena_rows <= cap else cap
+
+
+def _pad_queries(b, *arrs):
+    pad = (-b) % TILE
+    return [jnp.pad(a, (0, pad)) for a in arrs]
+
+
+def _pad_arena(row_tile, *tables):
+    if row_tile <= 0:
+        return tables
+    a = tables[0].shape[0]
+    row_pad = (-a) % row_tile
+    return [jnp.pad(t, ((0, row_pad), (0, 0))) for t in tables]
+
+
+def _repack(outs, b, a, max_locs, n) -> DeviceRetrieval:
+    hit, _head, _bucket, _slot, _prio, loc, up, down, temp = outs
+    return DeviceRetrieval(
+        hit=hit[:b].astype(jnp.bool_), locations=loc[:b],
+        up=up[:b].reshape(b, max_locs, n),
+        down=down[:b].reshape(b, max_locs, n),
+        temperature=temp[:a])
+
+
+@functools.partial(jax.jit, static_argnames=("max_locs", "n", "interpret",
+                                             "row_tile", "mxu"))
+def fused_retrieve_arena(fingerprints, temperature, heads, row_offsets,
+                         masks, valid, h, csr_offsets, csr_nodes, parent,
+                         entity_id, child_offsets, child_index,
+                         max_locs: int = 4, n: int = 3,
+                         interpret: bool = True, row_tile: int = 0,
+                         mxu: bool = False) -> DeviceRetrieval:
+    """Pre-routed fused retrieval: per-query (segment start, bucket mask)
+    pairs as in ``core.lookup.lookup_arena``, plus a ``valid`` admission
+    mask (the unfused path's ``in_range``).  Returns a full
+    ``DeviceRetrieval`` from one kernel launch."""
+    a, s = fingerprints.shape
+    _check_f32_exact(a, csr_offsets.shape[0], csr_nodes.shape[0],
+                     parent.shape[0], child_index.shape[0])
+    b = h.shape[0]
+    hp, op, mp, vp = _pad_queries(
+        b, h.astype(jnp.uint32), row_offsets.astype(jnp.int32),
+        masks.astype(jnp.uint32), valid.astype(jnp.int32))
+    fp32, hd32 = stage_tables(fingerprints, heads)
+    fp32, hd32, temp = _pad_arena(row_tile, fp32, hd32, temperature)
+    ctx = stage_context_tables(csr_offsets, csr_nodes, parent, entity_id,
+                               child_offsets, child_index)
+    outs = fused_retrieve_pallas(
+        hp, op, mp, vp, fp32, hd32, temp, *ctx, max_locs=max_locs, n=n,
+        interpret=interpret, row_tile=row_tile, mxu=mxu)
+    return _repack(outs, b, a, max_locs, n)
+
+
+@functools.partial(jax.jit, static_argnames=("max_locs", "n", "interpret",
+                                             "row_tile", "mxu"))
+def fused_retrieve_ragged(fingerprints, temperature, heads, bucket_offsets,
+                          tree_nb, tree_ids, h, csr_offsets, csr_nodes,
+                          parent, entity_id, child_offsets, child_index,
+                          max_locs: int = 4, n: int = 3,
+                          interpret: bool = True, row_tile: int = 0,
+                          mxu: bool = False) -> DeviceRetrieval:
+    """Tree-routed fused retrieval — the ``retrieve_device(fused=True)``
+    entry.  Out-of-range tree ids miss (clamped for the gather, masked via
+    ``valid``), exactly as the unfused path's ``in_range`` handling."""
+    a, s = fingerprints.shape
+    num_trees = tree_nb.shape[0]
+    _check_f32_exact(a, csr_offsets.shape[0], csr_nodes.shape[0],
+                     parent.shape[0], child_index.shape[0])
+    b = h.shape[0]
+    in_range = (tree_ids >= 0) & (tree_ids < num_trees)
+    tp = jnp.where(in_range, tree_ids, 0).astype(jnp.int32)
+    hp, tpp, vp = _pad_queries(b, h.astype(jnp.uint32), tp,
+                               in_range.astype(jnp.int32))
+    fp32, hd32 = stage_tables(fingerprints, heads)
+    fp32, hd32, temp = _pad_arena(row_tile, fp32, hd32, temperature)
+    ctx = stage_context_tables(csr_offsets, csr_nodes, parent, entity_id,
+                               child_offsets, child_index)
+    outs = fused_retrieve_ragged_pallas(
+        hp, tpp, vp, bucket_offsets, tree_nb, fp32, hd32, temp, *ctx,
+        max_locs=max_locs, n=n, interpret=interpret, row_tile=row_tile,
+        mxu=mxu)
+    return _repack(outs, b, a, max_locs, n)
+
+
+@functools.partial(jax.jit, static_argnames=("max_locs", "interpret",
+                                             "row_tile", "mxu"))
+def fused_probe_locs(fingerprints, temperature, heads, row_offsets, masks,
+                     valid, h, csr_offsets, csr_nodes, max_locs: int = 4,
+                     interpret: bool = True, row_tile: int = 0,
+                     mxu: bool = False):
+    """Owner-shard fusion: probe + temperature bump + CSR location window
+    in one launch, no hierarchy tail (the forest walk runs on the source
+    shard after the route-back all-to-all).  Returns ``(hit (B,) bool,
+    locations (B, max_locs) int32, temperature (A, S))``."""
+    a, s = fingerprints.shape
+    _check_f32_exact(a, csr_offsets.shape[0], csr_nodes.shape[0])
+    b = h.shape[0]
+    hp, op, mp, vp = _pad_queries(
+        b, h.astype(jnp.uint32), row_offsets.astype(jnp.int32),
+        masks.astype(jnp.uint32), valid.astype(jnp.int32))
+    fp32, hd32 = stage_tables(fingerprints, heads)
+    fp32, hd32, temp = _pad_arena(row_tile, fp32, hd32, temperature)
+    dummy = jnp.zeros((1,), jnp.int32)
+    csr_lc, nodes2, pe, clc, cidx = stage_context_tables(
+        csr_offsets, csr_nodes, dummy, dummy,
+        jnp.zeros((2,), jnp.int32), dummy)
+    hit, _head, _bucket, _slot, _prio, loc, tout = fused_retrieve_pallas(
+        hp, op, mp, vp, fp32, hd32, temp, csr_lc, nodes2, pe, clc, cidx,
+        max_locs=max_locs, n=1, interpret=interpret, row_tile=row_tile,
+        mxu=mxu, locs_only=True)
+    return hit[:b].astype(jnp.bool_), loc[:b], tout[:a]
+
+
+def _emit_obs(row_tile: int) -> None:
+    reg = get_registry()
+    reg.counter("serve.fused_batches",
+                "batches served by the fused retrieval kernel").inc()
+    reg.gauge("kernel.tile_rows",
+              "arena rows per fused-kernel grid step (0 = single block)"
+              ).set(row_tile)
+
+
+@functools.lru_cache(maxsize=256)
+def _auto_plan(arena_rows: int, slots: int, num_csr_rows: int,
+               num_csr_nodes: int, num_nodes: int, num_children: int
+               ) -> Optional[Tuple[bool, bool, int]]:
+    """Per-geometry launch plan (interpret, mxu, row_tile) — None when
+    the resident working set overflows the TPU VMEM budget.  Cached so
+    the hot serving path pays the derivation once per table geometry."""
+    interpret = not on_tpu()
+    mxu = not interpret
+    resident = context_resident_bytes(arena_rows, slots, num_csr_rows,
+                                      num_csr_nodes, num_nodes,
+                                      num_children, mxu)
+    if not fused_supported(arena_rows, slots, resident, mxu):
+        return None                                # pragma: no cover - TPU
+    rt = 0 if interpret else fused_row_tile(arena_rows, resident)
+    return interpret, mxu, rt
+
+
+def fused_retrieve_state_auto(state, query_hashes, query_trees=None,
+                              max_locs: int = 4, n: int = 3
+                              ) -> Optional[DeviceRetrieval]:
+    """Backend-aware fused entry over a ``CFTDeviceState``: kernel with
+    MXU one-hot gathers on TPU, interpret + direct gathers elsewhere.
+    Returns None when the fused resident working set cannot fit the VMEM
+    budget (huge arenas on TPU) — the caller falls back to the unfused
+    oracle."""
+    if query_trees is None:
+        query_trees = jnp.zeros(query_hashes.shape, jnp.int32)
+    a, s = state.fingerprints.shape
+    plan = _auto_plan(a, s, state.csr_offsets.shape[0] - 1,
+                      state.csr_nodes.shape[0], state.parent.shape[0],
+                      state.child_index.shape[0])
+    if plan is None:                               # pragma: no cover - TPU
+        return None
+    interpret, mxu, rt = plan
+    _emit_obs(rt)
+    return fused_retrieve_ragged(
+        state.fingerprints, state.temperature, state.heads,
+        state.bucket_offsets, state.tree_nb, query_trees, query_hashes,
+        state.csr_offsets, state.csr_nodes, state.parent, state.entity_id,
+        state.child_offsets, state.child_index, max_locs=max_locs, n=n,
+        interpret=interpret, row_tile=rt, mxu=mxu)
+
+
+def fused_retrieve_arena_auto(fingerprints, temperature, heads,
+                              row_offsets, masks, valid, h, csr_offsets,
+                              csr_nodes, parent, entity_id, child_offsets,
+                              child_index, max_locs: int = 4, n: int = 3
+                              ) -> DeviceRetrieval:
+    """Backend-aware pre-routed fused entry (tests / direct callers)."""
+    interpret = not on_tpu()
+    mxu = not interpret
+    a, s = fingerprints.shape
+    resident = context_resident_bytes(
+        a, s, csr_offsets.shape[0] - 1, csr_nodes.shape[0],
+        parent.shape[0], child_index.shape[0], mxu)
+    rt = 0 if interpret else fused_row_tile(a, resident)
+    _emit_obs(rt)
+    return fused_retrieve_arena(
+        fingerprints, temperature, heads, row_offsets, masks, valid, h,
+        csr_offsets, csr_nodes, parent, entity_id, child_offsets,
+        child_index, max_locs=max_locs, n=n, interpret=interpret,
+        row_tile=rt, mxu=mxu)

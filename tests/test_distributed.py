@@ -735,3 +735,53 @@ def test_sharded_tenant_evict_reload_bit_exact():
         np.testing.assert_array_equal(post[f], base[f], err_msg=f)
     print("sharded tenant evict/reload OK")
     """, devices=4)
+
+
+def test_sharded_fused_owner_probe_byte_equality():
+    """The fused owner-shard probe (probe + bump + CSR window in one
+    Pallas launch before the route-back) is byte-identical to the unfused
+    sharded path — hit/locations/hierarchy and the *sharded-layout*
+    temperature, across rounds and both capacity modes."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import build_forest, build_bank, stage_sharded_bank
+    from repro.core.distributed import sharded_retrieve_device
+    from repro.core import hashing
+
+    T, D = 32, 8
+    trees = [[(f"r{t}", f"e{t}_{i}") for i in range(4 + (t % 5) * 3)]
+             for t in range(T)]
+    for t in range(0, T, 4):                       # deepen a few trees
+        trees[t] += [(f"e{t}_0", f"e{t}_c{j}") for j in range(5)]
+    forest = build_forest(trees)
+    bank = build_bank(forest)
+    sbank = bank.shard(D)
+    mesh = jax.make_mesh((D,), ("model",))
+    rng = np.random.default_rng(1)
+    qt = [t for t in range(T) for _ in range(3)] + \\
+         [int(rng.integers(T)) for _ in range(15)] + [-3, T + 9]
+    qh = [int(hashing.entity_hash(f"e{t}_{k}"))
+          for t in range(T) for k in (0, 1, 2)] + \\
+         [int(rng.integers(1, 2 ** 32)) for _ in range(17)]
+    qt = jnp.asarray(np.asarray(qt, np.int32))
+    qh = jnp.asarray(np.asarray(qh, np.uint32))
+
+    for cf in (None, 0.5):
+        s_ref = stage_sharded_bank(sbank, forest, mesh, "model")
+        s_fus = stage_sharded_bank(sbank, forest, mesh, "model")
+        for rnd in range(3):
+            ref = sharded_retrieve_device(s_ref, qh, qt,
+                                          capacity_factor=cf)
+            got = sharded_retrieve_device(s_fus, qh, qt,
+                                          capacity_factor=cf, fused=True)
+            for f in ("hit", "locations", "up", "down", "temperature"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(ref, f)),
+                    np.asarray(getattr(got, f)),
+                    err_msg=f"{f} cf={cf} round={rnd}")
+            s_ref = s_ref.with_temperature(ref.temperature)
+            s_fus = s_fus.with_temperature(got.temperature)
+    assert np.asarray(ref.hit)[:3 * T].all()
+    assert not np.asarray(ref.hit)[-2:].any()      # out-of-range ids miss
+    print("sharded fused owner probe OK")
+    """)
